@@ -1,0 +1,92 @@
+"""Kernel micro-benchmarks: interpret-mode correctness deltas vs oracle +
+arithmetic-intensity table per kernel/block shape (the structural numbers
+a TPU run would validate wall-clock against)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import (flash_attention_op, flash_decode_op,
+                               mamba2_scan_op, mlstm_op)
+
+
+def _ai_attention(bq, bk, hd):
+    """flash tile: flops vs VMEM bytes (f32 accum)."""
+    flops = 2 * bq * bk * hd * 2
+    vmem = 4 * (bq * hd * 2 + bk * hd * 2 + bq * bk)
+    return flops / vmem
+
+
+def run(report):
+    rows = []
+    # flash attention
+    B, H, S, hd = 1, 2, 512, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+    want = ref.attention_ref(q, k, v)
+    for bq, bk in [(128, 128), (128, 256), (256, 256)]:
+        out = flash_attention_op(q, k, v, block_q=bq, block_k=bk,
+                                 interpret=True)
+        err = float(jnp.max(jnp.abs(out - want)))
+        vmem_kb = 4 * (bq * hd * 2 + bk * hd * 2 + bq * bk) / 1024
+        rows.append({"kernel": "flash_attention", "block": f"{bq}x{bk}",
+                     "max_err": f"{err:.2e}",
+                     "tile_vmem_kb": round(vmem_kb, 1),
+                     "arith_intensity": round(_ai_attention(bq, bk, hd),
+                                              1)})
+    # flash decode
+    W = 2048
+    q1 = jax.random.normal(ks[0], (2, 4, 64), jnp.float32)
+    k1 = jax.random.normal(ks[1], (2, 2, W, 64), jnp.float32)
+    v1 = jax.random.normal(ks[2], (2, 2, W, 64), jnp.float32)
+    valid = jnp.ones((2, W), jnp.int32)
+    for bk in (256, 512):
+        out = flash_decode_op(q1, k1, v1, valid, block_k=bk,
+                              interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref.decode_ref(q1, k1, v1,
+                                                         valid))))
+        rows.append({"kernel": "flash_decode", "block": f"1x{bk}",
+                     "max_err": f"{err:.2e}",
+                     "tile_vmem_kb": round(4 * (bk * 64 * 2) / 1024, 1),
+                     "arith_intensity": round(2 * bk * 64 * 2 /
+                                              (4 * bk * 64 * 2), 2)})
+    # mamba2
+    x = jax.random.normal(ks[0], (1, 2, 512, 64), jnp.float32)
+    Bm = jax.random.normal(ks[1], (1, 512, 64), jnp.float32) * 0.5
+    Cm = jax.random.normal(ks[2], (1, 512, 64), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (1, 2, 512)))
+    a = jnp.exp(-jax.nn.softplus(jax.random.normal(ks[1], (1, 2, 512))))
+    want = ref.mamba2_ref(x, Bm, Cm, a, dt)
+    for chunk in (128, 256):
+        out = mamba2_scan_op(x, Bm, Cm, a, dt, chunk=chunk, interpret=True)
+        err = float(jnp.max(jnp.abs(out - want)))
+        rows.append({"kernel": "mamba2_scan", "block": f"c={chunk}",
+                     "max_err": f"{err:.2e}",
+                     "tile_vmem_kb": round(4 * (chunk * chunk
+                                                + 2 * chunk * 64
+                                                + 64 * 64) / 1024, 1),
+                     "arith_intensity": "-"})
+    # mlstm
+    qm = jax.random.normal(ks[0], (1, 2, 512, 64), jnp.float32)
+    km = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32) / 8
+    vm = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    li = jax.random.normal(ks[0], (1, 2, 512)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[1], (1, 2, 512)) + 2)
+    want = ref.mlstm_ref(qm, km, vm, li, lf)
+    for chunk in (128, 256):
+        out = mlstm_op(qm, km, vm, li, lf, chunk=chunk, interpret=True)
+        err = float(jnp.max(jnp.abs(out - want)))
+        rows.append({"kernel": "mlstm_chunkwise", "block": f"c={chunk}",
+                     "max_err": f"{err:.2e}",
+                     "tile_vmem_kb": round(4 * (chunk * chunk
+                                                + 3 * chunk * 64
+                                                + 64 * 64) / 1024, 1),
+                     "arith_intensity": "-"})
+    report.table("Pallas kernels: interpret-mode error vs oracle + VMEM "
+                 "tile budgets", rows,
+                 note="tile_vmem_kb is the per-core working set implied by "
+                      "the BlockSpecs; v5e VMEM budget ~128KB/core x 8.")

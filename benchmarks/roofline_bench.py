@@ -1,0 +1,83 @@
+"""Roofline summary table from the dry-run sweeps (reads results/*.jsonl
+written by launch/dryrun.py; prints the per-cell three-term table that
+EXPERIMENTS.md §Roofline embeds)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt(x, nd=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-4 or abs(x) >= 1e5:
+        return f"{x:.1e}"
+    return f"{x:.{nd}f}"
+
+
+def load_rows(paths):
+    rows = []
+    seen = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for line in open(p):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            seen[key] = r       # later files override (fix reruns)
+    return list(seen.values())
+
+
+def run(report):
+    rows_in = load_rows(sorted(glob.glob("results/dryrun_*.jsonl")))
+    if not rows_in:
+        report.table("roofline (no dry-run results found — run "
+                     "launch/dryrun.py first)", [])
+        return
+    from repro.configs import SHAPES_BY_NAME
+    from repro.launch.mesh import HW
+    from repro.models.registry import get_config
+    from repro.roofline.analytical import analytic_terms
+
+    out = []
+    for r in sorted(rows_in, key=lambda r: (r["mesh"], r["arch"],
+                                            r["shape"])):
+        if r["status"] != "ok":
+            out.append({"mesh": r["mesh"], "arch": r["arch"],
+                        "shape": r["shape"], "status": r["status"],
+                        "bottleneck": r.get("why", r.get("error", ""))[:40],
+                        "t_comp_ms": "-", "t_mem_ms": "-", "t_coll_ms": "-",
+                        "hlo_frac": "-", "useful_flops_ratio": "-",
+                        "tpu_step_ms": "-", "tpu_bneck": "-",
+                        "tpu_mfu": "-"})
+            continue
+        rl = r["roofline"]
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        cfg = get_config(r["arch"])
+        an = analytic_terms(cfg, SHAPES_BY_NAME[r["shape"]], HW, chips)
+        out.append({
+            "mesh": r["mesh"], "arch": r["arch"], "shape": r["shape"],
+            "status": "ok", "bottleneck": rl["bottleneck"],
+            "t_comp_ms": _fmt(rl["t_compute"] * 1e3),
+            "t_mem_ms": _fmt(rl["t_memory"] * 1e3),
+            "t_coll_ms": _fmt(rl["t_collective"] * 1e3),
+            "hlo_frac": _fmt(r.get("roofline_fraction"), 3),
+            "useful_flops_ratio": _fmt(r.get("model_flops_ratio"), 3),
+            "tpu_step_ms": _fmt(an["step_time"] * 1e3),
+            "tpu_bneck": an["bottleneck"],
+            "tpu_mfu": _fmt(an["mfu"], 3),
+        })
+    report.table("roofline terms per (mesh x arch x shape) from the "
+                 "dry-run sweeps", out,
+                 note="t_* = trip-count-corrected HLO-parse terms (ms, "
+                      "TPU v5e constants: 197 TF/s bf16, 819 GB/s HBM, "
+                      "50 GB/s ICI); hlo_frac = MODEL_FLOPS/(chips x peak "
+                      "x max term); useful_flops_ratio = MODEL_FLOPS/"
+                      "HLO_FLOPS; tpu_* = analytical kernelized-path "
+                      "projection (roofline/analytical.py)")

@@ -1,0 +1,80 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    # collective_bench checks schedule equivalence on 8 host devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Benchmark runner: one table per paper claim.
+
+  PYTHONPATH=src python -m benchmarks.run [--only complexity,...]
+"""
+import argparse
+import csv
+import json
+import sys
+import time
+
+
+class Report:
+    def __init__(self, outdir="results/bench"):
+        self.outdir = outdir
+        os.makedirs(outdir, exist_ok=True)
+        self.n = 0
+
+    def table(self, title, rows, note=None):
+        self.n += 1
+        print(f"\n== [{self.n}] {title} ==")
+        if not rows:
+            print("  (empty)")
+            return
+        cols = list(rows[0])
+        widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+                  for c in cols}
+        print("  " + "  ".join(str(c).ljust(widths[c]) for c in cols))
+        for r in rows:
+            print("  " + "  ".join(str(r.get(c, "")).ljust(widths[c])
+                                   for c in cols))
+        if note:
+            print(f"  -> {note}")
+        slug = "".join(ch if ch.isalnum() else "_" for ch in title)[:60]
+        with open(os.path.join(self.outdir, f"{self.n:02d}_{slug}.csv"),
+                  "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=cols)
+            w.writeheader()
+            w.writerows(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: complexity,modelcheck,collective,"
+                         "kernel,roofline")
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (collective_bench, complexity_bench,
+                            kernel_bench, modelcheck_bench, roofline_bench)
+    benches = {
+        "complexity": complexity_bench,
+        "modelcheck": modelcheck_bench,
+        "collective": collective_bench,
+        "kernel": kernel_bench,
+        "roofline": roofline_bench,
+    }
+    rep = Report()
+    t0 = time.time()
+    for name, mod in benches.items():
+        if want and name not in want:
+            continue
+        print(f"\n#### {name} " + "#" * 50)
+        try:
+            mod.run(rep)
+        except Exception as e:  # noqa: BLE001
+            print(f"  !! {name} failed: {type(e).__name__}: {e}")
+            raise
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s; CSVs in "
+          f"{rep.outdir}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

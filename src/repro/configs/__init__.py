@@ -1,0 +1,16 @@
+"""Architecture configs (one module per assigned arch) + shape sets.
+
+Arch modules are loaded lazily (configs/archs.py) to avoid a circular
+import with models.registry; ``repro.models.registry.get_config`` triggers
+the load."""
+from .base import (SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig,
+                   cell_applicable)
+
+ALL_ARCHS = (
+    "llava-next-34b", "whisper-small", "xlstm-125m", "zamba2-7b",
+    "qwen2-72b", "granite-3-2b", "qwen2.5-3b", "smollm-135m",
+    "llama4-scout-17b-a16e", "mixtral-8x7b",
+)
+
+__all__ = ["ALL_ARCHS", "SHAPES", "SHAPES_BY_NAME", "ModelConfig",
+           "ShapeConfig", "cell_applicable"]

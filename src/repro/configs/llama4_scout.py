@@ -1,0 +1,17 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]. The early-fusion VLM
+aspect is stubbed to the text backbone per the assignment."""
+from ..models.registry import register
+from .base import ModelConfig
+
+
+@register("llama4-scout-17b-a16e")
+def llama4_scout() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e", family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+        d_ff=8192, vocab_size=202048,
+        n_experts=16, top_k=1,
+        rope_theta=5e5,
+    )

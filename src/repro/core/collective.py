@@ -1,0 +1,323 @@
+"""Phaser topologies compiled to static TPU collective schedules.
+
+The data-plane adaptation of the paper (DESIGN.md §2): the SCSL/SNSL signal
+flow becomes a *static schedule* of ``lax.ppermute`` rounds executed inside
+``shard_map`` over a mesh axis. Three interchangeable gradient-sync
+schedules:
+
+* ``phaser_scsl``        — the paper-faithful topology: reduce up the SCSL
+                           signal edges to the head, then diffuse down the
+                           SNSL (broadcast). Single-port model: every device
+                           receives at most one message per round, exactly
+                           like the protocol's FIFO channels.
+* ``recursive_doubling`` — the paper's *creation* exchange [2] reused as an
+                           all-reduce: log2(n) XOR-partner rounds.
+* ``halving_doubling``   — beyond-paper bandwidth-optimal variant:
+                           recursive-halving reduce-scatter + recursive-
+                           doubling all-gather (2·(n-1)/n data volume).
+* ``xla_psum``           — XLA's native all-reduce (baseline).
+
+Schedules are derived once (host side, from the deterministic skip-list
+oracle) and are traced into the compiled step; topology changes (elastic
+add/delete) swap the schedule at the next re-lower — the "lazy" phase of the
+paper's two-phase structural protocol.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .skiplist import HEAD, SkipList
+
+
+# ---------------------------------------------------------------------------
+# Schedule derivation (host side, pure Python).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Schedule:
+    """A sequence of ppermute rounds. ``rounds[r]`` = tuple of (src, dst)
+    pairs, each a partial permutation (distinct srcs, distinct dsts)."""
+
+    n: int
+    rounds: Tuple[Tuple[Tuple[int, int], ...], ...]
+    kind: str = "generic"
+
+    @property
+    def depth(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def messages(self) -> int:
+        return sum(len(r) for r in self.rounds)
+
+    def check(self) -> None:
+        for r in self.rounds:
+            srcs = [s for s, _ in r]
+            dsts = [d for _, d in r]
+            assert len(set(srcs)) == len(srcs), f"src collision in {r}"
+            assert len(set(dsts)) == len(dsts), f"dst collision in {r}"
+            assert all(0 <= s < self.n and 0 <= d < self.n
+                       for s, d in r)
+
+
+def _fold_head(sl: SkipList) -> Tuple[Dict[int, int], int]:
+    """Map the virtual HEAD onto the lowest participant key (the designated
+    head-signaler of the paper is a real task in the data plane)."""
+    keys = sl.keys()
+    assert keys, "empty topology"
+    root = keys[0]
+    parent = {}
+    for k in keys:
+        p = sl.parent(k)
+        if k == root:
+            continue
+        parent[k] = root if p == HEAD else p
+    return parent, root
+
+
+def scsl_reduce_schedule(sl: SkipList, ranks: Sequence[int]) -> Schedule:
+    """Single-port greedy schedule for the SCSL reduction (children before
+    parent; one receive per device per round)."""
+    parent, root = _fold_head(sl)
+    rank_of = {k: i for i, k in enumerate(ranks)}
+    children: Dict[int, List[int]] = {k: [] for k in list(parent) + [root]}
+    for c, p in parent.items():
+        children.setdefault(p, []).append(c)
+    # critical-path weight: height of subtree below each node
+    weight: Dict[int, int] = {}
+
+    def w(k: int) -> int:
+        if k not in weight:
+            weight[k] = 1 + max((w(c) for c in children.get(k, [])),
+                                default=0)
+        return weight[k]
+
+    for k in children:
+        w(k)
+
+    unsent = set(parent)                      # root never sends
+    done_round: Dict[int, int] = {}           # node -> round it sent in
+    rounds: List[Tuple[Tuple[int, int], ...]] = []
+    r = 0
+    while unsent:
+        eligible: Dict[int, List[int]] = {}
+        for k in unsent:
+            if all(c in done_round and done_round[c] < r
+                   for c in children.get(k, [])):
+                eligible.setdefault(parent[k], []).append(k)
+        this_round: List[Tuple[int, int]] = []
+        for p, cands in eligible.items():
+            # heaviest subtree first: keeps the critical path moving
+            k = max(cands, key=lambda c: (weight[c], -c))
+            this_round.append((rank_of[k], rank_of[p]))
+            done_round[k] = r
+            unsent.discard(k)
+        assert this_round, "schedule stalled (cycle in signal edges?)"
+        rounds.append(tuple(sorted(this_round)))
+        r += 1
+    sched = Schedule(len(ranks), tuple(rounds), kind="scsl_reduce")
+    sched.check()
+    return sched
+
+
+def snsl_broadcast_schedule(sl: SkipList, ranks: Sequence[int]) -> Schedule:
+    """Broadcast from the head down the notification edges (reverse SCSL
+    edge direction; single-port: one send per holder per round)."""
+    parent, root = _fold_head(sl)
+    rank_of = {k: i for i, k in enumerate(ranks)}
+    children: Dict[int, List[int]] = {}
+    for c, p in parent.items():
+        children.setdefault(p, []).append(c)
+    # deeper subtrees notified first
+    weight: Dict[int, int] = {}
+
+    def w(k: int) -> int:
+        if k not in weight:
+            weight[k] = 1 + max((w(c) for c in children.get(k, [])),
+                                default=0)
+        return weight[k]
+
+    have = {root}
+    todo = set(parent)
+    rounds: List[Tuple[Tuple[int, int], ...]] = []
+    while todo:
+        this_round: List[Tuple[int, int]] = []
+        used_senders = set()
+        for h in sorted(have):
+            if h in used_senders:
+                continue
+            cands = [c for c in children.get(h, []) if c in todo]
+            if not cands:
+                continue
+            c = max(cands, key=lambda x: (w(x), -x))
+            this_round.append((rank_of[h], rank_of[c]))
+            used_senders.add(h)
+            todo.discard(c)
+        assert this_round, "broadcast stalled"
+        have |= {ranks[d] for _, d in this_round}
+        rounds.append(tuple(sorted(this_round)))
+    sched = Schedule(len(ranks), tuple(rounds), kind="snsl_broadcast")
+    sched.check()
+    return sched
+
+
+def recursive_doubling_schedule(n: int) -> Schedule:
+    """log2(n) XOR-exchange rounds (the paper's creation algorithm [2] as an
+    all-reduce). Requires power-of-two n (mesh axes always are)."""
+    assert n & (n - 1) == 0, f"recursive doubling needs power-of-2 n, got {n}"
+    rounds = []
+    r = 0
+    while (1 << r) < n:
+        stride = 1 << r
+        rounds.append(tuple(sorted((i, i ^ stride) for i in range(n))))
+        r += 1
+    sched = Schedule(n, tuple(rounds), kind="recursive_doubling")
+    sched.check()
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# JAX executors (run inside shard_map over ``axis_name``).
+# ---------------------------------------------------------------------------
+def _dst_mask(n: int, round_pairs: Sequence[Tuple[int, int]]):
+    m = np.zeros((n,), dtype=np.bool_)
+    for _, d in round_pairs:
+        m[d] = True
+    return m
+
+
+def scsl_allreduce(x: jax.Array, axis_name: str, up: Schedule,
+                   down: Schedule) -> jax.Array:
+    """All-reduce(+) along ``axis_name`` with the phaser SCSL/SNSL schedules:
+    reduce up the signal-collection edges, broadcast down the notification
+    edges. Correct for any x dtype supporting +."""
+    n = up.n
+    idx = lax.axis_index(axis_name)
+    acc = x
+    for pairs in up.rounds:
+        recv = jnp.asarray(_dst_mask(n, pairs))[idx]
+        y = lax.ppermute(acc, axis_name, perm=list(pairs))
+        acc = acc + jnp.where(recv, y, jnp.zeros_like(y))
+    # acc at the root now holds the total; diffuse it down
+    out = acc
+    for pairs in down.rounds:
+        recv = jnp.asarray(_dst_mask(n, pairs))[idx]
+        y = lax.ppermute(out, axis_name, perm=list(pairs))
+        out = jnp.where(recv, y, out)
+    return out
+
+
+def recursive_doubling_allreduce(x: jax.Array, axis_name: str,
+                                 sched: Schedule) -> jax.Array:
+    acc = x
+    for pairs in sched.rounds:
+        y = lax.ppermute(acc, axis_name, perm=list(pairs))
+        acc = acc + y
+    return acc
+
+
+def halving_doubling_allreduce(x: jax.Array, axis_name: str,
+                               n: int) -> jax.Array:
+    """Bandwidth-optimal all-reduce: recursive-halving reduce-scatter then
+    recursive-doubling all-gather. Transfers 2·(n-1)/n·|x| per device versus
+    log2(n)·|x| for plain recursive doubling. Requires |x| divisible by n
+    (callers pad); power-of-two n."""
+    assert n & (n - 1) == 0
+    flat = x.reshape(-1)
+    orig_size = flat.shape[0]
+    pad = (-orig_size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    size = flat.shape[0]
+    idx = lax.axis_index(axis_name)
+    # reduce-scatter: after round r each device owns a 1/2^(r+1) slice
+    acc = flat
+    stride = n // 2
+    width = size
+    while stride >= 1:
+        pairs = [(i, i ^ stride) for i in range(n)]
+        keep_low = (idx // stride) % 2 == 0     # low-half keeper this round
+        half = width // 2
+        low = lax.dynamic_slice(acc, (0,), (half,))
+        high = lax.dynamic_slice(acc, (half,), (half,))
+        tosend = jnp.where(keep_low, high, low)
+        keep = jnp.where(keep_low, low, high)
+        got = lax.ppermute(tosend, axis_name, perm=pairs)
+        acc = keep + got
+        width = half
+        stride //= 2
+    # all-gather back up (doubling)
+    stride = 1
+    while stride < n:
+        pairs = [(i, i ^ stride) for i in range(n)]
+        got = lax.ppermute(acc, axis_name, perm=pairs)
+        keep_low = (idx // stride) % 2 == 0
+        acc = jnp.where(keep_low,
+                        jnp.concatenate([acc, got]),
+                        jnp.concatenate([got, acc]))
+        stride *= 2
+    return acc[:orig_size].reshape(x.shape)
+
+
+ALLREDUCE_KINDS = ("xla_psum", "phaser_scsl", "recursive_doubling",
+                   "halving_doubling")
+
+
+@dataclass
+class PhaserCollective:
+    """Bundle: phaser topology over a mesh axis + selected schedule.
+
+    ``kind``:
+      xla_psum | phaser_scsl | recursive_doubling | halving_doubling
+    """
+
+    n: int
+    axis_name: str
+    kind: str = "xla_psum"
+    p: float = 0.5
+    seed: int = 0
+    up: Optional[Schedule] = None
+    down: Optional[Schedule] = None
+    rd: Optional[Schedule] = None
+
+    def __post_init__(self):
+        assert self.kind in ALLREDUCE_KINDS, self.kind
+        if self.kind == "phaser_scsl":
+            sl = SkipList.build(range(self.n), p=self.p, seed=self.seed)
+            self.up = scsl_reduce_schedule(sl, list(range(self.n)))
+            self.down = snsl_broadcast_schedule(sl, list(range(self.n)))
+        elif self.kind == "recursive_doubling":
+            self.rd = recursive_doubling_schedule(self.n)
+
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        if self.kind == "xla_psum":
+            return lax.psum(x, self.axis_name)
+        if self.kind == "phaser_scsl":
+            return scsl_allreduce(x, self.axis_name, self.up, self.down)
+        if self.kind == "recursive_doubling":
+            return recursive_doubling_allreduce(x, self.axis_name, self.rd)
+        if self.kind == "halving_doubling":
+            return halving_doubling_allreduce(x, self.axis_name, self.n)
+        raise ValueError(self.kind)
+
+    def pmean(self, x: jax.Array) -> jax.Array:
+        return self.all_reduce(x) / self.n
+
+    # --- introspection / roofline ------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        if self.kind == "phaser_scsl":
+            return {"rounds": self.up.depth + self.down.depth,
+                    "messages": self.up.messages + self.down.messages}
+        if self.kind == "recursive_doubling":
+            return {"rounds": self.rd.depth, "messages": self.rd.messages}
+        if self.kind == "halving_doubling":
+            lg = int(math.log2(self.n))
+            return {"rounds": 2 * lg, "messages": 2 * lg * self.n}
+        return {"rounds": 1, "messages": self.n}

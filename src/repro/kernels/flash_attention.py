@@ -1,0 +1,114 @@
+"""Flash attention (training/prefill) Pallas TPU kernel.
+
+Blockwise causal GQA attention with online softmax. TPU adaptation: the
+(block_q x block_k) score tile lives in VMEM, MXU-shaped (128x128 default);
+the KV loop is the innermost grid dim with running (acc, m, l) carried in
+VMEM scratch across its iterations (the sequential last grid dim is the
+TPU-idiomatic replacement for the GPU kernel's warp-level softmax
+reductions — DESIGN.md §6).
+
+Layout: q (B, H, Sq, hd); k/v (B, Kh, Sk, hd); GQA mapping h -> h*Kh//H.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 block_q: int, block_k: int, causal: bool,
+                 sliding_window, sm_scale: float, kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                               # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if sliding_window is not None:
+        mask = mask & (qpos - kpos < sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,H,Sq,hd); k/v: (B,Kh,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    assert H % Kh == 0, (H, Kh)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q,
+                                                     block_k)
+    kv_blocks = Sk // block_k
+    grid = (B, H, Sq // block_q, kv_blocks)
+    sm_scale = 1.0 / math.sqrt(hd)
+    g = H // Kh
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        sliding_window=sliding_window, sm_scale=sm_scale,
+        kv_blocks=kv_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, q_, k_: (b, h, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, q_, k_: (b, h // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, q_, k_: (b, h // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, q_, k_: (b, h, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

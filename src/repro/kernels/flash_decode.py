@@ -1,0 +1,98 @@
+"""Flash-decoding Pallas TPU kernel: one-token attention over a long KV
+cache, split across KV blocks.
+
+FlashDecoding on GPU splits K across SMs and merges per-split LSE; the TPU
+adaptation runs the KV split as the sequential last grid dim with the
+(acc, m, l) merge state in VMEM scratch (no cross-core merge needed: a
+core streams its KV range through the MXU at full rate; the mesh-level
+split across chips is handled above the kernel by the sharding layer).
+
+Layout: q (B, H, hd); k/v (B, Kh, W, hd); valid (B, W) int32 mask
+(1 = slot holds a token the query may attend to — the caller encodes
+causality/ring-buffer validity in it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k: int, kv_blocks: int,
+                   sm_scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (1, hd) row
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                # (1, bk)
+    ok = valid_ref[0] > 0                           # (bk,)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, valid, *, block_k: int = 512,
+                 interpret: bool = False):
+    """q: (B,H,hd); k/v: (B,Kh,W,hd); valid: (B,W) int32 -> (B,H,hd)."""
+    B, H, hd = q.shape
+    Kh, W = k.shape[1], k.shape[2]
+    assert H % Kh == 0
+    block_k = min(block_k, W)
+    assert W % block_k == 0
+    kv_blocks = W // block_k
+    g = H // Kh
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               kv_blocks=kv_blocks, sm_scale=sm_scale)
+    q4 = q[:, :, None, :]                           # (B,H,1,hd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, k_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, k_: (b, h // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, k_: (b, h // g, k_, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, k_: (b, k_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, k_: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k, v, valid)
+    return out[:, :, 0, :]

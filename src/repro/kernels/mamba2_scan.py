@@ -1,0 +1,89 @@
+"""Mamba2 chunked-SSD Pallas TPU kernel.
+
+The GPU reference implements the selective scan with warp-level shuffles;
+the TPU-native formulation (DESIGN.md §2/§6) is chunked SSD: the chunk is
+a VMEM tile, intra-chunk work is dense (c x c) MXU matmuls, and the
+inter-chunk state carry (h: P x N per head) rides VMEM scratch across the
+sequential chunk grid dim.
+
+Layout: x (B, NH, S, P); Bmat/Cmat (B, S, N); a/dt (B, NH, S).
+Per (batch, head, chunk) grid cell: y = intra + inter; h' = decay*h + S_c.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, dt_ref, y_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)           # (c, P)
+    Bm = b_ref[0].astype(jnp.float32)             # (c, N)
+    Cm = c_ref[0].astype(jnp.float32)             # (c, N)
+    a = a_ref[0, 0].astype(jnp.float32)           # (c,)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (c,)
+
+    la = jnp.cumsum(jnp.log(a + 1e-20))           # (c,)
+    seg = la[:, None] - la[None, :]               # (c, c)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iotb = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(iota >= iotb, seg, -1e30)
+    G = jnp.exp(seg)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c,c)
+    W = CB * G
+    xdt = x * dt[:, None]
+    y_intra = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter: y += (C decay) @ h^T  with h (P, N)
+    decay_from_start = jnp.exp(la)                # (c,)
+    y_inter = jax.lax.dot_general(
+        Cm * decay_from_start[:, None], h_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (c, P)
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(la_end) h + sum_t decay_to_end_t dt_t x_t B_t^T
+    decay_to_end = jnp.exp(la[-1] - la)           # (c,)
+    S_c = jax.lax.dot_general(
+        xdt * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (P, N)
+    h_ref[...] = jnp.exp(la[-1]) * h_ref[...] + S_c
+
+
+def mamba2_scan(x, Bmat, Cmat, a, dt, *, chunk: int = 256,
+                interpret: bool = False):
+    """x: (B,NH,S,P); Bmat/Cmat: (B,S,N); a/dt: (B,NH,S) -> y like x."""
+    B, NH, S, P = x.shape
+    N = Bmat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nchunk = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, NH, nchunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, NH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, Bmat, Cmat, a, dt)

@@ -1,0 +1,104 @@
+"""xLSTM mLSTM chunkwise-parallel Pallas TPU kernel.
+
+Matrix-memory linear attention with exponential gating, stabilized in log
+space. Same TPU shape as the SSD kernel: (c x c) intra-chunk MXU tiles,
+(hd x hd) matrix state C plus normalizer n carried in VMEM scratch across
+the sequential chunk grid dim. The stabilizer max rides in the scratch
+with the state in decayed-log reference frame (states are stored w.r.t.
+m=0; the per-chunk weights fold exp(lf - m) in, matching the reference
+formulation in models/xlstm.py).
+
+Layout: q/k/v (B, NH, S, hd); logi/logf (B, NH, S).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, y_ref,
+                  C_ref, n_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (c, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    logi = i_ref[0, 0].astype(jnp.float32)         # (c,)
+    logf = f_ref[0, 0].astype(jnp.float32)
+
+    lf = jnp.cumsum(logf)                          # (c,)
+    seg = lf[:, None] - lf[None, :]                # (c, c)
+    logD = seg + logi[None, :]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iotb = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    logD = jnp.where(iota >= iotb, logD, -1e30)
+    m_intra = jnp.max(logD, axis=1)                # (c,)
+    m = jnp.maximum(m_intra, lf)                   # stabilizer per row
+    Dmat = jnp.exp(logD - m[:, None])
+    QK = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    W = QK * Dmat
+    y_intra = jax.lax.dot_general(W, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    den_intra = jnp.sum(W, axis=1)                 # (c,)
+
+    w_init = jnp.exp(lf - m)                       # (c,)
+    qw = q * w_init[:, None]
+    y_inter = jax.lax.dot_general(qw, C_ref[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    den_inter = jax.lax.dot_general(qw, n_ref[...][:, None],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)[:, 0]
+    num = y_intra + y_inter
+    den = den_intra + den_inter
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+    y_ref[0, 0] = (num / den[:, None]).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(lf[-1] - lf + logi)     # (c,)
+    C_ref[...] = (jnp.exp(lf[-1]) * C_ref[...]
+                  + jax.lax.dot_general(
+                      k * decay_to_end[:, None], v,
+                      (((0,), (0,)), ((), ())),
+                      preferred_element_type=jnp.float32))
+    n_ref[...] = (jnp.exp(lf[-1]) * n_ref[...]
+                  + jnp.sum(k * decay_to_end[:, None], axis=0))
+
+
+def mlstm_chunkwise(q, k, v, logi, logf, *, chunk: int = 256,
+                    interpret: bool = False):
+    """q/k/v: (B,NH,S,hd); logi/logf: (B,NH,S) -> y (B,NH,S,hd)."""
+    B, NH, S, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nchunk = S // chunk
+
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, NH, nchunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd),
+                               lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, NH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, logi, logf)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) and False on TPU;
+callers on real hardware get the compiled kernels, tests get the
+interpreter executing the same kernel bodies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+from .flash_decode import flash_decode
+from .mamba2_scan import mamba2_scan
+from .mlstm_kernel import mlstm_chunkwise
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, sliding_window=None,
+                       block_q=128, block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal,
+                           sliding_window=sliding_window, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_op(q, k, v, valid, *, block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_decode(q, k, v, valid, block_k=block_k,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_scan_op(x, Bmat, Cmat, a, dt, *, chunk=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return mamba2_scan(x, Bmat, Cmat, a, dt, chunk=chunk,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_op(q, k, v, logi, logf, *, chunk=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return mlstm_chunkwise(q, k, v, logi, logf, chunk=chunk,
+                           interpret=interpret)

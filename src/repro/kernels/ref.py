@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the Pallas kernels (exact, non-blocked math).
+
+Each oracle computes the mathematically-direct form (full softmax /
+sequential recurrence), so kernel tests verify the blockwise algorithms
+against ground truth rather than against another blocked implementation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sliding_window=None):
+    """q: (B,H,Sq,hd); k/v: (B,Kh,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    g = H // Kh
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if sliding_window is not None:
+        mask = mask & (qpos - kpos < sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, k, v, valid):
+    """q: (B,H,hd); k/v: (B,Kh,W,hd); valid: (B,W) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    Kh = k.shape[1]
+    g = H // Kh
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhd,bhwd->bhw", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, :] > 0, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhw,bhwd->bhd", w,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba2_ref(x, Bmat, Cmat, a, dt):
+    """Exact sequential recurrence. x: (B,NH,S,P); B/C: (B,S,N);
+    a/dt: (B,NH,S) -> y like x."""
+    B, NH, S, P = x.shape
+    N = Bmat.shape[-1]
+
+    def step(h, t):
+        x_t, B_t, C_t, a_t, dt_t = t
+        h = h * a_t[:, :, None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", x_t.astype(jnp.float32),
+            B_t.astype(jnp.float32), dt_t)
+        y = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, NH, P, N), jnp.float32)
+    xs = (x.transpose(2, 0, 1, 3), Bmat.transpose(1, 0, 2),
+          Cmat.transpose(1, 0, 2), a.transpose(2, 0, 1),
+          dt.transpose(2, 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """Exact sequential mLSTM recurrence (log-space stabilized).
+    q/k/v: (B,NH,S,hd); logi/logf: (B,NH,S) -> y."""
+    B, NH, S, hd = q.shape
+
+    def step(carry, t):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = t
+        q_t = q_t.astype(jnp.float32)
+        k_t = k_t.astype(jnp.float32)
+        v_t = v_t.astype(jnp.float32)
+        m_new = jnp.maximum(f_t + m, i_t)
+        C = (jnp.exp(f_t + m - m_new)[..., None, None] * C
+             + jnp.exp(i_t - m_new)[..., None, None]
+             * jnp.einsum("bhk,bhp->bhkp", k_t, v_t))
+        n = (jnp.exp(f_t + m - m_new)[..., None] * n
+             + jnp.exp(i_t - m_new)[..., None] * k_t)
+        num = jnp.einsum("bhk,bhkp->bhp", q_t, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q_t, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    C0 = jnp.zeros((B, NH, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, NH, hd), jnp.float32)
+    m0 = jnp.full((B, NH), NEG_INF, jnp.float32)
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), logi.transpose(2, 0, 1),
+          logf.transpose(2, 0, 1))
+    _, ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.transpose(1, 2, 0, 3).astype(q.dtype)

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and emit the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single          # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun                    # the full table
+
+Success criteria (deliverable e): .lower().compile() succeeds, memory
+analysis shows the program fits per-chip HBM, and cost/collective analysis
+feeds EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES_BY_NAME, ALL_ARCHS, cell_applicable
+from ..models.registry import get_api, get_config
+from ..optim import AdamW
+from ..roofline.analysis import analyze_compiled, model_flops
+from ..sharding.policies import make_rules
+from .mesh import HW, make_production_mesh
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp=None, moe_mode=None, remat: bool = True,
+               microbatches: int = 1, seq_shard: bool = False,
+               dp_over_model: bool = False, decode_split_k: bool = False,
+               moe_nogroup: bool = False):
+    """Lower one (arch x shape x mesh) cell; returns (lowered, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if moe_nogroup:
+        cfg = dataclasses.replace(cfg, moe_group_size=0)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    api = get_api(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, cfg, fsdp=fsdp, moe_mode=moe_mode,
+                       seq_shard=seq_shard, dp_over_model=dp_over_model)
+
+    from ..train.step import (build_decode_step, build_prefill_step,
+                              build_train_step)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        ts = build_train_step(api, opt, rules=rules, remat=remat,
+                              microbatches=microbatches, donate=True)
+        pspec = api.param_spec()
+        ospec = jax.eval_shape(opt.init, pspec)
+        bspec = api.input_specs(shape)
+        with mesh:
+            lowered = ts.jitted.lower(pspec, ospec, bspec)
+    elif shape.kind == "prefill":
+        fn, _ = build_prefill_step(api, rules=rules)
+        pspec = api.param_spec()
+        bspec = api.input_specs(shape)
+        with mesh:
+            lowered = fn.lower(pspec, bspec)
+    else:  # decode
+        fn, _ = build_decode_step(api, rules=rules,
+                                  batch=shape.global_batch,
+                                  window=shape.seq_len,
+                                  split_k=decode_split_k)
+        pspec = api.param_spec()
+        stspec = api.decode_state_spec(shape.global_batch, shape.seq_len)
+        bspec = api.input_specs(shape)
+        with mesh:
+            lowered = fn.lower(pspec, stspec, bspec)
+    return lowered, {"cfg": cfg, "shape": shape, "mesh": mesh}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             **kw):
+    t0 = time.time()
+    res = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   **kw)
+        if lowered is None:
+            res["status"] = "skipped"
+            res["why"] = meta["skipped"]
+            return res
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        chips = 512 if multi_pod else 256
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        # primary: while-aware parse (trip-count-correct; cost_analysis
+        # counts scan bodies once — see roofline/hlo_parse.py)
+        from ..roofline.hlo_parse import HloModule
+        from ..roofline.analysis import Roofline
+        cost = HloModule(hlo_text).cost()
+        rl = Roofline(
+            flops=cost.flops * chips, hbm_bytes=cost.bytes * chips,
+            coll_bytes=cost.coll_bytes * chips, chips=chips,
+            peak_flops=HW["peak_flops_bf16"], hbm_bw=HW["hbm_bw"],
+            ici_bw=HW["ici_bw"],
+            coll_detail={k: v * chips for k, v in cost.coll.items()})
+        # secondary: raw cost_analysis (loop bodies counted once)
+        rl_ca = analyze_compiled(compiled, chips, HW, hlo_text=hlo_text)
+        cfg, shape = meta["cfg"], meta["shape"]
+        mf = model_flops(cfg, shape)
+        res.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+            "roofline": rl.to_dict(),
+            "cost_analysis_raw": rl_ca.to_dict(),
+            "model_flops": mf,
+            "model_flops_ratio": mf / rl.flops if rl.flops else None,
+            "roofline_fraction": rl.fraction_of_roofline(mf),
+        })
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res["status"] = "error"
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["trace"] = traceback.format_exc()[-2000:]
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSONL here")
+    ap.add_argument("--fsdp", default=None,
+                    choices=[None, "on", "off"], nargs="?")
+    ap.add_argument("--moe-mode", default=None, choices=[None, "ep", "tp"],
+                    nargs="?")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--dp-over-model", action="store_true",
+                    help="hillclimb B: fold model axis into pure DP")
+    ap.add_argument("--decode-split-k", action="store_true",
+                    help="hillclimb C: shard KV window over model axis")
+    ap.add_argument("--moe-nogroup", action="store_true",
+                    help="hillclimb A baseline: ungrouped MoE dispatch")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    kw = dict(fsdp={"on": True, "off": False}.get(args.fsdp),
+              moe_mode=args.moe_mode, remat=not args.no_remat,
+              microbatches=args.microbatches, seq_shard=args.seq_shard,
+              dp_over_model=args.dp_over_model,
+              decode_split_k=args.decode_split_k,
+              moe_nogroup=args.moe_nogroup)
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_skip = n_err = 0
+    for a, s, mp in cells:
+        res = run_cell(a, s, multi_pod=mp, **kw)
+        n_ok += res["status"] == "ok"
+        n_skip += res["status"] == "skipped"
+        n_err += res["status"] == "error"
+        line = json.dumps(res)
+        print(line if res["status"] != "error"
+              else json.dumps({k: v for k, v in res.items()
+                               if k != "trace"}), flush=True)
+        if out_f:
+            out_f.write(line + "\n")
+            out_f.flush()
+    print(f"# dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors",
+          file=sys.stderr)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""GQA attention: training/prefill (full or sliding-window causal), decode
+with a KV cache (full or ring-buffer), and cross-attention (enc-dec).
+
+The KV cache is a dict {"k","v","pos"}: k/v (B, W, kvH, hd) and pos (B, W)
+holding the *absolute* position stored in each slot (-1 = empty). A full
+cache has W = max_seq; a sliding-window cache is a ring buffer with
+W = window — slot t % W — which is what makes 500k-token decode O(W) for
+SWA models (Mixtral). RoPE is applied to k at write time, q at read time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              *, layers: Optional[int], dtype, qkv_bias: bool = False) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, layers=layers,
+                         dtype=dtype),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, layers=layers,
+                         dtype=dtype),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, layers=layers,
+                         dtype=dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, layers=layers,
+                         dtype=dtype),
+    }
+    if qkv_bias:
+        shape = lambda d: (d,) if layers is None else (layers, d)
+        p["bq"] = jnp.zeros(shape(n_heads * head_dim), dtype)
+        p["bk"] = jnp.zeros(shape(n_kv_heads * head_dim), dtype)
+        p["bv"] = jnp.zeros(shape(n_kv_heads * head_dim), dtype)
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, n_heads: int, n_kv_heads: int,
+                 head_dim: int):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,H,hd), k: (B,Sk,Kh,hd) -> (B,H,Sq,Sk) with GQA grouping."""
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    g = H // Kh
+    qg = q.reshape(B, Sq, Kh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, Kh * g, Sq, k.shape[1]) / math.sqrt(hd)
+
+
+def _gqa_out(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B,H,Sq,Sk), v: (B,Sk,Kh,hd) -> (B,Sq,H,hd)."""
+    B, H, Sq, Sk = w.shape
+    Kh = v.shape[2]
+    g = H // Kh
+    wg = w.reshape(B, Kh, g, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", wg.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, v.shape[3])
+
+
+def _flash_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+               qpos: jax.Array, kpos: jax.Array, *, causal: bool,
+               sliding_window: Optional[int], chunk: int = 512
+               ) -> jax.Array:
+    """Blockwise attention with online softmax (flash-style): the (Sq, Sk)
+    score matrix is never materialized — only (Sq, chunk) tiles inside a
+    lax.scan over KV chunks. This is the memory behavior the Pallas kernel
+    (kernels/flash_attention.py) has on TPU; the pure-jnp layer mirrors it
+    so compile-time memory analysis is faithful.
+
+    q: (B,Sq,H,hd); k/v: (B,Sk,Kh,hd); qpos: (B,Sq); kpos: (B,Sk)
+    (kpos < 0 marks padding)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    c = min(chunk, Sk)
+    nchunk = (Sk + c - 1) // c
+    pad = nchunk * c - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = k.reshape(B, nchunk, c, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, c, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(B, nchunk, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        k_i, v_i, p_i = xs
+        s = _gqa_scores(q, k_i)                       # (B,H,Sq,c) f32
+        kj = p_i[:, None, None, :]
+        qi = qpos[:, None, :, None]
+        mask = kj >= 0
+        if causal:
+            mask = mask & (kj <= qi)
+        if sliding_window is not None:
+            mask = mask & (qi - kj < sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + _gqa_out(p, v_i).transpose(
+            0, 2, 1, 3)                               # (B,H,Sq,hd)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    # checkpoint the chunk body: backward recomputes the (Sq, chunk) score
+    # tile instead of saving one per chunk (which would re-materialize the
+    # full S^2 matrix across the scan — the thing flash attention avoids)
+    (acc, m, l), _ = jax.lax.scan(jax.checkpoint(body), (acc0, m0, l0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B,Sq,H,hd)
+
+
+def attention(p: Dict, x: jax.Array, positions: jax.Array, *,
+              n_heads: int, n_kv_heads: int, head_dim: int,
+              rope_theta: float, causal: bool = True,
+              sliding_window: Optional[int] = None,
+              chunk: int = 512) -> jax.Array:
+    """Training / prefill self-attention. x: (B,S,D)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    o = _flash_mha(q, k, v, positions, positions, causal=causal,
+                   sliding_window=sliding_window, chunk=chunk)
+    o = constrain(o, "batch", None, "heads", None)
+    return o.reshape(B, S, n_heads * head_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+def init_cache(batch: int, window: int, n_kv_heads: int, head_dim: int,
+               dtype) -> Dict:
+    return {
+        "k": jnp.zeros((batch, window, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def cache_spec(batch: int, window: int, n_kv_heads: int, head_dim: int,
+               dtype) -> Dict:
+    return {
+        "k": jax.ShapeDtypeStruct((batch, window, n_kv_heads, head_dim),
+                                  dtype),
+        "v": jax.ShapeDtypeStruct((batch, window, n_kv_heads, head_dim),
+                                  dtype),
+        "pos": jax.ShapeDtypeStruct((batch, window), jnp.int32),
+    }
+
+
+def decode_attention(p: Dict, x: jax.Array, t: jax.Array, cache: Dict, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float,
+                     sliding_window: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict]:
+    """One decode step. x: (B,1,D); t: (B,) absolute position of the new
+    token. Writes slot t (full cache) or t % W (ring buffer), attends over
+    all valid slots."""
+    B, S, D = x.shape
+    assert S == 1
+    W = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    pos = t[:, None]                                   # (B,1)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    slot = (t % W)[:, None] if sliding_window is not None else t[:, None]
+    bidx = jnp.arange(B)[:, None]
+    k = cache["k"].at[bidx, slot].set(k_new)
+    v = cache["v"].at[bidx, slot].set(v_new)
+    cpos = cache["pos"].at[bidx, slot].set(pos)
+    scores = _gqa_scores(q, k)                         # (B,H,1,W)
+    kj = cpos[:, None, None, :]
+    qi = t[:, None, None, None]
+    mask = (kj >= 0) & (kj <= qi)
+    if sliding_window is not None:
+        mask = mask & (qi - kj < sliding_window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w, v).reshape(B, 1, n_heads * head_dim)
+    return o @ p["wo"], {"k": k, "v": v, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec); encoder output is position-free (no rope)
+# ---------------------------------------------------------------------------
+def cross_attention(p: Dict, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    *, n_heads: int, n_kv_heads: int,
+                    head_dim: int) -> jax.Array:
+    B, S, D = x.shape
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k, v = enc_kv
+    scores = _gqa_scores(q, k)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w, v).reshape(B, S, n_heads * head_dim)
+    return o @ p["wo"]
+
+
+def cross_kv(p: Dict, enc_out: jax.Array, *, n_kv_heads: int,
+             head_dim: int) -> Tuple[jax.Array, jax.Array]:
+    """Precompute encoder K/V once per sequence (reused every decode step)."""
+    B, S, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (k.reshape(B, S, n_kv_heads, head_dim),
+            v.reshape(B, S, n_kv_heads, head_dim))

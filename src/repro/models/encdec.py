@@ -1,0 +1,173 @@
+"""Encoder-decoder (Whisper-style) stack. The audio conv frontend is a STUB
+per the assignment: ``input_specs()`` supplies precomputed frame embeddings
+(B, enc_seq, d_model). Encoder: non-causal self-attention; decoder: causal
+self-attention + cross-attention over the encoder output.
+
+Positioning adaptation: Whisper uses sinusoidal (encoder) / learned
+(decoder) absolute embeddings; we use RoPE on self-attention uniformly and
+position-free cross-attention — structurally identical compute/memory, one
+code path (noted in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from . import attention as A
+from .layers import (embed_apply, embed_init, mlp_apply, mlp_init, rmsnorm,
+                     unembed_apply)
+
+Params = Dict
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+
+    def attn(k, n):
+        return A.attn_init(k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.hd, layers=n, dtype=dt, qkv_bias=cfg.qkv_bias)
+
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "enc_blocks": {
+            "ln1": jnp.ones((Le, cfg.d_model), dt),
+            "ln2": jnp.ones((Le, cfg.d_model), dt),
+            "attn": attn(ks[1], Le),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, layers=Le,
+                            dtype=dt),
+        },
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "dec_blocks": {
+            "ln1": jnp.ones((Ld, cfg.d_model), dt),
+            "lnx": jnp.ones((Ld, cfg.d_model), dt),
+            "ln2": jnp.ones((Ld, cfg.d_model), dt),
+            "attn": attn(ks[3], Ld),
+            "xattn": attn(ks[4], Ld),
+            "mlp": mlp_init(ks[5], cfg.d_model, cfg.d_ff, layers=Ld,
+                            dtype=dt),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": embed_init(ks[6], cfg.vocab_size, cfg.d_model, dt),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed embeddings -> (B, S_enc, D)."""
+    B, S, D = frames.shape
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    h = constrain(h, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    def body(h, pl):
+        a = A.attention(pl["attn"], rmsnorm(h, pl["ln1"], cfg.norm_eps),
+                        positions, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                        rope_theta=cfg.rope_theta, causal=False)
+        h = h + a
+        h = h + mlp_apply(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return constrain(h, "batch", None, None), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            frames: jax.Array, *, remat: bool = False,
+            want_cache: bool = False):
+    """Teacher-forced decoder over ``tokens`` given encoder ``frames``.
+    Returns (logits, aux=0, caches|None)."""
+    enc_out = encode(cfg, params, frames)
+    B, S = tokens.shape
+    h = embed_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    def body(h, pl):
+        hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        a = A.attention(pl["attn"], hn, positions, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                        rope_theta=cfg.rope_theta, causal=True)
+        h = h + a
+        kv = A.cross_kv(pl["xattn"], enc_out, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.hd)
+        xa = A.cross_attention(pl["xattn"],
+                               rmsnorm(h, pl["lnx"], cfg.norm_eps), kv,
+                               n_heads=cfg.n_heads,
+                               n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd)
+        h = h + xa
+        h = h + mlp_apply(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        h = constrain(h, "batch", None, None)
+        cache = None
+        if want_cache:
+            cache = {"cross_k": kv[0], "cross_v": kv[1]}
+        return h, cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, caches = jax.lax.scan(body, h, params["dec_blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(params["lm_head"], h, transpose=True)
+    return logits, jnp.zeros((), jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn KV cache + precomputed per-layer cross K/V
+# ---------------------------------------------------------------------------
+def decode_state_spec(cfg: ModelConfig, batch: int, window: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    f = jax.ShapeDtypeStruct
+    self_cache = jax.tree_util.tree_map(
+        lambda s: f((L, *s.shape), s.dtype),
+        A.cache_spec(batch, window, cfg.n_kv_heads, cfg.hd, dt))
+    return {
+        "layers": self_cache,
+        "cross_k": f((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd),
+                     dt),
+        "cross_v": f((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd),
+                     dt),
+    }
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, window: int) -> Dict:
+    spec = decode_state_spec(cfg, batch, window)
+    return jax.tree_util.tree_map(
+        lambda s: (jnp.full(s.shape, -1, s.dtype)
+                   if s.dtype == jnp.int32 else jnp.zeros(s.shape, s.dtype)),
+        spec)
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: Dict,
+                token: jax.Array, t: jax.Array) -> Tuple[jax.Array, Dict]:
+    h = embed_apply(params["embed"], token[:, None])
+
+    xs = {"_p": params["dec_blocks"], "_state": state["layers"],
+          "_ck": state["cross_k"], "_cv": state["cross_v"]}
+
+    def body(h, x):
+        pl = x["_p"]
+        hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        a, new_st = A.decode_attention(
+            pl["attn"], hn, t, x["_state"], n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta)
+        h = h + a
+        xa = A.cross_attention(pl["xattn"],
+                               rmsnorm(h, pl["lnx"], cfg.norm_eps),
+                               (x["_ck"], x["_cv"]), n_heads=cfg.n_heads,
+                               n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd)
+        h = h + xa
+        h = h + mlp_apply(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h, new_st
+
+    h, new_layer_states = jax.lax.scan(body, h, xs)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(params["lm_head"], h, transpose=True)[:, 0]
+    return logits, {**state, "layers": new_layer_states}

@@ -1,0 +1,99 @@
+"""Shared model primitives: norms, rotary embeddings, SwiGLU MLP, linear
+init. Parameters are plain nested dicts of jnp arrays; per-layer parameters
+are created *stacked* along a leading layer dim so the decoder stack is a
+single ``lax.scan`` (compact HLO, natural remat/FSDP granularity)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, layers: Optional[int],
+               dtype, scale: Optional[float] = None) -> jax.Array:
+    """(L?, in, out) truncated-normal fan-in init."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    shape = (in_dim, out_dim) if layers is None else (layers, in_dim, out_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def zeros_init(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, *, layers: Optional[int],
+             dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, layers=layers, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, layers=layers, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, layers=layers, dtype=dtype),
+    }
+
+
+def mlp_apply(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embed_apply(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(emb, tokens, axis=0)
+    return constrain(out, "batch", None, None)
+
+
+def unembed_apply(emb_or_head: jax.Array, x: jax.Array,
+                  transpose: bool) -> jax.Array:
+    w = emb_or_head.T if transpose else emb_or_head
+    logits = x @ w
+    return constrain(logits, "batch", None, "vocab")

@@ -1,0 +1,181 @@
+"""Uniform model API over all families + input specs per benchmark cell.
+
+``ModelAPI`` hides family differences behind four functions (init, loss,
+prefill, decode) and provides ShapeDtypeStruct input specs for every
+(shape x kind) cell so the launcher can lower without allocating.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy in f32."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init
+    def init_params(self, key):
+        if self.cfg.is_encdec:
+            return encdec.init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    def param_spec(self):
+        """ShapeDtypeStruct tree of the parameters (no allocation)."""
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.key(0)))
+
+    # ------------------------------------------------------------- train
+    def loss_fn(self, params, batch: Dict, *, remat: bool = False
+                ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, aux, _ = encdec.forward(cfg, params, batch["tokens"],
+                                            batch["frames"], remat=remat)
+            loss = _xent(logits, batch["targets"])
+        elif cfg.family == "vlm":
+            logits, aux, _ = transformer.forward(
+                cfg, params, batch["tokens"], patches=batch["patches"],
+                remat=remat)
+            logits = logits[:, cfg.vision_tokens:]   # text positions only
+            loss = _xent(logits, batch["targets"])
+        else:
+            logits, aux, _ = transformer.forward(cfg, params,
+                                                 batch["tokens"],
+                                                 remat=remat)
+            loss = _xent(logits, batch["targets"])
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def prefill_fn(self, params, batch: Dict):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, _, caches = encdec.forward(cfg, params, batch["tokens"],
+                                               batch["frames"],
+                                               want_cache=True)
+        elif cfg.family == "vlm":
+            logits, _, caches = transformer.forward(
+                cfg, params, batch["tokens"], patches=batch["patches"],
+                want_cache=True)
+        else:
+            logits, _, caches = transformer.forward(
+                cfg, params, batch["tokens"], want_cache=True)
+        return logits[:, -1], caches
+
+    def decode_fn(self, params, state: Dict, batch: Dict):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.decode_step(cfg, params, state, batch["token"],
+                                      batch["t"])
+        return transformer.decode_step(cfg, params, state, batch["token"],
+                                       batch["t"])
+
+    def decode_state_spec(self, batch: int, window: int):
+        if self.cfg.is_encdec:
+            return encdec.decode_state_spec(self.cfg, batch, window)
+        return transformer.decode_state_spec(self.cfg, batch, window)
+
+    def init_decode_state(self, batch: int, window: int):
+        if self.cfg.is_encdec:
+            return encdec.init_decode_state(self.cfg, batch, window)
+        return transformer.init_decode_state(self.cfg, batch, window)
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        """ShapeDtypeStruct stand-ins for the step inputs of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f = jax.ShapeDtypeStruct
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            return {"token": f((B,), i32), "t": f((B,), i32)}
+        specs: Dict = {}
+        if cfg.family == "vlm":
+            n_vis = cfg.vision_tokens
+            specs["patches"] = f((B, n_vis, cfg.d_model), dt)
+            specs["tokens"] = f((B, S - n_vis), i32)
+            if shape.kind == "train":
+                specs["targets"] = f((B, S - n_vis), i32)
+            return specs
+        if cfg.is_encdec:
+            specs["frames"] = f((B, cfg.encoder_seq, cfg.d_model), dt)
+        specs["tokens"] = f((B, S), i32)
+        if shape.kind == "train":
+            specs["targets"] = f((B, S), i32)
+        return specs
+
+    def make_inputs(self, shape: ShapeConfig, seed: int = 0) -> Dict:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape)
+        key = jax.random.key(seed)
+        out = {}
+        for name, s in specs.items():
+            key, sub = jax.random.split(key)
+            if s.dtype == jnp.int32:
+                hi = self.cfg.vocab_size if name in ("tokens", "targets",
+                                                     "token") else shape.seq_len
+                out[name] = jax.random.randint(sub, s.shape, 0, hi,
+                                               dtype=jnp.int32)
+            else:
+                out[name] = jax.random.normal(sub, s.shape,
+                                              jnp.float32).astype(s.dtype)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def available() -> Tuple[str, ...]:
+    _load_all()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {available()}")
+    return _REGISTRY[name]()
+
+
+def get_api(name_or_cfg) -> ModelAPI:
+    if isinstance(name_or_cfg, ModelConfig):
+        return ModelAPI(name_or_cfg)
+    return ModelAPI(get_config(name_or_cfg))
+
+
+_loaded = False
+
+
+def _load_all():
+    global _loaded
+    if _loaded:
+        return
+    from ..configs import archs  # noqa: F401  (registers all configs)
+    _loaded = True

@@ -1,0 +1,189 @@
+"""Mamba2 (SSD) block, TPU-adapted.
+
+The GPU reference implements the selective scan with warp-level primitives;
+the TPU-idiomatic formulation (DESIGN.md §2) is the *chunked SSD* form:
+within a chunk the state update is a dense matmul (MXU-friendly), across
+chunks a short sequential carry (lax.scan over chunks). The Pallas kernel
+(kernels/mamba2_scan.py) implements the same chunking with explicit VMEM
+tiles; this module is the pure-jnp layer used for training/prefill, plus an
+O(1)-state decode step used for long-context serving.
+
+State-space: h_t = a_t * h_{t-1} + b_t x_t^T (per head, state N, headdim P)
+             y_t = C_t h_t + D x_t
+with scalar-per-head decay a_t = exp(-softplus(A) * dt_t).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .layers import dense_init
+
+
+def ssm_dims(d_model: int, expand: int, headdim: int) -> Tuple[int, int]:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    return d_inner, n_heads
+
+
+def ssm_init(key, d_model: int, *, state: int, conv: int, expand: int,
+             headdim: int, layers: Optional[int], dtype) -> Dict:
+    d_inner, nh = ssm_dims(d_model, expand, headdim)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    lead = () if layers is None else (layers,)
+    # in_proj emits [z (gate), x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * state + nh
+    return {
+        "in_proj": dense_init(k1, d_model, d_proj, layers=layers,
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (*lead, conv,
+                                          d_inner + 2 * state),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((*lead, nh), jnp.float32),
+        "D": jnp.ones((*lead, nh), jnp.float32),
+        "dt_bias": jnp.zeros((*lead, nh), jnp.float32),
+        "out_proj": dense_init(k3, d_inner, d_model, layers=layers,
+                               dtype=dtype),
+        "norm_w": jnp.ones((*lead, d_inner), dtype),
+    }
+
+
+def _split_proj(p: Dict, u: jax.Array, d_inner: int, state: int, nh: int):
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B,S,C) with taps (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def ssm_apply(p: Dict, u: jax.Array, *, state: int, conv: int, expand: int,
+              headdim: int, chunk: int = 256) -> jax.Array:
+    """Training/prefill forward. u: (B,S,D) -> (B,S,D)."""
+    B, S, D = u.shape
+    d_inner, nh = ssm_dims(D, expand, headdim)
+    z, xbc, dt = _split_proj(p, u, d_inner, state, nh)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    x, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    x = x.reshape(B, S, nh, headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                    # decay in (0,1)
+
+    # ---- chunked SSD: ONE chunk at a time (sequential scan over chunks,
+    # matching the Pallas kernel's sequential grid dim) so the quadratic
+    # (c x c) intra-chunk tensors exist for a single chunk only ----
+    nchunk = max(1, math.ceil(S / chunk))
+    pad = nchunk * chunk - S
+    def padc(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+    # xs layout: (Nc, B, c, ...)
+    xc = padc(x).reshape(B, nchunk, chunk, nh, headdim).transpose(
+        1, 0, 2, 3, 4)
+    Bc = padc(Bmat).reshape(B, nchunk, chunk, state).transpose(1, 0, 2, 3)
+    Cc = padc(Cmat).reshape(B, nchunk, chunk, state).transpose(1, 0, 2, 3)
+    ac = padc(a).reshape(B, nchunk, chunk, nh).transpose(1, 0, 2, 3)
+    dtc = padc(dt).reshape(B, nchunk, chunk, nh).transpose(1, 0, 2, 3)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(h, xs):
+        x_i, B_i, C_i, a_i, dt_i = xs                  # (B,c,...)
+        x_i = x_i.astype(jnp.float32)
+        B_i = B_i.astype(jnp.float32)
+        C_i = C_i.astype(jnp.float32)
+        la = jnp.cumsum(jnp.log(a_i + 1e-20), axis=1)  # (B,c,nh)
+        seg = la[:, :, None, :] - la[:, None, :, :]    # (B,c,c,nh)
+        # mask in log space BEFORE exp (0*inf => NaN grads otherwise)
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        G = jnp.exp(seg)
+        CB = jnp.einsum("bcs,bks->bck", C_i, B_i)      # (B,c,c)
+        W = CB[..., None] * G                          # (B,c,c,nh)
+        y_intra = jnp.einsum("bckh,bkhp->bchp", W, x_i * dt_i[..., None])
+        # inter-chunk: contribution of the incoming state
+        decay_from_start = jnp.exp(la)                 # (B,c,nh)
+        y_inter = jnp.einsum("bcs,bhps,bch->bchp", C_i, h,
+                             decay_from_start)
+        # state update
+        decay_to_end = jnp.exp(la[:, -1:, :] - la)     # (B,c,nh)
+        S_c = jnp.einsum("bcs,bch,bchp->bhps", B_i, decay_to_end * dt_i,
+                         x_i)
+        h_new = h * jnp.exp(la[:, -1, :])[..., None, None] + S_c
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, headdim, state), jnp.float32)
+    _, yc = jax.lax.scan(jax.checkpoint(body), h0,
+                         (xc, Bc, Cc, ac, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(
+        B, nchunk * chunk, nh, headdim)[:, :S]
+    y = y + x.astype(jnp.float32) * p["D"][..., None]
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm_w"].astype(jnp.float32)
+    y = constrain(y.astype(u.dtype), "batch", None, "ff")
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# O(1)-state decode
+# ---------------------------------------------------------------------------
+def ssm_state_spec(batch: int, d_model: int, *, state: int, conv: int,
+                   expand: int, headdim: int, dtype) -> Dict:
+    d_inner, nh = ssm_dims(d_model, expand, headdim)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, nh, headdim, state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, conv - 1, d_inner + 2 * state),
+                                     dtype),
+    }
+
+
+def ssm_init_state(batch: int, d_model: int, *, state: int, conv: int,
+                   expand: int, headdim: int, dtype) -> Dict:
+    d_inner, nh = ssm_dims(d_model, expand, headdim)
+    return {
+        "h": jnp.zeros((batch, nh, headdim, state), jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, d_inner + 2 * state), dtype),
+    }
+
+
+def ssm_decode_step(p: Dict, u: jax.Array, st: Dict, *, state: int,
+                    conv: int, expand: int, headdim: int
+                    ) -> Tuple[jax.Array, Dict]:
+    """u: (B,1,D); st: {"h": (B,nh,P,N), "conv": (B,K-1,C)}."""
+    B, S, D = u.shape
+    d_inner, nh = ssm_dims(D, expand, headdim)
+    z, xbc, dt = _split_proj(p, u, d_inner, state, nh)
+    window = jnp.concatenate([st["conv"], xbc], axis=1)       # (B,K,C)
+    w = p["conv_w"]
+    xbc_c = jax.nn.silu(jnp.sum(window * w, axis=1, keepdims=True))
+    x, Bv, Cv = jnp.split(xbc_c, [d_inner, d_inner + state], axis=-1)
+    x = x.reshape(B, nh, headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])[:, 0]                # (B,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                    # (B,nh)
+    h = st["h"] * a[..., None, None] + jnp.einsum(
+        "bhp,bs,bh->bhps", x.astype(jnp.float32), Bv[:, 0].astype(jnp.float32), dt)
+    y = jnp.einsum("bs,bhps->bhp", Cv[:, 0].astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * p["D"][..., None]
+    y = y.reshape(B, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm_w"].astype(jnp.float32)
+    out = y.astype(u.dtype) @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}

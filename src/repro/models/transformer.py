@@ -1,0 +1,365 @@
+"""Decoder stacks for all decoder-only families (dense / moe / ssm /
+hybrid / xlstm / vlm backbone).
+
+Every stack is a single ``lax.scan`` over stacked per-layer parameters:
+compact HLO (the 512-device dry-run compiles layer-count-independently),
+natural remat boundary, natural FSDP all-gather granularity. Hybrid
+(zamba2-style) applies one *shared* attention block every k layers via
+``lax.cond`` inside the scan, with per-application KV caches carried as a
+stacked buffer indexed by an application counter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from . import attention as A
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .layers import (apply_rope, embed_apply, embed_init, mlp_apply,
+                     mlp_init, rmsnorm, unembed_apply)
+
+Params = Dict
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dt(cfg)
+    L = cfg.n_layers
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                 "final_norm": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt)
+
+    blocks: Params = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        blocks["ln1"] = jnp.ones((L, cfg.d_model), dt)
+        blocks["ln2"] = jnp.ones((L, cfg.d_model), dt)
+        blocks["attn"] = A.attn_init(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            layers=L, dtype=dt, qkv_bias=cfg.qkv_bias)
+        if cfg.family == "moe":
+            blocks["moe"] = MOE.moe_init(ks[3], cfg.d_model, cfg.d_ff,
+                                         cfg.n_experts, layers=L, dtype=dt)
+        else:
+            blocks["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff,
+                                     layers=L, dtype=dt)
+    elif cfg.family == "ssm" and cfg.slstm_every:
+        # xLSTM as a GROUP scan: G groups of (k-1 mLSTM + 1 sLSTM).
+        # No lax.cond: exact cost attribution in the HLO loop nest.
+        k = cfg.slstm_every
+        assert L % k == 0, f"xlstm: {L} layers not divisible by group {k}"
+        G = L // k
+        def regroup(tree, inner):
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape(G, inner, *x.shape[1:]), tree)
+        blocks["m_ln"] = jnp.ones((G, k - 1, cfg.d_model), dt)
+        blocks["s_ln"] = jnp.ones((G, cfg.d_model), dt)
+        blocks["mlstm"] = regroup(
+            XL.mlstm_init(ks[2], cfg.d_model, n_heads=cfg.n_heads,
+                          layers=G * (k - 1), dtype=dt), k - 1)
+        blocks["slstm"] = XL.slstm_init(ks[3], cfg.d_model,
+                                        n_heads=cfg.n_heads, layers=G,
+                                        dtype=dt)
+    elif cfg.family == "hybrid":
+        # zamba2-style GROUP scan: G groups of (k Mamba2 + shared attn)
+        k = cfg.hybrid_attn_every
+        assert k and L % k == 0, \
+            f"hybrid: {L} layers not divisible by period {k}"
+        G = L // k
+        ssm_p = SSM.ssm_init(
+            ks[2], cfg.d_model, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, layers=L,
+            dtype=dt)
+        blocks["ssm"] = jax.tree_util.tree_map(
+            lambda x: x.reshape(G, k, *x.shape[1:]), ssm_p)
+        blocks["ln1"] = jnp.ones((G, k, cfg.d_model), dt)
+    elif cfg.family == "ssm":
+        blocks["ln1"] = jnp.ones((L, cfg.d_model), dt)
+        blocks["ssm"] = SSM.ssm_init(
+            ks[2], cfg.d_model, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, layers=L,
+            dtype=dt)
+    else:
+        raise ValueError(cfg.family)
+    p["blocks"] = blocks
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        p["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": A.attn_init(ks[4], cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.hd, layers=None,
+                                dtype=dt, qkv_bias=cfg.qkv_bias),
+            "mlp": mlp_init(ks[5], cfg.d_model, cfg.d_ff, layers=None,
+                            dtype=dt),
+        }
+    return p
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    """Hybrid: shared attention applications = group count."""
+    if cfg.family != "hybrid" or not cfg.hybrid_attn_every:
+        return 0
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def _full_kv(cfg: ModelConfig, attn_p: Dict, positions: jax.Array,
+             xn: jax.Array) -> Dict:
+    """K/V (post-rope) of the full sequence: prefill -> decode handoff."""
+    B, S, _ = xn.shape
+    k = xn @ attn_p["wk"]
+    v = xn @ attn_p["wv"]
+    if "bk" in attn_p:
+        k = k + attn_p["bk"]
+        v = v + attn_p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill forward
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            *, patches: Optional[jax.Array] = None, remat: bool = False,
+            want_cache: bool = False):
+    """Full-sequence forward. tokens: (B, S_txt). For vlm, ``patches``
+    (B, n_vis, D) are prepended (stub frontend per assignment). Returns
+    (logits, aux_loss, caches|None)."""
+    dt = _dt(cfg)
+    h = embed_apply(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert patches is not None
+        h = jnp.concatenate([patches.astype(dt), h], axis=1)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    h = constrain(h, "batch", None, None)
+    shared = params.get("shared")
+
+    def ssm_block(pl, h):
+        hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        y = SSM.ssm_apply(pl["ssm"], hn, state=cfg.ssm_state,
+                          conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                          headdim=cfg.ssm_headdim)
+        return h + y
+
+    def shared_block(h):
+        hn1 = rmsnorm(h, shared["ln1"], cfg.norm_eps)
+        a = A.attention(shared["attn"], hn1, positions,
+                        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                        causal=True, sliding_window=cfg.sliding_window)
+        h = h + a
+        m = mlp_apply(shared["mlp"],
+                      rmsnorm(h, shared["ln2"], cfg.norm_eps))
+        return h + m, hn1
+
+    def body(carry, pl):
+        h = carry["h"]
+        aux = carry["aux"]
+        cache = None
+        if cfg.family in ("dense", "vlm", "moe"):
+            hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+            a = A.attention(pl["attn"], hn, positions,
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                            causal=True, sliding_window=cfg.sliding_window)
+            h = h + a
+            h = constrain(h, "batch", None, None)
+            hn2 = rmsnorm(h, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, a_loss = MOE.moe_apply(
+                    pl["moe"], hn2, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    group_size=cfg.moe_group_size)
+                aux = aux + a_loss
+            else:
+                y = mlp_apply(pl["mlp"], hn2)
+            h = h + y
+            h = constrain(h, "batch", None, None)
+            if want_cache:
+                cache = _full_kv(cfg, pl["attn"], positions, hn)
+        elif cfg.slstm_every:                               # xLSTM group
+            def m_body(hh, pm):
+                hn = rmsnorm(hh, pm["m_ln"], cfg.norm_eps)
+                return hh + XL.mlstm_apply(pm["mlstm"], hn,
+                                           n_heads=cfg.n_heads), None
+            h, _ = jax.lax.scan(m_body, h, {"m_ln": pl["m_ln"],
+                                            "mlstm": pl["mlstm"]})
+            hn = rmsnorm(h, pl["s_ln"], cfg.norm_eps)
+            h = h + XL.slstm_apply(pl["slstm"], hn, n_heads=cfg.n_heads)
+        elif cfg.family == "hybrid":                        # zamba2 group
+            def s_body(hh, pm):
+                return ssm_block(pm, hh), None
+            h, _ = jax.lax.scan(s_body, h, {"ln1": pl["ln1"],
+                                            "ssm": pl["ssm"]})
+            h, hn1 = shared_block(h)
+            if want_cache:
+                cache = _full_kv(cfg, shared["attn"], positions, hn1)
+        else:                                               # plain ssm
+            h = ssm_block(pl, h)
+        return {"h": h, "aux": aux}, cache
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    carry0 = {"h": h, "aux": jnp.zeros((), jnp.float32)}
+    carry, caches = jax.lax.scan(body, carry0, params["blocks"])
+    hout = rmsnorm(carry["h"], params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(
+        params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        hout, transpose=True)
+    out_caches = None
+    if want_cache:
+        out_caches = {"layers": caches}
+    return logits, carry["aux"], out_caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token; stacked caches/states scanned with the layers)
+# ---------------------------------------------------------------------------
+def decode_state_spec(cfg: ModelConfig, batch: int, window: int) -> Dict:
+    """ShapeDtypeStruct tree of the decode state."""
+    dt = _dt(cfg)
+    L = cfg.n_layers
+    f = jax.ShapeDtypeStruct
+
+    def stack(spec, n=L):
+        return jax.tree_util.tree_map(
+            lambda s: f((n, *s.shape), s.dtype), spec)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        W = min(window, cfg.sliding_window) if cfg.sliding_window else window
+        return {"layers": stack(A.cache_spec(batch, W, cfg.n_kv_heads,
+                                             cfg.hd, dt))}
+    if cfg.slstm_every:             # xLSTM groups: (G, k-1, ...) + (G, ...)
+        k = cfg.slstm_every
+        G = L // k
+        def stack2(spec):
+            return jax.tree_util.tree_map(
+                lambda s: f((G, k - 1, *s.shape), s.dtype), spec)
+        return {"layers": {
+            "mlstm": stack2(XL.mlstm_state_spec(batch, cfg.d_model,
+                                                n_heads=cfg.n_heads,
+                                                dtype=dt)),
+            "slstm": stack(XL.slstm_state_spec(batch, cfg.d_model,
+                                               n_heads=cfg.n_heads), n=G)}}
+    if cfg.family == "ssm":
+        return {"layers": stack(SSM.ssm_state_spec(
+            batch, cfg.d_model, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, dtype=dt))}
+    if cfg.family == "hybrid":
+        W = min(window, cfg.sliding_window) if cfg.sliding_window else window
+        k = cfg.hybrid_attn_every
+        G = L // k
+        def stack2(spec):
+            return jax.tree_util.tree_map(
+                lambda s: f((G, k, *s.shape), s.dtype), spec)
+        return {"layers": {
+            "ssm": stack2(SSM.ssm_state_spec(
+                batch, cfg.d_model, state=cfg.ssm_state, conv=cfg.ssm_conv,
+                expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, dtype=dt)),
+            "shared": stack(A.cache_spec(batch, W, cfg.n_kv_heads,
+                                         cfg.hd, dt), n=G)}}
+    raise ValueError(cfg.family)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, window: int) -> Dict:
+    spec = decode_state_spec(cfg, batch, window)
+    return jax.tree_util.tree_map(
+        lambda s: (jnp.full(s.shape, -1, s.dtype)
+                   if s.dtype == jnp.int32 else jnp.zeros(s.shape, s.dtype)),
+        spec)
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: Dict,
+                token: jax.Array, t: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+    """One new token. token: (B,) int32; t: (B,) absolute positions."""
+    h = embed_apply(params["embed"], token[:, None])           # (B,1,D)
+    shared = params.get("shared")
+
+    def ssm_decode(pl, h, st):
+        hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        y, ns = SSM.ssm_decode_step(
+            pl["ssm"], hn, st, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim)
+        return h + y, ns
+
+    def body(h, x):
+        pl = x["_p"]
+        st = x["_state"]
+        if cfg.family in ("dense", "vlm", "moe"):
+            hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
+            a, new_st = A.decode_attention(
+                pl["attn"], hn, t, st, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window)
+            h = h + a
+            hn2 = rmsnorm(h, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = MOE.moe_apply(pl["moe"], hn2, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     group_size=cfg.moe_group_size)
+            else:
+                y = mlp_apply(pl["mlp"], hn2)
+            return h + y, new_st
+
+        if cfg.slstm_every:                                 # xLSTM group
+            def m_body(hh, xm):
+                hn = rmsnorm(hh, xm["m_ln"], cfg.norm_eps)
+                y, ns = XL.mlstm_decode_step(xm["mlstm"], hn, xm["st"],
+                                             n_heads=cfg.n_heads)
+                return hh + y, ns
+            h, new_m = jax.lax.scan(
+                m_body, h, {"m_ln": pl["m_ln"], "mlstm": pl["mlstm"],
+                            "st": st["mlstm"]})
+            hn = rmsnorm(h, pl["s_ln"], cfg.norm_eps)
+            y, new_s = XL.slstm_decode_step(pl["slstm"], hn, st["slstm"],
+                                            n_heads=cfg.n_heads)
+            return h + y, {"mlstm": new_m, "slstm": new_s}
+
+        if cfg.family == "hybrid":                          # zamba2 group
+            def s_body(hh, xm):
+                return ssm_decode({"ln1": xm["ln1"], "ssm": xm["ssm"]},
+                                  hh, xm["st"])
+            h, new_ssm = jax.lax.scan(
+                s_body, h, {"ln1": pl["ln1"], "ssm": pl["ssm"],
+                            "st": st["ssm"]})
+            a_out, new_kv = A.decode_attention(
+                shared["attn"], rmsnorm(h, shared["ln1"], cfg.norm_eps),
+                t, st["shared"], n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window)
+            h = h + a_out
+            m = mlp_apply(shared["mlp"],
+                          rmsnorm(h, shared["ln2"], cfg.norm_eps))
+            return h + m, {"ssm": new_ssm, "shared": new_kv}
+
+        return ssm_decode(pl, h, st)                        # plain ssm
+
+    xs = {"_p": params["blocks"], "_state": state["layers"]}
+    h, new_layer_states = jax.lax.scan(body, h, xs)
+    hout = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(
+        params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        hout, transpose=True)[:, 0]
+    return logits, {"layers": new_layer_states}

@@ -1,0 +1,266 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential) — arXiv:2405.04517, TPU-adapted.
+
+mLSTM is linear-attention-like: C_t = f_t C_{t-1} + i_t v_t k_t^T with
+exponential gating stabilized in log space (m_t running max). The chunkwise
+form (intra-chunk dense matmuls + inter-chunk carry) matches the Mamba2 SSD
+structure and is MXU-friendly; the GPU reference's warp-parallel scan does
+not transfer (DESIGN.md §2).
+
+sLSTM has a true sequential recurrence (hidden-to-hidden); it is evaluated
+with lax.scan over time — the paper's design point (used in 1-in-k layers).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, d_model: int, *, n_heads: int, layers: Optional[int],
+               dtype, proj_factor: float = 2.0) -> Dict:
+    d_in = int(proj_factor * d_model)
+    hd = d_in // n_heads
+    ks = jax.random.split(key, 7)
+    lead = () if layers is None else (layers,)
+    return {
+        "up": dense_init(ks[0], d_model, 2 * d_in, layers=layers,
+                         dtype=dtype),
+        "wq": dense_init(ks[1], d_in, d_in, layers=layers, dtype=dtype),
+        "wk": dense_init(ks[2], d_in, d_in, layers=layers, dtype=dtype),
+        "wv": dense_init(ks[3], d_in, d_in, layers=layers, dtype=dtype),
+        "wi": dense_init(ks[4], d_in, n_heads, layers=layers,
+                         dtype=jnp.float32, scale=0.02),
+        "wf": dense_init(ks[5], d_in, n_heads, layers=layers,
+                         dtype=jnp.float32, scale=0.02),
+        "fb": jnp.full((*lead, n_heads), 3.0, jnp.float32),
+        "norm_w": jnp.ones((*lead, d_in), dtype),
+        "down": dense_init(ks[6], d_in, d_model, layers=layers, dtype=dtype),
+    }
+
+
+def mlstm_apply(p: Dict, u: jax.Array, *, n_heads: int,
+                chunk: int = 256) -> jax.Array:
+    """Chunkwise-parallel mLSTM. u: (B,S,D)."""
+    B, S, D = u.shape
+    d_in = p["wq"].shape[-1]
+    hd = d_in // n_heads
+    h, z = jnp.split(u @ p["up"], 2, axis=-1)                  # (B,S,d_in)
+    q = (h @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (h @ p["wk"]).reshape(B, S, n_heads, hd) / math.sqrt(hd)
+    v = (h @ p["wv"]).reshape(B, S, n_heads, hd)
+    logi = (h.astype(jnp.float32) @ p["wi"])                   # (B,S,nh)
+    logf = jax.nn.log_sigmoid(h.astype(jnp.float32) @ p["wf"] + p["fb"])
+
+    # chunkwise-parallel, ONE chunk at a time (sequential scan over
+    # chunks = the Pallas kernel's sequential grid dim); (c x c) tensors
+    # exist for a single chunk only
+    nchunk = max(1, math.ceil(S / chunk))
+    pad = nchunk * chunk - S
+    def padc(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+    qc = padc(q).reshape(B, nchunk, chunk, n_heads, hd).transpose(
+        1, 0, 2, 3, 4)
+    kc = padc(k).reshape(B, nchunk, chunk, n_heads, hd).transpose(
+        1, 0, 2, 3, 4)
+    vc = padc(v).reshape(B, nchunk, chunk, n_heads, hd).transpose(
+        1, 0, 2, 3, 4)
+    ic = padc(logi).reshape(B, nchunk, chunk, n_heads).transpose(1, 0, 2, 3)
+    fc = padc(logf).reshape(B, nchunk, chunk, n_heads).transpose(1, 0, 2, 3)
+
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+
+    def body(carry, xs):
+        C_prev, n_prev = carry                          # (B,nh,k,p),(B,nh,k)
+        q_i, k_i, v_i, i_i, f_i = xs
+        q_i = q_i.astype(jnp.float32)
+        k_i = k_i.astype(jnp.float32)
+        v_i = v_i.astype(jnp.float32)
+        lf = jnp.cumsum(f_i, axis=1)                    # (B,c,nh)
+        seg = lf[:, :, None, :] - lf[:, None, :, :]     # (B,c,c,nh)
+        logD = jnp.where(causal, seg + i_i[:, None, :, :], -1e30)
+        m_intra = jnp.max(logD, axis=2)                 # (B,c,nh)
+        m = jnp.maximum(m_intra, lf)                    # stabilizer
+        Dmat = jnp.exp(logD - m[:, :, None, :])
+        QK = jnp.einsum("bthk,bshk->btsh", q_i, k_i)    # (B,t,s,nh)
+        W = QK * Dmat                                   # (B,t,s,nh)
+        y_intra = jnp.einsum("btsh,bshp->bthp", W, v_i)
+        den_intra = jnp.sum(W, axis=2)                  # (B,t,nh)
+        w_init = jnp.exp(lf - m)                        # (B,t,nh)
+        y_inter = jnp.einsum("bthk,bhkp->bthp",
+                             q_i * w_init[..., None], C_prev)
+        den_inter = jnp.einsum("bthk,bhk->bth",
+                               q_i * w_init[..., None], n_prev)
+        num = y_intra + y_inter
+        den = den_intra + den_inter
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        y_c = num / den                                 # (B,c,nh,hd)
+        # carry update
+        decay_to_end = jnp.exp(lf[:, -1:, :] - lf + i_i)
+        C_new = (jnp.exp(lf[:, -1, :])[..., None, None] * C_prev
+                 + jnp.einsum("bch,bchk,bchp->bhkp", decay_to_end, k_i,
+                              v_i))
+        n_new = (jnp.exp(lf[:, -1, :])[..., None] * n_prev
+                 + jnp.einsum("bch,bchk->bhk", decay_to_end, k_i))
+        return (C_new, n_new), y_c
+
+    C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    _, yc = jax.lax.scan(jax.checkpoint(body), (C0, n0),
+                         (qc, kc, vc, ic, fc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(
+        B, nchunk * chunk, n_heads, hd)[:, :S]
+    y = y.reshape(B, S, d_in)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["down"]
+
+
+def mlstm_state_spec(batch: int, d_model: int, *, n_heads: int, dtype,
+                     proj_factor: float = 2.0) -> Dict:
+    d_in = int(proj_factor * d_model)
+    hd = d_in // n_heads
+    f = jax.ShapeDtypeStruct
+    return {"C": f((batch, n_heads, hd, hd), jnp.float32),
+            "n": f((batch, n_heads, hd), jnp.float32),
+            "m": f((batch, n_heads), jnp.float32)}
+
+
+def mlstm_init_state(batch: int, d_model: int, *, n_heads: int, dtype,
+                     proj_factor: float = 2.0) -> Dict:
+    d_in = int(proj_factor * d_model)
+    hd = d_in // n_heads
+    return {"C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32)}
+
+
+def mlstm_decode_step(p: Dict, u: jax.Array, st: Dict, *,
+                      n_heads: int) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step (O(1) state). u: (B,1,D)."""
+    B, S, D = u.shape
+    d_in = p["wq"].shape[-1]
+    hd = d_in // n_heads
+    h, z = jnp.split(u @ p["up"], 2, axis=-1)
+    q = (h @ p["wq"]).reshape(B, n_heads, hd).astype(jnp.float32)
+    k = ((h @ p["wk"]).reshape(B, n_heads, hd)
+         / math.sqrt(hd)).astype(jnp.float32)
+    v = (h @ p["wv"]).reshape(B, n_heads, hd).astype(jnp.float32)
+    logi = (h.astype(jnp.float32) @ p["wi"])[:, 0]             # (B,nh)
+    logf = jax.nn.log_sigmoid(
+        h.astype(jnp.float32) @ p["wf"] + p["fb"])[:, 0]
+    m_new = jnp.maximum(logf + st["m"], logi)
+    C = (jnp.exp(logf + st["m"] - m_new)[..., None, None] * st["C"]
+         + jnp.exp(logi - m_new)[..., None, None]
+         * jnp.einsum("bhk,bhp->bhkp", k, v))
+    n = (jnp.exp(logf + st["m"] - m_new)[..., None] * st["n"]
+         + jnp.exp(logi - m_new)[..., None] * k)
+    num = jnp.einsum("bhk,bhkp->bhp", q, C)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(B, 1, d_in)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["down"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, d_model: int, *, n_heads: int, layers: Optional[int],
+               dtype) -> Dict:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    lead = () if layers is None else (layers,)
+    # 4 gates (i, f, z, o), input + recurrent (block-diagonal per head)
+    return {
+        "wx": dense_init(ks[0], d_model, 4 * d_model, layers=layers,
+                         dtype=dtype),
+        "wr": (jax.random.normal(ks[1], (*lead, n_heads, hd, 4 * hd),
+                                 jnp.float32)
+               / math.sqrt(hd)).astype(dtype),
+        "b": jnp.zeros((*lead, 4 * d_model), jnp.float32),
+        "norm_w": jnp.ones((*lead, d_model), dtype),
+        "down": dense_init(ks[2], d_model, d_model, layers=layers,
+                           dtype=dtype),
+    }
+
+
+def slstm_apply(p: Dict, u: jax.Array, *, n_heads: int) -> jax.Array:
+    """Sequential sLSTM over time (lax.scan). u: (B,S,D)."""
+    B, S, D = u.shape
+    hd = D // n_heads
+    gx = (u @ p["wx"] + p["b"].astype(u.dtype))                # (B,S,4D)
+    gx = gx.reshape(B, S, n_heads, 4 * hd).astype(jnp.float32)
+
+    def step(carry, g_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,hdg->bhg", h, p["wr"].astype(jnp.float32))
+        g = g_t + rec                                          # (B,nh,4hd)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c_new = f * c + i * jnp.tanh(gz)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    zeros = jnp.zeros((B, n_heads, hd), jnp.float32)
+    m0 = jnp.full((B, n_heads, hd), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (zeros, zeros, m0, zeros),
+                         gx.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    return y.astype(u.dtype) @ p["down"]
+
+
+def slstm_state_spec(batch: int, d_model: int, *, n_heads: int) -> Dict:
+    hd = d_model // n_heads
+    f = jax.ShapeDtypeStruct
+    return {"c": f((batch, n_heads, hd), jnp.float32),
+            "n": f((batch, n_heads, hd), jnp.float32),
+            "m": f((batch, n_heads, hd), jnp.float32),
+            "h": f((batch, n_heads, hd), jnp.float32)}
+
+
+def slstm_init_state(batch: int, d_model: int, *, n_heads: int) -> Dict:
+    hd = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full_like(z, -1e30), "h": z}
+
+
+def slstm_decode_step(p: Dict, u: jax.Array, st: Dict, *,
+                      n_heads: int) -> Tuple[jax.Array, Dict]:
+    B, S, D = u.shape
+    hd = D // n_heads
+    g_t = ((u @ p["wx"] + p["b"].astype(u.dtype))
+           .reshape(B, n_heads, 4 * hd).astype(jnp.float32))
+    rec = jnp.einsum("bhd,hdg->bhg", st["h"],
+                     p["wr"].astype(jnp.float32))
+    g = g_t + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + st["m"], gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(logf + st["m"] - m_new)
+    c_new = f * st["c"] + i * jnp.tanh(gz)
+    n_new = f * st["n"] + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    y = h_new.reshape(B, 1, D)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    return (y.astype(u.dtype) @ p["down"],
+            {"c": c_new, "n": n_new, "m": m_new, "h": h_new})

@@ -1,0 +1,92 @@
+"""AdamW with cosine schedule and global-norm clipping, pytree-native.
+
+Optimizer moments mirror the parameter tree, so ZeRO-1 sharding is free:
+the moments inherit each parameter's NamedSharding (launch/train wires
+``param_shardings`` into the opt-state in_shardings).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Dict
+    nu: Dict
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+
+    def init(self, params) -> OptState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(f32, params),
+                        nu=jax.tree_util.tree_map(f32, params))
+
+    def update(self, grads, state: OptState, params
+               ) -> Tuple[Dict, OptState, Dict]:
+        step = state.step + 1
+        lr = cosine_schedule(self.lr, self.warmup, self.total_steps)(step)
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g * scale.astype(g.dtype), grads)
+
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * g32
+            v_new = self.b2 * v + (1 - self.b2) * g32 * g32
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:      # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m_new, v_new)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v), \
+            {"lr": lr, "grad_norm": gnorm}

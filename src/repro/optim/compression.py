@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod sync: int8 quantization with error
+feedback (EF-SGD style).
+
+At multi-pod scale the pod axis crosses DCN-class links (an order of
+magnitude slower than ICI), so the gradient all-reduce over "pod" is the
+step's long pole. Compressing to int8 with per-tensor scale cuts those
+bytes 2x vs bf16 (4x vs f32); the quantization error is carried in a
+residual accumulator and re-injected next step (error feedback), which
+keeps SGD/Adam convergence (Karimireddy et al. 2019).
+
+Usage: wrap the cross-pod reduction only — the intra-pod reduction stays
+full precision:
+
+    comp = Int8Compressor()
+    g_pod, state = comp.compress(grads, state)        # int8 + scales
+    g_pod = psum over "pod" of dequantized             (2x fewer DCN bytes)
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Dict      # error-feedback accumulator, mirrors grads
+
+
+def init_ef_state(grads) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress(grads, state: EFState) -> Tuple[Dict, Dict, EFState]:
+    """-> (q_tree int8, scale_tree, new_state). Error feedback: the
+    un-transmitted remainder is carried to the next step."""
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, state.residual)
+    qs = jax.tree_util.tree_map(_quant, corrected)
+    q_tree = jax.tree_util.tree_map(lambda t: t[0], qs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    s_tree = jax.tree_util.tree_map(lambda t: t[1], qs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    residual = jax.tree_util.tree_map(
+        lambda c, q, s: c - _dequant(q, s), corrected, q_tree, s_tree)
+    return q_tree, s_tree, EFState(residual=residual)
+
+
+def decompress(q_tree, s_tree, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda q, s: _dequant(q, s).astype(dtype), q_tree, s_tree)
+
+
+def compressed_bytes(grads) -> Tuple[int, int]:
+    """(full f32 bytes, compressed int8+scale bytes) for reporting."""
+    full = sum(g.size * 4 for g in jax.tree_util.tree_leaves(grads))
+    comp = sum(g.size + 4 for g in jax.tree_util.tree_leaves(grads))
+    return full, comp

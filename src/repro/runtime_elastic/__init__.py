@@ -1,0 +1,3 @@
+from .membership import ElasticController, WorkerEvent
+
+__all__ = ["ElasticController", "WorkerEvent"]

@@ -1,0 +1,134 @@
+"""Batched serving engine: prefill -> decode with KV-cache handoff.
+
+Continuous-batching-lite: a fixed decode batch; finished slots are refilled
+by prefilling queued requests and splicing their cache into the slot —
+the serving analogue of the phaser's eager participant insertion (a new
+request joins the active batch at the next step boundary; no running
+request is disturbed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import ModelAPI
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelAPI, params, *, batch: int = 4,
+                 window: int = 256):
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.batch = batch
+        self.window = window
+        self.state = api.init_decode_state(batch, window)
+        self.slot_req: List[Optional[Request]] = [None] * batch
+        self.slot_pos = np.zeros((batch,), np.int32)
+        self.queue: List[Request] = []
+        # no donation: _admit snapshots the pre-prefill state for splicing
+        self._decode = jax.jit(api.decode_fn)
+        # per-leaf batch dim: the dim whose size changes with the batch
+        # (needed to splice a newly-prefilled slot into the live state
+        # without touching other slots)
+        s1 = api.decode_state_spec(batch, window)
+        s2 = api.decode_state_spec(batch + 1, window)
+        self._bdim = jax.tree_util.tree_map(
+            lambda a, b: next(i for i, (x, y)
+                              in enumerate(zip(a.shape, b.shape))
+                              if x != y), s1, s2)
+
+    def _splice_slot(self, old_state, new_state, slot: int):
+        """Keep ``new_state`` only at ``slot``; other slots keep ``old``
+        (admitting a request must not disturb running ones — recurrent
+        states would otherwise be corrupted by the admit steps)."""
+        def f(o, n, d):
+            idx = jnp.arange(o.shape[d])
+            shape = [1] * o.ndim
+            shape[d] = -1
+            return jnp.where((idx == slot).reshape(shape), n, o)
+        return jax.tree_util.tree_map(f, old_state, new_state, self._bdim)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Eager insertion: fill free slots from the queue by prefilling
+        the prompt token-by-token into the slot's cache region."""
+        for slot in range(self.batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # prefill via decode steps, then splice only this slot's state
+            # back (simple and correct for every family; the bulk prefill
+            # path is exercised by prefill_fn in the dryrun cells)
+            old_state = self.state
+            token_b = np.zeros((self.batch,), np.int32)
+            logits = None
+            for t, tok in enumerate(req.prompt):
+                token_b[slot] = tok
+                logits, self.state = self._decode(
+                    self.params, self.state,
+                    {"token": jnp.asarray(token_b),
+                     "t": jnp.asarray(self._pos_with(slot, t))})
+            self.state = self._splice_slot(old_state, self.state, slot)
+            req.out.append(int(jnp.argmax(logits[slot])))
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slot_req[slot] = None
+
+    def _pos_with(self, slot: int, t: int) -> np.ndarray:
+        pos = self.slot_pos.copy()
+        pos[slot] = t
+        return pos
+
+    # -------------------------------------------------------------- serve
+    def step(self) -> int:
+        """One decode step over the live batch; returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        token_b = np.zeros((self.batch,), np.int32)
+        for i in active:
+            r = self.slot_req[i]
+            token_b[i] = r.out[-1] if r.out else r.prompt[-1]
+        logits, self.state = self._decode(
+            self.params, self.state,
+            {"token": jnp.asarray(token_b),
+             "t": jnp.asarray(self.slot_pos)})
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            r = self.slot_req[i]
+            r.out.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.slot_req[i] = None     # slot freed -> next _admit fills
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        seen: set = set()
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return done

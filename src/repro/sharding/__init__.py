@@ -1,0 +1,5 @@
+from .rules import (ShardingRules, constrain, current_rules, param_specs,
+                    use_rules)
+
+__all__ = ["ShardingRules", "constrain", "current_rules", "param_specs",
+           "use_rules"]

@@ -1,0 +1,111 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axes;
+rules map logical axes to mesh axes per architecture/policy.
+
+Model code calls ``constrain(x, "batch", "seq", "embed")``. Under an active
+``use_rules(...)`` context the logical names resolve to mesh axes and a
+``with_sharding_constraint`` is emitted; with no context (single-device
+smoke tests) it is a no-op — the same model code runs everywhere.
+
+Parameter shardings are derived from the *pytree paths* of the parameter
+tree by pattern rules (``param_specs``), so the model definition carries no
+distribution logic at all.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Entry = Tuple[str, Optional[Tuple[str, ...]]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names -> mesh axis (or tuple of axes, or None)."""
+
+    mesh: Optional[Mesh] = None
+    logical: Dict[str, object] = field(default_factory=dict)
+    # path-pattern -> tuple of logical axis names (one per tensor dim);
+    # first match wins; unmatched params are fully replicated.
+    params: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = ()
+
+    def resolve(self, *names: Optional[str]) -> P:
+        axes = []
+        for n in names:
+            if n is None:
+                axes.append(None)
+            else:
+                axes.append(self.logical.get(n))
+        return P(*axes)
+
+    def spec_for_path(self, path: str,
+                      ndim: int) -> P:
+        for pat, lnames in self.params:
+            if re.search(pat, path):
+                assert len(lnames) <= ndim, \
+                    f"rule {pat} has {len(lnames)} axes, param {path} " \
+                    f"has {ndim} dims"
+                if len(lnames) < ndim:
+                    # extra LEADING dims are stack dims (group scans add a
+                    # second one); they are never sharded
+                    lnames = (None,) * (ndim - len(lnames)) + tuple(lnames)
+                return self.resolve(*lnames)
+        return P()
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.resolve(*logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, rules: ShardingRules):
+    """PartitionSpec tree matching ``params`` via the path rules."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: rules.spec_for_path(_path_str(path), x.ndim),
+        params)
+
+
+def param_shardings(params, rules: ShardingRules):
+    specs = param_specs(params, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,77 @@
+"""Training loop: phaser-coordinated, fault-tolerant, checkpointable.
+
+The control plane is a DistPhaser over the (simulated) worker group: every
+step is one phaser phase — workers signal when their step (gradient
+contribution) completes; the phase advances when all live signalers have
+signaled. Elastic events map onto the paper's protocol exactly
+(runtime_elastic.membership): joins are eager at the next phase boundary,
+schedule re-derivation is lazy, failures are deletions.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data import SyntheticLM
+from ..models.registry import ModelAPI
+from ..optim import AdamW
+from .step import build_train_step
+
+
+@dataclass
+class TrainLoop:
+    api: ModelAPI
+    opt: AdamW
+    data: SyntheticLM
+    ckpt: Optional[CheckpointManager] = None
+    ckpt_every: int = 50
+    remat: bool = False
+    microbatches: int = 1
+    log_every: int = 10
+    metrics_log: List[Dict] = field(default_factory=list)
+
+    def run(self, steps: int, *, params=None, opt_state=None,
+            resume: bool = False, on_step: Optional[Callable] = None):
+        ts = build_train_step(self.api, self.opt, rules=None,
+                              remat=self.remat,
+                              microbatches=self.microbatches, donate=False)
+        start = 0
+        if params is None:
+            params = self.api.init_params(jax.random.key(0))
+        if opt_state is None:
+            opt_state = self.opt.init(params)
+        if resume and self.ckpt is not None and self.ckpt.latest_step():
+            tpl = {"params": params, "opt": opt_state._asdict()}
+            start, tree, extra = self.ckpt.restore(tpl)
+            params = tree["params"]
+            from ..optim import OptState
+            opt_state = OptState(**tree["opt"])
+            if "data" in extra:
+                self.data.load_state_dict(extra["data"])
+
+        for step in range(start, steps):
+            batch = next(self.data)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            params, opt_state, metrics = ts.jitted(params, opt_state,
+                                                   batch)
+            if step % self.log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["dt"] = time.time() - t0
+                self.metrics_log.append(m)
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, params, opt_state,
+                               extra={"data": self.data.state_dict()})
+            if on_step is not None:
+                on_step(step, params, metrics)
+        if self.ckpt is not None:
+            self.ckpt.save(steps, params, opt_state,
+                           extra={"data": self.data.state_dict()})
+            self.ckpt.wait()
+        return params, opt_state

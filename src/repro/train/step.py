@@ -1,0 +1,151 @@
+"""Train-step builder: loss + grad + AdamW update, with optional gradient
+accumulation (microbatching) and remat, distributed via NamedShardings
+derived from the sharding policy. The gradient cross-replica reduction is
+performed by XLA from the shardings (baseline) — the phaser-coordinated
+explicit schedules (core/collective.py) are exercised by the shard_map
+path in runtime_elastic / examples and compared in benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.registry import ModelAPI
+from ..optim import AdamW, OptState
+from ..sharding import ShardingRules, param_specs, use_rules
+from ..sharding.policies import batch_specs
+
+
+@dataclass
+class TrainStep:
+    """A lowered/compilable train step plus its shardings."""
+
+    fn: Callable                      # (params, opt, batch) -> (p, o, m)
+    jitted: Any
+    param_sh: Any
+    opt_sh: Any
+    batch_sh: Any
+
+    def lower(self, param_spec, opt_spec, batch_spec):
+        return self.jitted.lower(param_spec, opt_spec, batch_spec)
+
+
+def build_train_step(api: ModelAPI, opt: AdamW, *,
+                     rules: Optional[ShardingRules] = None,
+                     remat: bool = True,
+                     microbatches: int = 1,
+                     donate: bool = True) -> TrainStep:
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        with use_rules(rules):
+            return api.loss_fn(params, batch, remat=remat)
+
+    def step(params, opt_state: OptState, batch):
+        if microbatches > 1:
+            def mb(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(microbatches,
+                                        x.shape[0] // microbatches,
+                                        *x.shape[1:]), b)
+            batches = mb(batch)
+
+            def acc_fn(acc, b):
+                (l, m), g = jax.value_and_grad(loss_fn,
+                                               has_aux=True)(params, b)
+                acc_g, acc_l = acc
+                return (jax.tree_util.tree_map(jnp.add, acc_g, g),
+                        acc_l + l), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_fn, (zero, jnp.zeros((), jnp.float32)), batches)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om}
+
+    param_sh = opt_sh = batch_sh = None
+    if rules is not None and rules.mesh is not None:
+        pspec = api.param_spec()
+        specs = param_specs(pspec, rules)
+        named = lambda s: NamedSharding(rules.mesh, s)
+        param_sh = jax.tree_util.tree_map(named, specs,
+                                          is_leaf=lambda x: isinstance(x, P))
+        opt_sh = OptState(step=named(P()), mu=param_sh, nu=param_sh)
+        dummy_batch = api.input_specs(
+            ShapeConfig("x", 8, 8, "train"))
+        bspecs = batch_specs(rules, dummy_batch)
+        batch_sh = jax.tree_util.tree_map(
+            named, bspecs, is_leaf=lambda x: isinstance(x, P))
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+    else:
+        jitted = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    return TrainStep(fn=step, jitted=jitted, param_sh=param_sh,
+                     opt_sh=opt_sh, batch_sh=batch_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode) — same builder pattern
+# ---------------------------------------------------------------------------
+def build_prefill_step(api: ModelAPI, *,
+                       rules: Optional[ShardingRules] = None):
+    def step(params, batch):
+        with use_rules(rules):
+            return api.prefill_fn(params, batch)
+    if rules is not None and rules.mesh is not None:
+        pspec = api.param_spec()
+        named = lambda s: NamedSharding(rules.mesh, s)
+        param_sh = jax.tree_util.tree_map(
+            named, param_specs(pspec, rules),
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(step, in_shardings=(param_sh, None)), param_sh
+    return jax.jit(step), None
+
+
+def build_decode_step(api: ModelAPI, *,
+                      rules: Optional[ShardingRules] = None,
+                      batch: int = 1, window: int = 2048,
+                      split_k: bool = False):
+    from ..sharding.policies import decode_state_specs
+
+    def step(params, state, b):
+        with use_rules(rules):
+            return api.decode_fn(params, state, b)
+
+    if rules is not None and rules.mesh is not None:
+        from ..sharding.policies import axis_size
+        mesh = rules.mesh
+        named = lambda s: NamedSharding(mesh, s)
+        param_sh = jax.tree_util.tree_map(
+            named, param_specs(api.param_spec(), rules),
+            is_leaf=lambda x: isinstance(x, P))
+        st_spec = api.decode_state_spec(batch, window)
+        st_sh = jax.tree_util.tree_map(
+            named, decode_state_specs(rules, api.cfg, st_spec, mesh,
+                                      batch=batch, split_k=split_k),
+            is_leaf=lambda x: isinstance(x, P))
+        dp = rules.logical["batch"]
+        bspec = dp if batch % axis_size(mesh, dp) == 0 else None
+        b_sh = {"token": named(P(bspec)), "t": named(P(bspec))}
+        jitted = jax.jit(step, in_shardings=(param_sh, st_sh, b_sh),
+                         out_shardings=(None, st_sh),
+                         donate_argnums=(1,))
+        return jitted, (param_sh, st_sh, b_sh)
+    return jax.jit(step, donate_argnums=(1,)), None

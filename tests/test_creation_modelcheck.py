@@ -1,0 +1,129 @@
+"""Tests for recursive-doubling creation and the model checker."""
+import math
+
+import pytest
+
+from repro.core import modelcheck as mc
+from repro.core.creation import recursive_doubling_build, verify_creation
+from repro.core.phaser import DistPhaser
+from repro.core.skiplist import SkipList
+
+
+# -- creation ---------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 13, 16, 33, 64])
+def test_creation_converges(n):
+    stats = verify_creation(n)
+    lg = math.ceil(math.log2(n)) if n > 1 else 0
+    assert stats.rounds <= lg + 2           # fold/unfold adds at most 2
+    assert stats.messages <= 2 * n * (lg + 2)
+
+
+def test_creation_all_ranks_identical():
+    locals_, _ = recursive_doubling_build(list(range(17)), seed=4)
+    edges = {r: sl.collection_edges() for r, sl in locals_.items()}
+    first = edges[0]
+    assert all(e == first for e in edges.values())
+
+
+# -- model checker ----------------------------------------------------------
+def test_checker_eager_insert_no_violations():
+    res = mc.check_decomposed(mc.scenario_eager_insert(3, signals=1),
+                              max_states=50_000)
+    for s in res:
+        assert not s.truncated
+        assert s.violations == [], s.focus
+        assert s.quiescent >= 1
+
+
+def test_checker_delete_no_violations():
+    res = mc.check_decomposed(mc.scenario_delete(4), max_states=50_000)
+    for s in res:
+        assert s.violations == [], s.focus
+
+
+def test_checker_insert_delete_no_violations():
+    res = mc.check_decomposed(mc.scenario_insert_delete(3),
+                              max_states=100_000)
+    for s in res:
+        assert s.violations == [], s.focus
+
+
+def test_checker_double_insert_no_violations():
+    res = mc.check_decomposed(mc.scenario_double_insert(3),
+                              max_states=100_000)
+    for s in res:
+        assert s.violations == [], s.focus
+
+
+def test_full_exploration_small_clean():
+    s = mc.check_full(mc.scenario_eager_insert(2, signals=1),
+                      max_states=100_000)
+    assert not s.truncated
+    assert s.violations == []
+
+
+def test_decomposition_is_cheaper_than_full():
+    """The paper's Table-1 motivation: joint exploration blows up,
+    per-message-class exploration stays small."""
+    full = mc.check_full(mc.scenario_eager_insert(3, signals=2),
+                         max_states=50_000)
+    dec = mc.check_decomposed(mc.scenario_eager_insert(3, signals=2),
+                              max_states=50_000)
+    dec_total = sum(s.states for s in dec)
+    assert full.states > 10 * dec_total, (full.states, dec_total)
+
+
+def test_checker_detects_injected_bug(monkeypatch):
+    """Mutation test: revert the SCSL re-parent to fire-and-forget (the
+    historical bug the CHILD_ADD/CHILD_ADD_ACK handshake fixes) and
+    confirm the checker reports a violation. Without the handshake a node
+    can hand its open interval to a parent that already closed those
+    phases, silently breaking the closing-report chain to the head; a
+    concurrent insert then anchors a registration against the dead chain
+    and the head releases the phase with the +1 delta still in flight."""
+    from repro.core import phaser as phx
+    from repro.core import messages as M
+    from repro.core.phaser import SNSL
+
+    orig = phx.PhaserActor._reparent
+
+    def buggy(self, st, new_parent, effective):
+        if st.lid == SNSL:
+            return orig(self, st, new_parent, effective)
+        # BUG: immediate switch, no grant handshake
+        iv = st.adv_open_iv()
+        if iv is None:
+            return
+        old = iv[2]
+        if old == new_parent:
+            return
+        switch = max(effective, st.closed + 1, iv[0])
+        end = st.adv_close(switch)
+        self._send(old, M.CHILD_DEL(self.rank, old, from_phase=end,
+                                    lid=st.lid))
+        st.adv_open(end, new_parent)
+        self._send(new_parent, M.CHILD_ADD(self.rank, new_parent,
+                                           from_phase=end, lid=st.lid))
+
+    def buggy_child_add(self, m):
+        st = self.st(m.lid)
+        child = m.child if m.child is not None else m.src
+        st.book_add(child, m.from_phase)  # BUG: no grant clamping, no ACK
+        if st.lid == SNSL:
+            rel = self.head_released if self.is_head else st.released
+            if rel >= 0:
+                self._send(child, M.ADV(self.rank, child, phase=rel,
+                                        lid=SNSL))
+        elif self.is_head:
+            self._try_release_head()
+        else:
+            self._try_close_sc()
+
+    monkeypatch.setattr(phx.PhaserActor, "_reparent", buggy)
+    monkeypatch.setattr(phx.PhaserActor, "_on_CHILD_ADD", buggy_child_add)
+    found = []
+    for cls in [("TUS",), ("SIG",), ("UNL", "UNL_ACK", "DEREG")]:
+        res = mc.check(mc.scenario_insert_delete(3), cls,
+                       max_states=50_000)
+        found += res.violations
+    assert found, "checker failed to catch the injected bug"

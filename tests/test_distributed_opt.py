@@ -1,0 +1,72 @@
+"""Gradient compression (error feedback) + straggler policy tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (compress, compressed_bytes,
+                                     decompress, init_ef_state)
+from repro.runtime_elastic import ElasticController
+
+
+def test_int8_roundtrip_accuracy():
+    g = {"w": jax.random.normal(jax.random.key(0), (256, 64)) * 0.01,
+         "b": jax.random.normal(jax.random.key(1), (64,)) * 0.1}
+    st = init_ef_state(g)
+    q, s, st = compress(g, st)
+    back = decompress(q, s)
+    for k in g:
+        rel = float(jnp.max(jnp.abs(back[k] - g[k]))
+                    / jnp.max(jnp.abs(g[k])))
+        assert rel < 0.02, (k, rel)   # <=1/127 + rounding
+
+
+def test_error_feedback_conserves_mass():
+    """Sum of transmitted + residual == sum of raw gradients over steps
+    (nothing silently lost)."""
+    key = jax.random.key(2)
+    g_total = jnp.zeros((128,))
+    sent_total = jnp.zeros((128,))
+    st = init_ef_state({"w": g_total})
+    for i in range(20):
+        key, sub = jax.random.split(key)
+        g = {"w": jax.random.normal(sub, (128,)) * 1e-3}
+        g_total = g_total + g["w"]
+        q, s, st = compress(g, st)
+        sent_total = sent_total + decompress(q, s)["w"]
+    drift = sent_total + st.residual["w"] - g_total
+    np.testing.assert_allclose(np.asarray(drift), 0.0, atol=1e-5)
+
+
+def test_compression_ratio():
+    g = {"w": jnp.zeros((1024, 1024))}
+    full, comp = compressed_bytes(g)
+    assert full / comp > 3.9
+
+
+def test_straggler_policy_evicts_persistent():
+    c = ElasticController(4, seed=0)
+    for step in range(5):
+        c.step_barrier(step)
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0}   # 3 is 10x median
+        evicted = c.record_step_times(step, times)
+        if step < 2:
+            assert evicted == []
+        if evicted:
+            assert evicted == [3]
+            break
+    assert 3 not in c.live
+    # phases keep completing without the evicted worker
+    before = c.ph.released()
+    assert c.step_barrier(99) == before + 1
+    kinds = [e.kind for e in c.events]
+    assert kinds.count("straggle") == 3 and "fail" in kinds
+
+
+def test_straggler_policy_forgives_transient():
+    c = ElasticController(4, seed=0)
+    for step in range(6):
+        c.step_barrier(step)
+        slow = 3 if step % 2 == 0 else 1     # alternating — never 3 strikes
+        times = {w: (5.0 if w == slow else 1.0) for w in range(4)}
+        c.record_step_times(step, times)
+    assert c.live == {0, 1, 2, 3}

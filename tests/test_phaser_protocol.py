@@ -1,0 +1,195 @@
+"""Behavioural tests for the distributed-phaser protocol (control plane)."""
+import random
+
+import pytest
+
+from repro.core.phaser import (DistPhaser, SIG_MODE, SIG_WAIT, WAIT_MODE,
+                               SCSL, SNSL)
+from repro.core.runtime import FifoScheduler, RandomScheduler
+from repro.core.skiplist import HEAD
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def test_basic_phases():
+    ph = DistPhaser(8, seed=1)
+    for k in range(5):
+        assert ph.next() == k
+    ph.check_quiescent_invariants()
+    # every waiter caught up
+    for r in range(8):
+        assert ph.released(r) == 4
+
+
+def test_modes_sig_only_wait_only():
+    modes = {0: SIG_MODE, 1: WAIT_MODE, 2: SIG_WAIT, 3: SIG_WAIT}
+    ph = DistPhaser(4, modes=modes, seed=3)
+    rel = ph.next()                      # signalers: 0, 2, 3
+    assert rel == 0
+    assert ph.released(1) == 0           # wait-only task is notified
+
+
+def test_no_premature_release():
+    ph = DistPhaser(4, seed=2)
+    for r in (0, 1, 2):
+        ph.signal(r)
+    ph.run()
+    assert ph.released() == -1           # 3 hasn't signaled
+    ph.signal(3)
+    ph.run()
+    assert ph.released() == 0
+
+
+def test_split_phase_pipelining():
+    """Fuzzy barrier: a task may run several signals ahead."""
+    ph = DistPhaser(3, seed=5)
+    for _ in range(4):
+        ph.signal(0)                     # task 0 races ahead 4 phases
+    ph.run()
+    assert ph.released() == -1
+    for _ in range(4):
+        ph.signal(1)
+        ph.signal(2)
+    ph.run()
+    assert ph.released() == 3
+
+
+def test_dynamic_add_participates_next_phase():
+    ph = DistPhaser(3, seed=7)
+    ph.next()
+    ph.async_add(0, 99)
+    ph.run()
+    a = ph.actors[99]
+    assert a.sc.joined and a.sn.joined
+    assert a.sc.first_phase == 1
+    # now phase 1 needs all four signals
+    for r in (0, 1, 2):
+        ph.signal(r)
+    ph.run()
+    assert ph.released() == 0
+    ph.signal(99)
+    ph.run()
+    assert ph.released() == 1
+    ph.check_quiescent_invariants()
+
+
+def test_add_signals_before_join_complete():
+    """Pre-join signals are buffered and applied to the task's first phase."""
+    ph = DistPhaser(2, seed=11)
+    ph.async_add(0, 50)
+    ph.signal(50)                        # insert still in flight
+    ph.signal(0)
+    ph.signal(1)
+    ph.run()
+    assert ph.released() == 0
+    ph.check_quiescent_invariants()
+
+
+def test_drop_reduces_expectation():
+    ph = DistPhaser(4, seed=13)
+    ph.drop(2)
+    for r in (0, 1, 3):
+        ph.signal(r)
+    ph.run()
+    assert ph.released() == 0
+    ph.check_quiescent_invariants()
+    assert ph.actors[2].sc.departed
+
+
+def test_drop_tall_node_preserves_lanes():
+    # drop the tallest participant: lanes must re-link around it
+    ph = DistPhaser(16, seed=17)
+    tallest = max(range(16), key=lambda r: ph.actors[r].sc.height)
+    ph.drop(tallest)
+    ph.run()
+    ph.check_quiescent_invariants()
+    rest = [r for r in range(16) if r != tallest]
+    for r in rest:
+        ph.signal(r)
+    ph.run()
+    assert ph.released() == 0
+
+
+def test_many_phases_after_churn():
+    ph = DistPhaser(6, seed=19)
+    ph.next()
+    ph.async_add(1, 100)
+    ph.async_add(2, 101)
+    ph.run()
+    ph.drop(0)
+    ph.run()
+    members = [r for r in (1, 2, 3, 4, 5, 100, 101)]
+    for k in range(1, 6):
+        for r in members:
+            ph.signal(r)
+        ph.run()
+        assert ph.released() == k
+    ph.check_quiescent_invariants()
+
+
+def test_insertion_matches_oracle_topology():
+    """After add + promotion quiescence, the distributed links equal the
+    sequential oracle built over the same key set."""
+    ph = DistPhaser(8, seed=23)
+    ph.async_add(3, 64)
+    ph.run()
+    oracle = ph.oracle(list(range(8)) + [64])
+    for k in list(range(8)) + [64]:
+        st = ph.actors[k].st(SCSL)
+        node = oracle.nodes[k]
+        assert st.height == node.height, k
+        assert st.nxt == node.nxt, k
+        assert st.prv == node.prv, k
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_churn_stress(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 8)
+    ph = DistPhaser(n, seed=seed)
+    next_id, alive = 100, set(range(n))
+    for rnd in range(5):
+        op = rng.random()
+        if op < 0.4 and len(alive) > 1:
+            parent = rng.choice(sorted(alive))
+            ph.async_add(parent, next_id)
+            alive.add(next_id)
+            next_id += 1
+        elif op < 0.6 and len(alive) > 2:
+            victim = rng.choice(sorted(alive))
+            ph.drop(victim)
+            alive.discard(victim)
+        for r in sorted(alive):
+            a = ph.actors[r]
+            if a.sc.member and not a.sc.dropping and not a.pending_drop:
+                ph.signal(r)
+        ph.run(RandomScheduler(seed * 31 + rnd))
+    ph.check_quiescent_invariants()
+
+
+def test_signal_critical_path_logarithmic():
+    depths = {}
+    for n in (8, 32, 128, 512):
+        ph = DistPhaser(n, seed=1)
+        ph.net.reset_stats()
+        for r in range(n):
+            ph.signal(r)
+        ph.run()
+        assert ph.released() == 0
+        depths[n] = ph.net.max_depth
+    assert depths[512] <= depths[8] + 40   # additive growth, not multiplicative
+    assert depths[512] <= 60
+
+
+if HAVE_HYP:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 10), st.integers(0, 1000), st.integers(1, 4))
+    def test_property_phases_advance(n, seed, phases):
+        ph = DistPhaser(n, seed=seed)
+        for k in range(phases):
+            assert ph.next(scheduler=RandomScheduler(seed + k)) == k
+        ph.check_quiescent_invariants()

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.phaser import SIG_WAIT, DistPhaser, HEAD
+from repro.core.runtime import RandomScheduler
+from repro.core.skiplist import SkipList, det_height
+from repro.data.synthetic import make_batch
+
+
+# ---------------------------------------------------------------- skiplist
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=60,
+                unique=True),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_skiplist_insert_integrity(keys, seed):
+    sl = SkipList.build(keys, seed=seed)
+    sl.check_integrity()
+    assert sl.keys() == sorted(keys)
+
+
+@given(st.lists(st.integers(0, 10_000), min_size=2, max_size=40,
+                unique=True),
+       st.data())
+@settings(max_examples=40, deadline=None)
+def test_skiplist_delete_integrity(keys, data):
+    sl = SkipList.build(keys, seed=7)
+    victims = data.draw(st.lists(st.sampled_from(keys), unique=True,
+                                 max_size=len(keys) - 1))
+    for v in victims:
+        sl.delete(v)
+        sl.check_integrity()
+    assert sl.keys() == sorted(set(keys) - set(victims))
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=100, deadline=None)
+def test_det_height_deterministic_and_bounded(key):
+    h1 = det_height(key, seed=3)
+    h2 = det_height(key, seed=3)
+    assert h1 == h2
+    assert 1 <= h1 <= 32
+
+
+def test_det_height_geometric_distribution():
+    hs = [det_height(k, seed=0) for k in range(20_000)]
+    frac_ge2 = sum(h >= 2 for h in hs) / len(hs)
+    frac_ge3 = sum(h >= 3 for h in hs) / len(hs)
+    assert abs(frac_ge2 - 0.5) < 0.02          # p = 0.5
+    assert abs(frac_ge3 - 0.25) < 0.02
+
+
+# ----------------------------------------------------------------- phaser
+@given(st.integers(2, 10), st.integers(0, 10_000), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_phases_advance_under_random_interleaving(n, seed, phases):
+    ph = DistPhaser(n, seed=seed % 7)
+    sched = RandomScheduler(seed)
+    for k in range(phases):
+        assert ph.next(scheduler=sched) == k
+    ph.check_quiescent_invariants()
+
+
+@given(st.integers(3, 8), st.integers(0, 1_000_000))
+@settings(max_examples=30, deadline=None)
+def test_churn_under_random_interleaving(n, seed):
+    """Add + drop + signal under adversarial delivery: the phase always
+    completes exactly, structure converges to the live set."""
+    rng = np.random.default_rng(seed)
+    ph = DistPhaser(n, seed=1)
+    sched = RandomScheduler(seed)
+    ph.async_add(int(rng.integers(0, n)), n + 5)
+    victim = int(rng.integers(1, n))
+    ph.drop(victim)
+    for r in range(n):
+        if r != victim:
+            ph.signal(r)
+    ph.signal(n + 5)
+    ph.run(sched)
+    assert ph.released() == 0
+    ph.check_quiescent_invariants()
+    # conservation: head holds no residue for released phases
+    head = ph.actors[HEAD]
+    assert not any(k <= head.head_released and v > 0
+                   for k, v in head.sc.buf.items())
+
+
+# ------------------------------------------------------------------- data
+@given(st.integers(0, 1000), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_synthetic_data_deterministic(seed, step):
+    a = make_batch(256, 4, 32, seed=seed, step=step)
+    b = make_batch(256, 4, 32, seed=seed, step=step)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert np.array_equal(a["targets"], b["targets"])
+    # next-token alignment
+    assert np.array_equal(a["tokens"][:, 1:], a["targets"][:, :-1])

@@ -1,0 +1,107 @@
+"""Unit + property tests for the augmented skip list (SCSL topology oracle)."""
+import math
+import random
+
+import pytest
+
+from repro.core.skiplist import HEAD, SkipList, det_height
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def test_det_height_distribution():
+    hs = [det_height(k, p=0.5) for k in range(20000)]
+    frac2 = sum(1 for h in hs if h >= 2) / len(hs)
+    frac3 = sum(1 for h in hs if h >= 3) / len(hs)
+    assert abs(frac2 - 0.5) < 0.02
+    assert abs(frac3 - 0.25) < 0.02
+    # determinism
+    assert hs[:100] == [det_height(k, p=0.5) for k in range(100)]
+
+
+def test_build_integrity_various_sizes():
+    for n in (0, 1, 2, 3, 7, 32, 100):
+        sl = SkipList.build(range(n))
+        sl.check_integrity()
+        assert sl.keys() == list(range(n))
+
+
+def test_insert_delete_roundtrip():
+    sl = SkipList.build(range(10))
+    sl.delete(4)
+    sl.check_integrity()
+    assert 4 not in sl.keys()
+    sl.insert(4)
+    sl.check_integrity()
+    assert sl.keys() == list(range(10))
+
+
+def test_eager_then_promote_matches_direct_insert():
+    for seed in range(5):
+        keys = list(range(0, 40, 2))
+        sl = SkipList.build(keys, seed=seed)
+        sl.insert_level0(13)
+        sl.check_integrity()
+        assert sl.nodes[13].height == 1
+        sl.promote(13)
+        sl.check_integrity()
+        direct = SkipList.build(keys + [13], seed=seed)
+        assert sl.collection_edges() == direct.collection_edges()
+
+
+def test_signal_edges_form_tree_to_head():
+    sl = SkipList.build(range(64))
+    for k in sl.keys():
+        # parent chain reaches HEAD without cycles
+        seen = set()
+        cur = k
+        while cur != HEAD:
+            assert cur not in seen
+            seen.add(cur)
+            cur = sl.parent(cur)
+
+
+def test_depth_logarithmic():
+    depths = []
+    for n in (16, 64, 256, 1024, 4096):
+        sl = SkipList.build(range(n))
+        depths.append(sl.max_depth())
+    # O(log n): depth grows by roughly a constant per 4x size
+    deltas = [b - a for a, b in zip(depths, depths[1:])]
+    assert max(deltas) <= 14, (depths, deltas)
+    assert depths[-1] <= 6 * math.log2(4096)
+
+
+def test_children_partition():
+    sl = SkipList.build(range(100))
+    all_children = []
+    for k in [HEAD] + sl.keys():
+        all_children.extend(sl.children(k))
+    # every non-head node is exactly one node's child
+    assert sorted(all_children) == sl.keys()
+
+
+if HAVE_HYP:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 1000), min_size=0, max_size=60,
+                    unique=True),
+           st.integers(0, 10))
+    def test_property_build_any_keyset(keys, seed):
+        sl = SkipList.build(keys, seed=seed)
+        sl.check_integrity()
+        assert sl.keys() == sorted(keys)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.sets(st.integers(0, 200), min_size=2, max_size=40),
+           st.data())
+    def test_property_delete_any(keys, data):
+        keys = sorted(keys)
+        sl = SkipList.build(keys)
+        victim = data.draw(st.sampled_from(keys))
+        sl.delete(victim)
+        sl.check_integrity()
+        assert sl.keys() == [k for k in keys if k != victim]

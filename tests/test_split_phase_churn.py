@@ -1,0 +1,109 @@
+"""Split-phase (fuzzy barrier) semantics + heavy-churn coverage."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.phaser import HEAD, SIG_MODE, SIG_WAIT, WAIT_MODE, DistPhaser
+from repro.core.runtime import FifoScheduler, RandomScheduler
+
+
+def test_split_phase_signal_early_wait_late():
+    """The phaser's split-phase property: a task that signaled phase k may
+    keep computing; the phase advances without it calling any wait — its
+    own release notification is observable whenever it looks."""
+    ph = DistPhaser(4, seed=0)
+    ph.signal(0)                       # task 0 signals EARLY...
+    ph.run(FifoScheduler())
+    assert ph.released() == -1         # others haven't signaled
+    for r in (1, 2, 3):
+        ph.signal(r)
+    ph.run(FifoScheduler())
+    assert ph.released() == 0          # phase advanced; 0 never 'waited'
+    # task 0 (conceptually still computing) observes the release lazily
+    assert ph.released(0) == 0
+    # and can already signal the NEXT phase before anyone else
+    ph.signal(0)
+    ph.run(FifoScheduler())
+    assert ph.released() == 0          # phase 1 incomplete: fuzzy overlap
+
+
+def test_signal_ahead_multiple_phases():
+    """A fast producer may run several phases ahead (bounded only by its
+    own work): counts for future phases buffer at the head."""
+    ph = DistPhaser(3, seed=2)
+    for _ in range(3):
+        ph.signal(0)                   # 0 races 3 phases ahead
+    ph.run(FifoScheduler())
+    assert ph.released() == -1
+    for k in range(3):
+        ph.signal(1)
+        ph.signal(2)
+        ph.run(FifoScheduler())
+        assert ph.released() == k      # each phase closes as laggards catch up
+
+
+def test_wait_only_members_get_all_releases():
+    modes = {0: SIG_MODE, 1: SIG_MODE, 2: WAIT_MODE, 3: SIG_WAIT}
+    ph = DistPhaser(4, modes=modes, seed=1)
+    for k in range(4):
+        ph.next()
+    a = ph.actors[2]
+    assert a.sn.released == 3          # pure waiter saw every release
+    assert not a.sc.member             # and never participated in SCSL
+
+
+@given(st.integers(0, 200), st.integers(4, 9), st.integers(1, 3),
+       st.integers(1, 2))
+@settings(max_examples=25, deadline=None)
+def test_multi_add_multi_drop_churn(seed, n, n_add, n_drop):
+    """C>1 concurrent insertions + multiple concurrent deletions under
+    adversarial delivery: phase completes exactly, structure converges."""
+    rng = np.random.default_rng(seed)
+    ph = DistPhaser(n, seed=seed % 5)
+    newbies = []
+    for i in range(n_add):
+        parent = int(rng.integers(0, n))
+        ph.async_add(parent, n + 10 + i)
+        newbies.append(n + 10 + i)
+    victims = list(rng.choice(np.arange(1, n), size=min(n_drop, n - 2),
+                              replace=False))
+    for v in victims:
+        ph.drop(int(v))
+    for r in range(n):
+        if r not in victims:
+            ph.signal(r)
+    for w in newbies:
+        ph.signal(w)
+    ph.run(RandomScheduler(seed), max_steps=500_000)
+    assert ph.released() == 0, (seed, n, n_add, victims)
+    ph.check_quiescent_invariants()
+    head = ph.actors[HEAD]
+    assert not any(k <= head.head_released and v > 0
+                   for k, v in head.sc.buf.items()), "P2 residual"
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_drop_then_rejoin_cycles(seed):
+    """Workers leave and new ones join over several phases (the elastic
+    training lifecycle), under adversarial delivery."""
+    rng = np.random.default_rng(seed)
+    ph = DistPhaser(5, seed=1)
+    sched = RandomScheduler(seed)
+    live = set(range(5))
+    next_id = 100
+    for k in range(4):
+        if k == 1:
+            v = int(sorted(live)[rng.integers(1, len(live))])
+            ph.drop(v)
+            live.discard(v)
+        if k == 2:
+            parent = min(live)
+            ph.async_add(parent, next_id)
+            live.add(next_id)
+            next_id += 1
+        for r in sorted(live):
+            ph.signal(r)
+        ph.run(sched, max_steps=500_000)
+        assert ph.released() == k, (seed, k)
+    ph.check_quiescent_invariants()

@@ -1,0 +1,147 @@
+"""Checkpoint manager, elastic controller, serve engine, train loop."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.collective import PhaserCollective
+from repro.data import SyntheticLM
+from repro.models.registry import get_api, get_config
+from repro.optim import AdamW, OptState
+from repro.runtime_elastic import ElasticController
+from repro.serve.engine import Request, ServeEngine
+from repro.train.loop import TrainLoop
+
+
+@pytest.fixture()
+def tmpdir():
+    d = tempfile.mkdtemp()
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmpdir):
+    cm = CheckpointManager(tmpdir, keep=2, async_write=False)
+    params = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))}
+    for step in (5, 10, 15):
+        cm.save(step, params, extra={"data": {"seed": 0, "step": step}})
+    assert cm.all_steps() == [10, 15]       # gc kept 2
+    step, tree, extra = cm.restore({"params": params})
+    assert step == 15
+    np.testing.assert_array_equal(tree["params"]["w"], params["w"])
+    assert extra["data"]["step"] == 15
+
+
+def test_checkpoint_async_then_wait(tmpdir):
+    cm = CheckpointManager(tmpdir, async_write=True)
+    params = {"w": jnp.zeros((4,))}
+    cm.save(1, params)
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_checkpoint_atomic_no_partial(tmpdir):
+    """A crash mid-write leaves only .tmp dirs, never a bad commit."""
+    cm = CheckpointManager(tmpdir, async_write=False)
+    cm.save(1, {"w": jnp.zeros((2,))})
+    # simulate garbage from a crashed writer
+    os.makedirs(os.path.join(tmpdir, ".tmp_step_000000002"))
+    assert cm.all_steps() == [1]
+
+
+# ---------------------------------------------------------------- elastic
+def test_elastic_join_leave_phases():
+    c = ElasticController(4, seed=0)
+    assert c.step_barrier(0) == 0
+    wid = c.join(1)
+    assert wid == 4 and len(c.live) == 5
+    assert c.step_barrier(1) == 1           # all 5 signal, phase advances
+    c.leave(2, wid, fail=True)
+    assert c.step_barrier(2) == 2           # completes without the failed
+    assert c.schedule_epoch >= 2            # lazy re-derivations landed
+    st = c.stats()
+    assert st["live"] == [0, 1, 2, 3]
+
+
+def test_elastic_collective_tracks_membership():
+    c = ElasticController(4, seed=0)
+    before = c.collective("phaser_scsl").stats()
+    c.join(0)
+    after = c.collective("phaser_scsl").stats()
+    assert after["messages"] > before["messages"]
+
+
+# ------------------------------------------------------------------ serve
+def test_serve_engine_drains_and_matches_sequential():
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.key(0))
+    prompt = np.array([1, 2, 3], np.int32)
+
+    # engine output for a single request
+    eng = ServeEngine(api, params, batch=2, window=32)
+    r = Request(rid=0, prompt=prompt, max_new=5)
+    eng.submit(r)
+    steps = 0
+    while not r.done and steps < 100:
+        eng.step()
+        steps += 1
+    assert r.done and len(r.out) == 5
+
+    # reference: manual decode with the SAME padded batch shape the
+    # engine uses (slot 1 idle) — identical shapes give bitwise-identical
+    # logits, so this validates the engine's slot/state bookkeeping
+    # rather than float tie-breaking under different reduction shapes
+    state = api.init_decode_state(2, 32)
+    for t, p in enumerate(prompt):
+        logits, state = api.decode_fn(params, state,
+                                      {"token": jnp.array([int(p), 0]),
+                                       "t": jnp.array([t, 0])})
+    want = []
+    tok = int(jnp.argmax(logits[0]))
+    pos = len(prompt)
+    for _ in range(5):
+        want.append(tok)
+        logits, state = api.decode_fn(params, state,
+                                      {"token": jnp.array([tok, 0]),
+                                       "t": jnp.array([pos, 0])})
+        tok = int(jnp.argmax(logits[0]))
+        pos += 1
+    assert r.out == want, (r.out, want)
+
+
+# ------------------------------------------------------------- train loop
+def test_train_resume_is_deterministic(tmpdir):
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+
+    def fresh_loop(d):
+        return TrainLoop(api=api, opt=AdamW(lr=1e-3, warmup=2,
+                                            total_steps=20),
+                         data=SyntheticLM(cfg.vocab_size, 4, 32, seed=3),
+                         ckpt=CheckpointManager(d, async_write=False),
+                         ckpt_every=5, log_every=1)
+
+    loopA = fresh_loop(tmpdir)
+    pA, _ = loopA.run(10)
+
+    # interrupted run: 7 steps (checkpoint at 5), then resume to 10
+    d2 = tempfile.mkdtemp()
+    try:
+        loopB = fresh_loop(d2)
+        loopB.run(7)
+        loopC = fresh_loop(d2)
+        pC, _ = loopC.run(10, resume=True)
+        for a, c in zip(jax.tree_util.tree_leaves(pA),
+                        jax.tree_util.tree_leaves(pC)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(c, np.float32),
+                                       rtol=1e-5, atol=1e-5)
+    finally:
+        shutil.rmtree(d2, ignore_errors=True)
