@@ -48,8 +48,14 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma list: complexity,modelcheck,collective,"
                          "kernel,roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke path: schedule-derivation benches only "
+                         "(complexity + collective tables; skips the "
+                         "model-check sweep, kernel timing and roofline)")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
+    if args.quick and want is None:
+        want = {"complexity", "collective"}
 
     from benchmarks import (collective_bench, complexity_bench,
                             kernel_bench, modelcheck_bench, roofline_bench)

@@ -1,77 +1,150 @@
 """Elastic fault-tolerant training driven by the distributed phaser.
 
-Demonstrates the paper's protocol as the coordination layer of a training
-run: workers join (eager insertion), fail (deletion), and the run
-checkpoints/restarts — all while the loss keeps going down.
+The paper's protocol is the coordination layer AND the data-plane
+scheduler of this run: every training step is one phaser phase; each
+live worker computes gradients on its own shard, and the gradients are
+synchronized by executing the *current epoch's compiled collective
+schedule* (derived from the deterministic skip-list oracle over the live
+keys). Membership churn — grow 4 -> 6 at step 20, shrink 6 -> 3 at step
+50 (one failure + two graceful leaves) — lands as epoch boundaries: the
+per-worker step is re-lowered for the new team size, a checkpoint makes
+the swap crash-consistent, and the schedule is re-derived and *verified*
+against both the live protocol actors' converged topology and a fresh
+oracle. The loss keeps going down through all of it.
 
   PYTHONPATH=src python examples/elastic_train.py
 """
-import os
 import shutil
 import tempfile
 
 import jax
+import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core.collective import PhaserCollective
-from repro.data import SyntheticLM
+from repro.data.synthetic import make_batch
 from repro.models.registry import get_api, get_config
-from repro.optim import AdamW
-from repro.runtime_elastic import ElasticController
-from repro.train.step import build_train_step
+from repro.optim import AdamW, OptState
+from repro.runtime_elastic import ElasticPhaserRuntime
+
+STEPS = 80
+BATCH, SEQ = 4, 64
 
 cfg = get_config("smollm-135m").reduced()
 api = get_api(cfg)
-opt = AdamW(lr=3e-3, warmup=10, total_steps=120)
-ts = build_train_step(api, opt, rules=None, remat=False, donate=False)
+opt = AdamW(lr=3e-3, warmup=10, total_steps=STEPS)
 
-ctrl = ElasticController(n_workers=4, seed=0)
+rt = ElasticPhaserRuntime(4, seed=0, kind="phaser_scsl")
 ckpt_dir = tempfile.mkdtemp(prefix="elastic_ckpt_")
 ckpt = CheckpointManager(ckpt_dir, async_write=False)
 
 params = api.init_params(jax.random.key(0))
 opt_state = opt.init(params)
-data = SyntheticLM(vocab=cfg.vocab_size, batch=8, seq=128, seed=0)
 
+
+# --- per-worker data-parallel step (re-lowered per epoch: the leading
+# worker axis is the epoch's team size, so churn re-traces it) ----------
+def build_worker_grads():
+    def one(p, b):
+        (l, _), g = jax.value_and_grad(api.loss_fn, has_aux=True)(p, b)
+        return l, g
+    return jax.jit(lambda p, bs: jax.vmap(lambda b: one(p, b))(bs))
+
+
+def worker_batches(live, step):
+    """Each live worker draws its own deterministic shard (seeded by its
+    phaser key, so a rejoining key would resume its own stream)."""
+    bs = [make_batch(cfg.vocab_size, BATCH, SEQ, seed=1000 + w, step=step)
+          for w in live]
+    return {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
+
+
+worker_grads = build_worker_grads()
 losses = []
-for step in range(120):
-    # ---- elastic events --------------------------------------------------
-    if step == 30:
-        wid = ctrl.join(step)                 # eager insertion
-        print(f"step {step}: worker {wid} JOINED "
-              f"(live={len(ctrl.live)}, lazy re-derivation queued)")
-    if step == 60:
-        victim = max(ctrl.live)
-        ctrl.leave(step, victim, fail=True)   # failure == deletion
-        print(f"step {step}: worker {victim} FAILED "
-              f"(live={len(ctrl.live)}; phase completes without it)")
-        # restart path: restore the latest checkpoint
+print(f"epoch 0: live={list(rt.epoch.live)} kind={rt.epoch.kind} "
+      f"schedule={rt.epoch.stats()}")
+
+for step in range(STEPS):
+    # ---- elastic events ---------------------------------------------------
+    if step == 20:                          # grow 4 -> 6: eager insertions
+        w1 = rt.request_join(step=step)
+        w2 = rt.request_join(step=step)
+        print(f"step {step}: workers {w1},{w2} JOINED "
+              f"(live={len(rt.live)}; schedule swap queued for boundary)")
+    if step == 50:                          # shrink 6 -> 3
+        victim = max(rt.live)
+        rt.request_leave(victim, fail=True, step=step)   # failure
+        leavers = sorted(rt.live)[-2:]
+        for w in leavers:
+            rt.request_leave(w, step=step)               # graceful
+        print(f"step {step}: worker {victim} FAILED, {leavers} left "
+              f"(live={sorted(rt.live)}; phase completes without them)")
+        # restart path: restore the latest checkpoint (crash-consistent
+        # with the epoch swap saved at the last boundary)
         tpl = {"params": params, "opt": opt_state._asdict()}
         s, tree, extra = ckpt.restore(tpl)
         params = tree["params"]
-        from repro.optim import OptState
         opt_state = OptState(**tree["opt"])
-        data.load_state_dict(extra["data"])
-        print(f"          restored checkpoint @ step {s} "
-              f"(data stream rewound deterministically)")
+        print(f"          restored checkpoint @ step {s}")
 
-    # ---- the step itself: one phaser phase --------------------------------
-    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
-    params, opt_state, metrics = ts.jitted(params, opt_state, batch)
-    released = ctrl.step_barrier(step)
-    losses.append(float(metrics["loss"]))
-    if step % 20 == 0:
-        sched = ctrl.collective("phaser_scsl").stats()
-        print(f"step {step:3d} phase {released:3d} "
-              f"loss {losses[-1]:.4f} live={len(ctrl.live)} "
-              f"scsl_rounds={sched['rounds']}")
-    if (step + 1) % 25 == 0:
-        ckpt.save(step + 1, params, opt_state,
-                  extra={"data": data.state_dict()})
+    # ---- one step == one phaser phase -------------------------------------
+    # The data plane runs the CURRENT epoch's compiled schedule: workers
+    # that joined eagerly this epoch contribute from the next boundary
+    # on; workers that left mid-epoch contribute zeros and the mean is
+    # re-scaled (the membership mask) — the phase still completes because
+    # their DEREG lowered the expectation.
+    team = list(rt.epoch.live)
+    alive = [w for w in team if w in rt.live]
+    assert alive, "entire epoch team departed before the boundary"
+    n_alive = len(alive)
+    batches = worker_batches(alive, step)
+    wlosses, grads = worker_grads(params, batches)
 
-print("\ncontroller:", ctrl.stats())
+    # sync through the epoch's schedule (exactly what lax.ppermute
+    # executes on a real mesh); departed ranks hold zeros
+    pc = rt.collective()
+    gi = {w: i for i, w in enumerate(alive)}
+    live_flats, unravel = {}, None
+    for w in alive:
+        f, unravel = jax.flatten_util.ravel_pytree(
+            jax.tree_util.tree_map(lambda g, i=gi[w]: g[i], grads))
+        live_flats[w] = np.asarray(f)
+    zero = np.zeros_like(next(iter(live_flats.values())))
+    flats = [live_flats.get(w, zero) for w in team]
+    reduced = pc.simulate_allreduce(flats)
+    direct = sum(flats)
+    for r in reduced:                      # every rank got the exact sum
+        np.testing.assert_allclose(r, direct, rtol=1e-6, atol=1e-6)
+    mean_grads = unravel(jnp.asarray((reduced[0] / n_alive)
+                                     .astype(np.float32)))
+
+    params, opt_state, _ = opt.update(mean_grads, opt_state, params)
+    losses.append(float(jnp.mean(wlosses)))
+
+    before = rt.epoch.index
+    released = rt.advance(step=step)
+    if rt.epoch.index != before:
+        # epoch boundary: checkpoint, re-lower, verify against the oracle
+        ckpt.save(step + 1, params, opt_state)
+        worker_grads = build_worker_grads()
+        rt.verify_epoch()                  # protocol lanes == oracle ==
+        ep = rt.epoch                      # compiled schedule (asserts)
+        print(f"epoch {ep.index} @ phase {released}: live={list(ep.live)} "
+              f"kind={ep.kind} schedule={ep.stats()} — verified vs oracle")
+    if step % 10 == 0:
+        print(f"step {step:3d} phase {released:3d} loss {losses[-1]:.4f} "
+              f"live={n_alive} epoch={rt.epoch.index}")
+    if (step + 1) % 20 == 0:
+        ckpt.save(step + 1, params, opt_state)
+
+print("\ncontroller:", {k: v for k, v in rt.stats().items()
+                        if k != "messages"})
+assert len(rt.epochs) >= 3, "expected grow + shrink epochs"
+for ep in rt.epochs:
+    if ep.collective is not None:
+        assert ep.collective.matches_oracle(), ep.index
 assert losses[-1] < losses[0], "loss did not decrease through churn"
-print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across join+failure: OK")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across "
+      f"grow 4->6 / shrink 6->3: OK")
 shutil.rmtree(ckpt_dir, ignore_errors=True)

@@ -276,6 +276,13 @@ class PhaserCollective:
 
     ``kind``:
       xla_psum | phaser_scsl | recursive_doubling | halving_doubling
+
+    ``keys``: the participant keys of the phaser topology. Defaults to
+    ``range(n)`` (a fresh team); an elastic runtime passes the *live* key
+    set after churn, so the schedule is re-derived from the exact skip
+    list the protocol actors converged to (heights are a deterministic
+    function of the key, so survivors keep their lanes). Mesh rank i
+    executes the role of ``sorted(keys)[i]``.
     """
 
     n: int
@@ -283,18 +290,27 @@ class PhaserCollective:
     kind: str = "xla_psum"
     p: float = 0.5
     seed: int = 0
+    keys: Optional[Tuple[int, ...]] = None
     up: Optional[Schedule] = None
     down: Optional[Schedule] = None
     rd: Optional[Schedule] = None
 
     def __post_init__(self):
         assert self.kind in ALLREDUCE_KINDS, self.kind
+        if self.keys is None:
+            self.keys = tuple(range(self.n))
+        else:
+            self.keys = tuple(sorted(self.keys))
+        assert len(self.keys) == self.n, (self.n, self.keys)
         if self.kind == "phaser_scsl":
-            sl = SkipList.build(range(self.n), p=self.p, seed=self.seed)
-            self.up = scsl_reduce_schedule(sl, list(range(self.n)))
-            self.down = snsl_broadcast_schedule(sl, list(range(self.n)))
+            sl = SkipList.build(self.keys, p=self.p, seed=self.seed)
+            self.up = scsl_reduce_schedule(sl, list(self.keys))
+            self.down = snsl_broadcast_schedule(sl, list(self.keys))
         elif self.kind == "recursive_doubling":
             self.rd = recursive_doubling_schedule(self.n)
+        elif self.kind == "halving_doubling":
+            assert self.n & (self.n - 1) == 0, \
+                f"halving doubling needs power-of-2 n, got {self.n}"
 
     def all_reduce(self, x: jax.Array) -> jax.Array:
         if self.kind == "xla_psum":
@@ -321,3 +337,94 @@ class PhaserCollective:
             lg = int(math.log2(self.n))
             return {"rounds": 2 * lg, "messages": 2 * lg * self.n}
         return {"rounds": 1, "messages": self.n}
+
+    # --- host-side execution -----------------------------------------------
+    def simulate_allreduce(self, xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Execute the schedule on host numpy values, one per mesh rank.
+
+        This is the data plane of the *simulated* cluster (the same role
+        ``lax.ppermute`` plays on a real mesh): the elastic trainer uses
+        it to sync per-worker gradients through the exact per-epoch
+        schedule, and tests use it to prove every schedule computes the
+        same sum as a direct reduction.
+        """
+        assert len(xs) == self.n, (len(xs), self.n)
+        vals = [np.asarray(x, dtype=np.float64) for x in xs]
+        if self.kind == "xla_psum":
+            total = sum(vals)
+            return [total.copy() for _ in range(self.n)]
+        if self.kind == "phaser_scsl":
+            acc = [v.copy() for v in vals]
+            for pairs in self.up.rounds:        # reduce up the SCSL edges
+                incoming = {d: acc[s] for s, d in pairs}
+                acc = [acc[i] + incoming[i] if i in incoming else acc[i]
+                       for i in range(self.n)]
+            out = acc
+            for pairs in self.down.rounds:      # broadcast down the SNSL
+                incoming = {d: out[s] for s, d in pairs}
+                out = [incoming.get(i, out[i]) for i in range(self.n)]
+            return out
+        if self.kind == "recursive_doubling":
+            acc = [v.copy() for v in vals]
+            for pairs in self.rd.rounds:
+                incoming = {d: acc[s] for s, d in pairs}
+                acc = [acc[i] + incoming[i] for i in range(self.n)]
+            return acc
+        if self.kind == "halving_doubling":
+            # mirror halving_doubling_allreduce round for round:
+            # recursive-halving reduce-scatter, then doubling all-gather
+            n = self.n
+            shape = vals[0].shape
+            flat = [v.ravel() for v in vals]
+            orig = flat[0].size
+            pad = (-orig) % n
+            acc = [np.concatenate([f, np.zeros((pad,))]) if pad
+                   else f.copy() for f in flat]
+            width = acc[0].size
+            stride = n // 2
+            while stride >= 1:
+                half = width // 2
+                nxt = []
+                for i in range(n):
+                    j = i ^ stride
+                    keep_low = (i // stride) % 2 == 0
+                    keep = acc[i][:half] if keep_low else acc[i][half:]
+                    sent = (acc[j][half:] if (j // stride) % 2 == 0
+                            else acc[j][:half])
+                    nxt.append(keep + sent)
+                acc = nxt
+                width = half
+                stride //= 2
+            stride = 1
+            while stride < n:
+                nxt = []
+                for i in range(n):
+                    j = i ^ stride
+                    keep_low = (i // stride) % 2 == 0
+                    nxt.append(np.concatenate([acc[i], acc[j]]) if keep_low
+                               else np.concatenate([acc[j], acc[i]]))
+                acc = nxt
+                stride *= 2
+            return [a[:orig].reshape(shape) for a in acc]
+        raise ValueError(self.kind)
+
+    def schedule_fingerprint(self) -> Tuple:
+        """Hashable identity of the compiled schedule: changes exactly
+        when the topology (live keys / kind) changes — the re-lower key
+        for the elastic runtime's epoch swap."""
+        if self.kind == "phaser_scsl":
+            return (self.kind, self.keys, self.up.rounds, self.down.rounds)
+        if self.kind == "recursive_doubling":
+            return (self.kind, self.keys, self.rd.rounds)
+        return (self.kind, self.keys)
+
+    def matches_oracle(self) -> bool:
+        """Re-derive the schedule from a fresh deterministic skip-list
+        oracle over ``keys`` and compare structurally (the elastic
+        epoch-swap correctness check)."""
+        if self.kind != "phaser_scsl":
+            return True
+        sl = SkipList.build(self.keys, p=self.p, seed=self.seed)
+        return (self.up == scsl_reduce_schedule(sl, list(self.keys))
+                and self.down == snsl_broadcast_schedule(sl,
+                                                         list(self.keys)))

@@ -52,6 +52,10 @@ def main(argv=None):
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in "
           f"{steps} steps, {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
+    print(f"phase-gated batch membership: {eng.epoch} schedule swaps "
+          f"({len(eng.gate.epochs)} epochs) over "
+          f"{eng.gate.ph.released() + 1} phases, "
+          f"{len(eng.gate.events)} join/leave events")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {list(r.prompt)} -> {r.out}")
     return 0 if done == len(reqs) else 1

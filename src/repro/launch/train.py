@@ -5,6 +5,16 @@
 
 ``--reduced`` trains the family-reduced config on CPU (the end-to-end
 example path); full configs target real accelerators with the same code.
+
+Elastic mode attaches the phaser-epoch control plane
+(runtime_elastic.elastic_phaser) and drives membership churn from a
+schedule of events, e.g.:
+
+  ... --workers 4 --elastic "join@30,join@35,fail@60,leave@80"
+
+Each event is ``kind@step`` (kind: join | leave | fail; leave/fail may
+pin a worker with ``kind:wid@step``). The loop re-lowers its compiled
+step at every epoch boundary and prints the epoch log.
 """
 from __future__ import annotations
 
@@ -17,7 +27,30 @@ from ..checkpoint import CheckpointManager
 from ..data import SyntheticLM
 from ..models.registry import get_api, get_config
 from ..optim import AdamW
+from ..runtime_elastic import ElasticPhaserRuntime
 from ..train.loop import TrainLoop
+
+
+def parse_elastic(spec: str):
+    """'join@30,fail@60,leave:2@80' -> {30: [("join", None)], ...}."""
+    events = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "@" not in item:
+            raise ValueError(f"elastic event {item!r}: expected kind@step "
+                             "(e.g. join@30, leave:2@80)")
+        kind, step = item.split("@", 1)
+        wid = None
+        if ":" in kind:
+            kind, w = kind.split(":", 1)
+            wid = int(w)
+        if kind not in ("join", "leave", "fail"):
+            raise ValueError(f"elastic event kind {kind!r}: expected "
+                             "join | leave | fail")
+        events.setdefault(int(step), []).append((kind, wid))
+    return events
 
 
 def main(argv=None):
@@ -33,6 +66,14 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=4,
+                    help="initial elastic worker-group size")
+    ap.add_argument("--elastic", default=None,
+                    help='churn schedule, e.g. "join@30,fail@60"')
+    ap.add_argument("--sync-kind", default="phaser_scsl",
+                    choices=["phaser_scsl", "recursive_doubling",
+                             "halving_doubling", "xla_psum"],
+                    help="preferred per-epoch gradient-sync schedule")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,12 +85,28 @@ def main(argv=None):
     data = SyntheticLM(vocab=cfg.vocab_size, batch=args.batch,
                        seq=args.seq, seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    runtime = events = None
+    if args.elastic is not None:
+        runtime = ElasticPhaserRuntime(args.workers, seed=args.seed,
+                                       kind=args.sync_kind)
+        try:
+            events = parse_elastic(args.elastic)
+        except ValueError as e:
+            ap.error(str(e))
     loop = TrainLoop(api=api, opt=opt, data=data, ckpt=ckpt,
                      ckpt_every=args.ckpt_every,
-                     microbatches=args.microbatches)
-    loop.run(args.steps, resume=args.resume)
+                     microbatches=args.microbatches,
+                     runtime=runtime,
+                     elastic_events=events or {})
+    try:
+        loop.run(args.steps, resume=args.resume)
+    except ValueError as e:
+        print(f"# elastic schedule error: {e}")
+        return 2
     for m in loop.metrics_log:
         print(json.dumps(m))
+    for e in loop.epoch_log:
+        print(json.dumps({"epoch_boundary": e}))
     first = loop.metrics_log[0]["loss"]
     last = loop.metrics_log[-1]["loss"]
     print(f"# loss {first:.4f} -> {last:.4f} "

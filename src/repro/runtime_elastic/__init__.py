@@ -1,3 +1,5 @@
-from .membership import ElasticController, WorkerEvent
+from .elastic_phaser import ElasticPhaserRuntime, Epoch, WorkerEvent
+from .membership import ElasticController
 
-__all__ = ["ElasticController", "WorkerEvent"]
+__all__ = ["ElasticController", "ElasticPhaserRuntime", "Epoch",
+           "WorkerEvent"]

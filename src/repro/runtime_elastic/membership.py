@@ -1,97 +1,88 @@
 """Elastic membership: the paper's dynamic phaser protocol driving the
 data-plane worker group.
 
-The mapping (DESIGN.md §2):
+The mapping (DESIGN.md §2-3):
 
 * each data-parallel worker is a phaser participant in SIG_WAIT mode;
 * one training step == one phaser phase: a worker signals when its
   gradient contribution is ready; the optimizer step is released when the
   phase advances (all live signalers signaled);
-* JOIN  == paper's eager insertion: the joining worker is admitted at the
-  next phase boundary (its first_phase is assigned by the protocol) and
-  the membership mask flips — O(1) on the data plane. The topology-optimal
-  collective schedule is re-derived LAZILY (the paper's hand-over-hand
-  promotion): re-lowering happens in the background while training
-  continues on the masked schedule;
+* JOIN  == paper's eager insertion: the joining worker is admitted
+  immediately (its first_phase is assigned by the protocol) — O(1) on the
+  data plane. The topology-optimal collective schedule is re-derived
+  LAZILY at the next phase boundary (the paper's hand-over-hand
+  promotion, lifted to epoch granularity — see elastic_phaser.py);
 * LEAVE/FAIL == deletion: DEREG lowers the phase expectation so the phase
-  can still complete without the failed worker; its mask entry flips off;
+  can still complete without the failed worker;
 * STRAGGLER quorum == split-phase: with signal(), fast workers proceed
   into the next step's compute before wait()ing — the phaser's fuzzy
   barrier gives the slack window.
 
-The controller runs the *actual protocol actors* (core/phaser.py), so its
-decisions inherit the model-checked correctness properties.
+``ElasticController`` is the stable worker-group facade kept for existing
+callers; the epoch machinery itself lives in ``ElasticPhaserRuntime``
+(this class *is* one, plus a membership mask and the legacy naming).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..core.phaser import SIG_WAIT, DistPhaser
+from .elastic_phaser import ElasticPhaserRuntime, Epoch, WorkerEvent
 from ..core.collective import PhaserCollective
-from ..core.runtime import FifoScheduler
+
+__all__ = ["ElasticController", "ElasticPhaserRuntime", "Epoch",
+           "WorkerEvent"]
 
 
-@dataclass
-class WorkerEvent:
-    step: int
-    kind: str        # "join" | "leave" | "fail" | "straggle"
-    worker: int
-
-
-class ElasticController:
+class ElasticController(ElasticPhaserRuntime):
     """Host-side controller coordinating the worker group with a real
-    distributed-phaser instance."""
+    distributed-phaser instance (legacy facade over the epoch runtime)."""
 
-    def __init__(self, n_workers: int, *, seed: int = 0):
+    def __init__(self, n_workers: int, *, seed: int = 0,
+                 kind: str = "phaser_scsl"):
+        super().__init__(n_workers, seed=seed, kind=kind)
         self.n = n_workers
-        self.ph = DistPhaser(n_workers, seed=seed)
-        self.live: Set[int] = set(range(n_workers))
-        self.next_worker_id = n_workers
-        self.events: List[WorkerEvent] = []
         self.mask = np.ones((n_workers,), bool)
-        self.schedule_epoch = 0      # bumped when lazy re-derivation lands
-        self._pending_lazy = False
 
     # ------------------------------------------------------------ topology
-    def collective(self, kind: str = "phaser_scsl") -> PhaserCollective:
-        """Current-topology collective schedule for the data axis."""
-        return PhaserCollective(len(self.live), "data", kind=kind)
+    def collective(self, kind: Optional[str] = None) -> PhaserCollective:
+        """Current-epoch collective schedule for the data axis. Passing a
+        ``kind`` overrides the epoch's preferred schedule (derived over
+        the same live keys, with the same power-of-two fallback the
+        epoch machinery applies)."""
+        ep = self.epoch
+        kind = self._kind_for(len(ep.live), kind)
+        if kind == ep.kind:
+            return super().collective()
+        return PhaserCollective(len(ep.live), self.axis_name, kind=kind,
+                                seed=self.seed, keys=ep.live)
 
     def loss_scale(self) -> float:
         """Re-weighting when the live set shrank mid-epoch (masked mean)."""
         return self.mask.sum() / max(len(self.mask), 1)
 
     # -------------------------------------------------------------- events
-    def join(self, step: int, parent: Optional[int] = None) -> int:
-        """Eager admission of a new worker (paper Fig. 2)."""
-        wid = self.next_worker_id
-        self.next_worker_id += 1
-        parent = parent if parent is not None else min(self.live)
-        self.ph.async_add(parent, wid, SIG_WAIT)
-        self.ph.run(FifoScheduler())        # drive to quiescence
-        self.live.add(wid)
+    def request_join(self, parent: Optional[int] = None, *,
+                     step: Optional[int] = None, **kw) -> int:
+        wid = super().request_join(parent, step=step, **kw)
         self._grow_mask(wid)
         self.mask[wid] = True
-        self.events.append(WorkerEvent(step, "join", wid))
-        self._pending_lazy = True           # schedule re-derivation queued
         return wid
 
+    def request_leave(self, worker: int, *, fail: bool = False,
+                      step: Optional[int] = None) -> None:
+        super().request_leave(worker, fail=fail, step=step)
+        if worker < len(self.mask):
+            self.mask[worker] = False
+
+    def join(self, step: int, parent: Optional[int] = None) -> int:
+        """Eager admission of a new worker (paper Fig. 2)."""
+        return self.request_join(parent, step=step)
+
     def leave(self, step: int, worker: int, *, fail: bool = False) -> None:
-        """Deletion (graceful) or failure (detected by missed heartbeat):
-        either way the phaser DEREG lowers the expectation so the current
-        phase completes without the worker."""
-        assert worker in self.live
-        self.ph.drop(worker)
-        self.ph.run(FifoScheduler())
-        self.live.discard(worker)
-        self.mask[worker] = False
-        self.events.append(WorkerEvent(step, "fail" if fail else "leave",
-                                       worker))
-        self._pending_lazy = True
+        """Deletion (graceful) or failure (detected by missed heartbeat)."""
+        self.request_leave(worker, fail=fail, step=step)
 
     def _grow_mask(self, wid: int) -> None:
         if wid >= len(self.mask):
@@ -102,55 +93,17 @@ class ElasticController:
     # ------------------------------------------------------------ stepping
     def step_barrier(self, step: int,
                      signals: Optional[Dict[int, bool]] = None) -> int:
-        """One training-step phase: live workers signal, phase advances.
-        ``signals``: worker -> did it produce a gradient this step (False
-        simulates a straggler that still signals count-0 via split-phase
-        semantics; the phaser itself requires the signal, the QUORUM
-        decision is the caller's)."""
-        for w in sorted(self.live):
-            self.ph.signal(w)
-        self.ph.run(FifoScheduler())
-        released = self.ph.released()
-        # lazy re-derivation lands at a phase boundary
-        if self._pending_lazy:
-            self.schedule_epoch += 1
-            self._pending_lazy = False
-        return released
-
-    # -------------------------------------------------------- stragglers
-    def record_step_times(self, step: int, times: Dict[int, float], *,
-                          slack: float = 3.0,
-                          evict_after: int = 3) -> List[int]:
-        """Straggler policy on top of the split-phase slack: a worker
-        slower than ``slack``x the live median accumulates a strike;
-        ``evict_after`` consecutive strikes converts it to a deletion
-        (the phaser DEREG keeps the phase completing without it, exactly
-        the fail path). Returns workers evicted this step."""
-        if not hasattr(self, "_strikes"):
-            self._strikes: Dict[int, int] = {}
-        live_times = [times[w] for w in self.live if w in times]
-        if not live_times:
-            return []
-        med = sorted(live_times)[len(live_times) // 2]
-        evicted = []
-        for w in list(self.live):
-            t = times.get(w)
-            if t is not None and t > slack * med:
-                self._strikes[w] = self._strikes.get(w, 0) + 1
-                self.events.append(WorkerEvent(step, "straggle", w))
-                if self._strikes[w] >= evict_after and len(self.live) > 1:
-                    self.leave(step, w, fail=True)
-                    evicted.append(w)
-            else:
-                self._strikes[w] = 0
-        return evicted
+        """One training-step phase: live workers signal, phase advances,
+        pending membership changes land as a new epoch at the boundary."""
+        return self.advance(step=step)
 
     # ---------------------------------------------------------- inspection
+    @property
+    def schedule_epoch(self) -> int:
+        """Number of lazy schedule re-derivations that have landed."""
+        return self.epoch.index
+
     def stats(self) -> Dict:
-        return {
-            "live": sorted(self.live),
-            "phase": self.ph.released(),
-            "schedule_epoch": self.schedule_epoch,
-            "messages": dict(self.ph.net.sent),
-            "critical_path": self.ph.net.max_depth,
-        }
+        st = super().stats()
+        st["schedule_epoch"] = self.schedule_epoch
+        return st

@@ -1,10 +1,25 @@
 """Batched serving engine: prefill -> decode with KV-cache handoff.
 
-Continuous-batching-lite: a fixed decode batch; finished slots are refilled
-by prefilling queued requests and splicing their cache into the slot —
-the serving analogue of the phaser's eager participant insertion (a new
-request joins the active batch at the next step boundary; no running
-request is disturbed).
+Continuous-batching-lite with a **phase-gated** slot refill: the decode
+batch is a phaser team (DESIGN.md §3) — every decode step is one phase,
+each occupied slot is a participant, and batch-membership changes ride
+the same epoch mechanism as elastic training:
+
+* a request entering a free slot is a JOIN (the paper's eager insertion:
+  prefill + cache splice happen immediately, at the step boundary, and
+  no running request is disturbed);
+* a finished request is a LEAVE (deletion: the phase completes without
+  it and the slot is reclaimed);
+* the runtime's epoch index versions the batch composition — the swap is
+  observable only at phase boundaries, so a step never sees a
+  half-admitted batch.
+
+Correctness note (the bug this design fixed): anything handed to the
+async-dispatched jitted decode must be an immutable snapshot. Passing a
+live numpy buffer zero-copy and then mutating it in place (the next
+prefill token, ``slot_pos[i] += 1``) races the pending execution —
+flakily, since the window depends on dispatch latency. All device inputs
+are therefore fresh copies taken at the call boundary.
 """
 from __future__ import annotations
 
@@ -17,6 +32,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.registry import ModelAPI
+from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
 
 
 @dataclass
@@ -30,7 +46,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, api: ModelAPI, params, *, batch: int = 4,
-                 window: int = 256):
+                 window: int = 256, seed: int = 0):
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -40,6 +56,12 @@ class ServeEngine:
         self.slot_req: List[Optional[Request]] = [None] * batch
         self.slot_pos = np.zeros((batch,), np.int32)
         self.queue: List[Request] = []
+        # control plane: occupied slots are phaser participants; admission
+        # keys are monotone (a slot reused by a later request is a new
+        # participant — phaser keys are never recycled)
+        self.gate = ElasticPhaserRuntime(0, seed=seed, axis_name="slots")
+        self.slot_key: List[Optional[int]] = [None] * batch
+        self.finished: List[Request] = []
         # no donation: _admit snapshots the pre-prefill state for splicing
         self._decode = jax.jit(api.decode_fn)
         # per-leaf batch dim: the dim whose size changes with the batch
@@ -52,6 +74,12 @@ class ServeEngine:
                               in enumerate(zip(a.shape, b.shape))
                               if x != y), s1, s2)
 
+    @property
+    def epoch(self) -> int:
+        """Batch-membership epoch (bumps at the boundary after any
+        admit/retire, exactly like the training runtime)."""
+        return self.gate.epoch.index
+
     def _splice_slot(self, old_state, new_state, slot: int):
         """Keep ``new_state`` only at ``slot``; other slots keep ``old``
         (admitting a request must not disturb running ones — recurrent
@@ -63,13 +91,26 @@ class ServeEngine:
             return jnp.where((idx == slot).reshape(shape), n, o)
         return jax.tree_util.tree_map(f, old_state, new_state, self._bdim)
 
+    def _dispatch(self, token_b: np.ndarray, pos_b: np.ndarray):
+        """One jitted decode call. Inputs are SNAPSHOTTED into fresh
+        numpy buffers owned by this call: ``jnp.array``'s host-to-device
+        transfer may alias the source buffer and read it asynchronously,
+        so handing it a buffer the caller mutates right after dispatch
+        (the next prefill token, ``slot_pos[i] += 1``) races the pending
+        execution (see module docstring). A fresh copy is never mutated."""
+        return self._decode(
+            self.params, self.state,
+            {"token": jnp.asarray(np.array(token_b, dtype=np.int32)),
+             "t": jnp.asarray(np.array(pos_b, dtype=np.int32))})
+
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def _admit(self) -> None:
-        """Eager insertion: fill free slots from the queue by prefilling
-        the prompt token-by-token into the slot's cache region."""
+        """Phase-boundary refill: fill free slots from the queue (JOIN =
+        eager insertion) by prefilling the prompt token-by-token into the
+        slot's cache region."""
         for slot in range(self.batch):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
@@ -82,17 +123,24 @@ class ServeEngine:
             logits = None
             for t, tok in enumerate(req.prompt):
                 token_b[slot] = tok
-                logits, self.state = self._decode(
-                    self.params, self.state,
-                    {"token": jnp.asarray(token_b),
-                     "t": jnp.asarray(self._pos_with(slot, t))})
+                logits, self.state = self._dispatch(
+                    token_b, self._pos_with(slot, t))
             self.state = self._splice_slot(old_state, self.state, slot)
             req.out.append(int(jnp.argmax(logits[slot])))
+            self.slot_key[slot] = self.gate.request_join()
             self.slot_req[slot] = req
             self.slot_pos[slot] = len(req.prompt)
             if len(req.out) >= req.max_new:
                 req.done = True
-                self.slot_req[slot] = None
+                self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        """LEAVE: the finished request's participant deregisters; the
+        slot is reclaimed for the next boundary's refill."""
+        self.finished.append(self.slot_req[slot])
+        self.gate.request_leave(self.slot_key[slot])
+        self.slot_key[slot] = None
+        self.slot_req[slot] = None
 
     def _pos_with(self, slot: int, t: int) -> np.ndarray:
         pos = self.slot_pos.copy()
@@ -101,19 +149,23 @@ class ServeEngine:
 
     # -------------------------------------------------------------- serve
     def step(self) -> int:
-        """One decode step over the live batch; returns #active slots."""
+        """One decode step == one phase over the live batch; returns the
+        number of active slots. Membership changes (admits at the leading
+        boundary, retires at the trailing one) land as gate epochs."""
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
+            if self.gate.pending_churn:
+                # a request was admitted AND retired inside _admit (e.g.
+                # max_new reached at prefill): its join/leave must still
+                # land as an epoch at this boundary
+                self.gate.advance()
             return 0
         token_b = np.zeros((self.batch,), np.int32)
         for i in active:
             r = self.slot_req[i]
             token_b[i] = r.out[-1] if r.out else r.prompt[-1]
-        logits, self.state = self._decode(
-            self.params, self.state,
-            {"token": jnp.asarray(token_b),
-             "t": jnp.asarray(self.slot_pos)})
+        logits, self.state = self._dispatch(token_b, self.slot_pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:
             r = self.slot_req[i]
@@ -121,14 +173,18 @@ class ServeEngine:
             self.slot_pos[i] += 1
             if len(r.out) >= r.max_new:
                 r.done = True
-                self.slot_req[i] = None     # slot freed -> next _admit fills
+                self._retire(i)     # slot freed -> next boundary refills
+        # the step's phase: every live participant signals, the advance
+        # marks the boundary where this step's churn becomes the new epoch
+        self.gate.advance()
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
-        seen: set = set()
+        """Drive steps until queue and batch are empty; returns the
+        requests finished during the drain, in completion order."""
+        mark = len(self.finished)
         for _ in range(max_steps):
             n = self.step()
             if n == 0 and not self.queue:
                 break
-        return done
+        return self.finished[mark:]

@@ -4,8 +4,12 @@ The control plane is a DistPhaser over the (simulated) worker group: every
 step is one phaser phase — workers signal when their step (gradient
 contribution) completes; the phase advances when all live signalers have
 signaled. Elastic events map onto the paper's protocol exactly
-(runtime_elastic.membership): joins are eager at the next phase boundary,
-schedule re-derivation is lazy, failures are deletions.
+(runtime_elastic.elastic_phaser): joins are eager, schedule re-derivation
+lands lazily as a new epoch at the next phase boundary, failures are
+deletions. When an ``ElasticPhaserRuntime`` is attached, the loop
+re-lowers its compiled step at every epoch boundary (the schedule is part
+of the step's static identity) and saves a checkpoint first, so a crash
+mid-re-lower resumes into a consistent (params, epoch) pair.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ from ..checkpoint import CheckpointManager
 from ..data import SyntheticLM
 from ..models.registry import ModelAPI
 from ..optim import AdamW
+from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
 from .step import build_train_step
 
 
@@ -34,12 +39,56 @@ class TrainLoop:
     microbatches: int = 1
     log_every: int = 10
     metrics_log: List[Dict] = field(default_factory=list)
+    # --- elastic control plane (optional) --------------------------------
+    runtime: Optional[ElasticPhaserRuntime] = None
+    # step -> list of ("join", None) | ("leave", wid|None) | ("fail", wid|None)
+    elastic_events: Dict[int, List] = field(default_factory=dict)
+    epoch_log: List[Dict] = field(default_factory=list)
+
+    def _apply_elastic_events(self, step: int) -> None:
+        for kind, arg in self.elastic_events.get(step, []):
+            if kind == "join":
+                self.runtime.request_join(arg, step=step)
+                continue
+            live = self.runtime.live
+            if arg is None:
+                if not live:
+                    raise ValueError(f"elastic event {kind}@{step}: no "
+                                     "live workers left to remove")
+                wid = max(live)
+            elif arg not in live:
+                raise ValueError(f"elastic event {kind}:{arg}@{step}: "
+                                 f"worker {arg} is not live "
+                                 f"(live={sorted(live)})")
+            else:
+                wid = arg
+            self.runtime.request_leave(wid, fail=(kind == "fail"),
+                                       step=step)
+
+    def _replay_elastic_events(self, upto: int) -> None:
+        """Resume path: the runtime is reconstructed by replaying the
+        churn schedule through the real protocol up to the restored
+        step, so the live set and epoch index match the pre-crash run
+        (phase counters restart; they are not part of the checkpoint
+        contract). Only a fresh runtime is replayed — a pre-churned one
+        passed in by the caller is taken as already positioned."""
+        if self.runtime.events:
+            return
+        for s in sorted(k for k in self.elastic_events if k < upto):
+            self._apply_elastic_events(s)
+            self.runtime.advance(step=s)
+
+    def _build_step(self):
+        pc = (self.runtime.epoch.collective
+              if self.runtime is not None else None)
+        return build_train_step(self.api, self.opt, rules=None,
+                                remat=self.remat,
+                                microbatches=self.microbatches,
+                                donate=False, collective=pc)
 
     def run(self, steps: int, *, params=None, opt_state=None,
             resume: bool = False, on_step: Optional[Callable] = None):
-        ts = build_train_step(self.api, self.opt, rules=None,
-                              remat=self.remat,
-                              microbatches=self.microbatches, donate=False)
+        ts = self._build_step()
         start = 0
         if params is None:
             params = self.api.init_params(jax.random.key(0))
@@ -53,17 +102,43 @@ class TrainLoop:
             opt_state = OptState(**tree["opt"])
             if "data" in extra:
                 self.data.load_state_dict(extra["data"])
+            if self.runtime is not None:
+                self._replay_elastic_events(start)
+                ts = self._build_step()     # re-lower for the epoch
 
         for step in range(start, steps):
+            if self.runtime is not None:
+                self._apply_elastic_events(step)
             batch = next(self.data)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             t0 = time.time()
             params, opt_state, metrics = ts.jitted(params, opt_state,
                                                    batch)
+            if self.runtime is not None:
+                # the step is one phaser phase; churn requested above
+                # lands as a new epoch exactly at this boundary
+                before = self.runtime.epoch.index
+                released = self.runtime.advance(step=step)
+                ep = self.runtime.epoch
+                if ep.index != before:
+                    # checkpoint-consistent swap: persist, then re-lower
+                    if self.ckpt is not None:
+                        self.ckpt.save(step + 1, params, opt_state,
+                                       extra={"data":
+                                              self.data.state_dict()})
+                    ts = self._build_step()
+                    self.runtime.verify_epoch()
+                    self.epoch_log.append({
+                        "step": step, "phase": released,
+                        "epoch": ep.index, "live": list(ep.live),
+                        "kind": ep.kind, **ep.stats()})
             if step % self.log_every == 0 or step == steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
                 m["dt"] = time.time() - t0
+                if self.runtime is not None:
+                    m["epoch"] = self.runtime.epoch.index
+                    m["live"] = len(self.runtime.live)
                 self.metrics_log.append(m)
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save(step + 1, params, opt_state,

@@ -40,8 +40,21 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
                      rules: Optional[ShardingRules] = None,
                      remat: bool = True,
                      microbatches: int = 1,
-                     donate: bool = True) -> TrainStep:
+                     donate: bool = True,
+                     collective=None) -> TrainStep:
+    """``collective``: the elastic epoch's PhaserCollective. It is part
+    of the lowered step's *static identity* — re-building at an epoch
+    boundary re-lowers for the new team. On a single-process simulation
+    the schedule enters the step as static sync metadata in the metrics
+    (team size, rounds, messages); on a mesh the same hook is where the
+    schedule's all-reduce wraps the gradient reduction (ROADMAP)."""
     cfg = api.cfg
+    sync_meta = None
+    if collective is not None:
+        st = collective.stats()
+        sync_meta = {"team": collective.n,
+                     "sync_rounds": st["rounds"],
+                     "sync_messages": st["messages"]}
 
     def loss_fn(params, batch):
         with use_rules(rules):
@@ -75,7 +88,11 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
         new_params, new_opt, om = opt.update(grads, opt_state, params)
-        return new_params, new_opt, {**metrics, **om}
+        out = {**metrics, **om}
+        if sync_meta is not None:
+            out.update({k: jnp.asarray(v, jnp.float32)
+                        for k, v in sync_meta.items()})
+        return new_params, new_opt, out
 
     param_sh = opt_sh = batch_sh = None
     if rules is not None and rules.mesh is not None:

@@ -39,6 +39,7 @@ def _run_one(seed: int) -> None:
                    for k, v in h.sc.buf.items()), "P2 residual"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("block", range(10))
 def test_churn_stress_block(block):
     for seed in range(block * 25, (block + 1) * 25):

@@ -3,6 +3,11 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency (requirements-dev.txt); property tier "
+           "skipped where it is not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.phaser import SIG_WAIT, DistPhaser, HEAD

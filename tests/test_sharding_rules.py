@@ -17,9 +17,8 @@ from repro.sharding.rules import param_specs
 
 def mesh_stub():
     """An abstract 16x16 mesh (no devices needed for spec derivation)."""
-    import numpy as np
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return AbstractMesh((("data", 16), ("model", 16)))
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)

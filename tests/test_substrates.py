@@ -73,8 +73,14 @@ def test_elastic_collective_tracks_membership():
     c = ElasticController(4, seed=0)
     before = c.collective("phaser_scsl").stats()
     c.join(0)
+    # the swap is LAZY: the running epoch keeps its compiled schedule...
+    assert c.collective("phaser_scsl").stats() == before
+    # ...and the join lands as a new epoch at the next phase boundary
+    c.step_barrier(0)
     after = c.collective("phaser_scsl").stats()
     assert after["messages"] > before["messages"]
+    assert c.epoch.live == (0, 1, 2, 3, 4)
+    c.verify_epoch()
 
 
 # ------------------------------------------------------------------ serve
@@ -117,6 +123,30 @@ def test_serve_engine_drains_and_matches_sequential():
 
 
 # ------------------------------------------------------------- train loop
+def test_train_loop_elastic_relovers_at_epoch_boundaries(tmpdir):
+    from repro.runtime_elastic import ElasticPhaserRuntime
+
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+    rt = ElasticPhaserRuntime(4, seed=0)
+    loop = TrainLoop(api=api, opt=AdamW(lr=1e-3, warmup=2, total_steps=8),
+                     data=SyntheticLM(cfg.vocab_size, 4, 32, seed=3),
+                     ckpt=CheckpointManager(tmpdir, async_write=False),
+                     ckpt_every=100, log_every=1,
+                     runtime=rt,
+                     elastic_events={2: [("join", None)],
+                                     5: [("fail", None)]})
+    loop.run(8)
+    assert [e["epoch"] for e in loop.epoch_log] == [1, 2]
+    assert loop.epoch_log[0]["live"] == [0, 1, 2, 3, 4]
+    assert loop.epoch_log[1]["live"] == [0, 1, 2, 3]
+    assert rt.epoch.index == 2 and rt.ph.released() == 7
+    rt.verify_epoch()
+    # the boundary checkpoints made the swaps crash-consistent
+    assert loop.ckpt.all_steps()
+    assert all(np.isfinite(m["loss"]) for m in loop.metrics_log)
+
+
 def test_train_resume_is_deterministic(tmpdir):
     cfg = get_config("smollm-135m").reduced()
     api = get_api(cfg)
