@@ -1,78 +1,100 @@
-"""Elastic fault-tolerant training driven by the distributed phaser.
+"""Elastic fault-tolerant training on the device-resident collective
+execution engine.
 
 The paper's protocol is the coordination layer AND the data-plane
-scheduler of this run: every training step is one phaser phase; each
-live worker computes gradients on its own shard, and the gradients are
-synchronized by executing the *current epoch's compiled collective
-schedule* (derived from the deterministic skip-list oracle over the live
-keys). Membership churn — grow 4 -> 6 at step 20, shrink 6 -> 3 at step
-50 (one failure + two graceful leaves) — lands as epoch boundaries: the
-per-worker step is re-lowered for the new team size, a checkpoint makes
-the swap crash-consistent, and the schedule is re-derived and *verified*
-against both the live protocol actors' converged topology and a fresh
-oracle. The loss keeps going down through all of it.
+scheduler of this run: every training step is one phaser phase, and
+gradient sync executes the *current epoch's compiled schedule* as real
+``lax.ppermute`` rounds inside a ``shard_map`` program over a live
+8-device mesh (collective_exec) — no host-side simulation anywhere in
+the train path. The preferred schedule is ``recursive_doubling``; the
+non-power-of-two epochs (6 and 3 workers) keep that kind via the
+elimination derivation instead of falling back to ``phaser_scsl``.
+
+Membership churn — grow 4 -> 6 at step 15, shrink 6 -> 3 at step 35
+(one failure + two graceful leaves) — lands as epoch boundaries: the
+boundary swaps to the next epoch's program from the epoch-aware cache
+(compiled once per (member_set, kind)), a checkpoint makes the swap
+crash-consistent, and the schedule is verified against both the live
+protocol actors' converged topology and a fresh skip-list oracle.
+
+Every step also runs an ``xla_psum`` baseline program from the *same*
+params: the engine's loss matches the baseline to fp32 tolerance at
+every step of every epoch, and so do the updated parameters.
 
   PYTHONPATH=src python examples/elastic_train.py
 """
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
 import shutil
 import tempfile
 
 import jax
-import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.collective_exec import ProgramCache, build_gradsync_program
+from repro.core.collective import PhaserCollective
 from repro.data.synthetic import make_batch
 from repro.models.registry import get_api, get_config
 from repro.optim import AdamW, OptState
 from repro.runtime_elastic import ElasticPhaserRuntime
+from repro.utils import to_device_copy
 
-STEPS = 80
+STEPS = 60
 BATCH, SEQ = 4, 64
+
+assert jax.device_count() >= 8, "needs the 8-device host mesh (XLA_FLAGS)"
 
 cfg = get_config("smollm-135m").reduced()
 api = get_api(cfg)
 opt = AdamW(lr=3e-3, warmup=10, total_steps=STEPS)
 
-rt = ElasticPhaserRuntime(4, seed=0, kind="phaser_scsl")
+rt = ElasticPhaserRuntime(4, seed=0, kind="recursive_doubling")
 ckpt_dir = tempfile.mkdtemp(prefix="elastic_ckpt_")
 ckpt = CheckpointManager(ckpt_dir, async_write=False)
+
+# epoch-aware program caches: compiled once per (member_set, kind); the
+# runtime swaps programs at phase-advance boundaries via the bound cache
+programs = ProgramCache(
+    lambda pc: build_gradsync_program(api, opt, pc, stacked=True))
+baseline = ProgramCache(
+    lambda pc: build_gradsync_program(
+        api, opt,
+        PhaserCollective(pc.n, pc.axis_name, kind="xla_psum",
+                         keys=pc.keys, seed=pc.seed),
+        stacked=True))
+rt.bind_program_cache(programs)
 
 params = api.init_params(jax.random.key(0))
 opt_state = opt.init(params)
 
 
-# --- per-worker data-parallel step (re-lowered per epoch: the leading
-# worker axis is the epoch's team size, so churn re-traces it) ----------
-def build_worker_grads():
-    def one(p, b):
-        (l, _), g = jax.value_and_grad(api.loss_fn, has_aux=True)(p, b)
-        return l, g
-    return jax.jit(lambda p, bs: jax.vmap(lambda b: one(p, b))(bs))
-
-
-def worker_batches(live, step):
-    """Each live worker draws its own deterministic shard (seeded by its
-    phaser key, so a rejoining key would resume its own stream)."""
+def worker_batches(team, step):
+    """Each worker draws its own deterministic shard (seeded by its
+    phaser key, so a rejoining key would resume its own stream); the
+    stacked leading axis is the epoch's team — the mesh axis."""
     bs = [make_batch(cfg.vocab_size, BATCH, SEQ, seed=1000 + w, step=step)
-          for w in live]
-    return {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
+          for w in team]
+    return {k: to_device_copy(np.stack([b[k] for b in bs]))
+            for k in bs[0]}
 
 
-worker_grads = build_worker_grads()
 losses = []
 print(f"epoch 0: live={list(rt.epoch.live)} kind={rt.epoch.kind} "
       f"schedule={rt.epoch.stats()}")
 
 for step in range(STEPS):
     # ---- elastic events ---------------------------------------------------
-    if step == 20:                          # grow 4 -> 6: eager insertions
+    if step == 15:                          # grow 4 -> 6: eager insertions
         w1 = rt.request_join(step=step)
         w2 = rt.request_join(step=step)
         print(f"step {step}: workers {w1},{w2} JOINED "
-              f"(live={len(rt.live)}; schedule swap queued for boundary)")
-    if step == 50:                          # shrink 6 -> 3
+              f"(live={len(rt.live)}; program swap queued for boundary)")
+    if step == 35:                          # shrink 6 -> 3
         victim = max(rt.live)
         rt.request_leave(victim, fail=True, step=step)   # failure
         leavers = sorted(rt.live)[-2:]
@@ -89,62 +111,60 @@ for step in range(STEPS):
         print(f"          restored checkpoint @ step {s}")
 
     # ---- one step == one phaser phase -------------------------------------
-    # The data plane runs the CURRENT epoch's compiled schedule: workers
-    # that joined eagerly this epoch contribute from the next boundary
-    # on; workers that left mid-epoch contribute zeros and the mean is
-    # re-scaled (the membership mask) — the phase still completes because
-    # their DEREG lowered the expectation.
+    # The data plane runs the CURRENT epoch's compiled program; workers
+    # that left mid-epoch are masked (their ranks contribute zeros and
+    # the alive count rescales the mean — the phase still completes
+    # because their DEREG lowered the expectation).
     team = list(rt.epoch.live)
-    alive = [w for w in team if w in rt.live]
-    assert alive, "entire epoch team departed before the boundary"
-    n_alive = len(alive)
-    batches = worker_batches(alive, step)
-    wlosses, grads = worker_grads(params, batches)
+    alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team],
+                        jnp.float32)
+    batch = worker_batches(team, step)
 
-    # sync through the epoch's schedule (exactly what lax.ppermute
-    # executes on a real mesh); departed ranks hold zeros
-    pc = rt.collective()
-    gi = {w: i for i, w in enumerate(alive)}
-    live_flats, unravel = {}, None
-    for w in alive:
-        f, unravel = jax.flatten_util.ravel_pytree(
-            jax.tree_util.tree_map(lambda g, i=gi[w]: g[i], grads))
-        live_flats[w] = np.asarray(f)
-    zero = np.zeros_like(next(iter(live_flats.values())))
-    flats = [live_flats.get(w, zero) for w in team]
-    reduced = pc.simulate_allreduce(flats)
-    direct = sum(flats)
-    for r in reduced:                      # every rank got the exact sum
-        np.testing.assert_allclose(r, direct, rtol=1e-6, atol=1e-6)
-    mean_grads = unravel(jnp.asarray((reduced[0] / n_alive)
-                                     .astype(np.float32)))
-
-    params, opt_state, _ = opt.update(mean_grads, opt_state, params)
-    losses.append(float(jnp.mean(wlosses)))
+    prog = programs.get(rt.collective())
+    ref = baseline.get(rt.collective())
+    # baseline runs from the SAME params: the engine must match psum
+    p_ref, o_ref, m_ref = ref.step(params, opt_state, batch, alive)
+    params, opt_state, m = prog.step(params, opt_state, batch, alive)
+    r, rr = prog.reduce_metrics(m), ref.reduce_metrics(m_ref)
+    loss, loss_ref = float(r["loss"]), float(rr["loss"])
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    losses.append(loss)
 
     before = rt.epoch.index
     released = rt.advance(step=step)
     if rt.epoch.index != before:
-        # epoch boundary: checkpoint, re-lower, verify against the oracle
+        # epoch boundary: checkpoint, swap programs, verify vs oracle
         ckpt.save(step + 1, params, opt_state)
-        worker_grads = build_worker_grads()
         rt.verify_epoch()                  # protocol lanes == oracle ==
         ep = rt.epoch                      # compiled schedule (asserts)
+        assert programs.get(ep.collective) is not None
         print(f"epoch {ep.index} @ phase {released}: live={list(ep.live)} "
-              f"kind={ep.kind} schedule={ep.stats()} — verified vs oracle")
+              f"kind={ep.kind} schedule={ep.stats()} — verified vs "
+              f"oracle; programs={programs.stats()}")
     if step % 10 == 0:
-        print(f"step {step:3d} phase {released:3d} loss {losses[-1]:.4f} "
-              f"live={n_alive} epoch={rt.epoch.index}")
+        print(f"step {step:3d} phase {released:3d} loss {loss:.4f} "
+              f"(psum {loss_ref:.4f}) live={int(float(r['alive']))} "
+              f"epoch={rt.epoch.index}")
     if (step + 1) % 20 == 0:
         ckpt.save(step + 1, params, opt_state)
 
 print("\ncontroller:", {k: v for k, v in rt.stats().items()
                         if k != "messages"})
+print("program cache:", programs.stats())
 assert len(rt.epochs) >= 3, "expected grow + shrink epochs"
 for ep in rt.epochs:
     if ep.collective is not None:
         assert ep.collective.matches_oracle(), ep.index
+        assert ep.kind == "recursive_doubling", \
+            f"epoch {ep.index} fell back to {ep.kind}"
+# one compiled program per distinct (member_set, kind), reused otherwise
+assert programs.stats()["misses"] == len(rt.epochs)
 assert losses[-1] < losses[0], "loss did not decrease through churn"
-print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across "
-      f"grow 4->6 / shrink 6->3: OK")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across grow 4->6 / "
+      f"shrink 6->3, synced on-device by the compiled "
+      f"{rt.kind} schedule: OK")
 shutil.rmtree(ckpt_dir, ignore_errors=True)

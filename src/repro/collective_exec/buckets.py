@@ -1,0 +1,94 @@
+"""Bucketed flattening of gradient pytrees for the execution engine.
+
+The grad pytree is raveled leaf-by-leaf into one f32 vector, the *alive
+flag* (1.0 for a contributing worker, 0.0 for a departed one) is
+appended, and the vector is zero-padded up to a ``(n_buckets,
+bucket_elems)`` buffer whose rows are lane-aligned (multiples of 128)
+and VMEM-sized. One ``lax.ppermute`` round then moves the whole buffer
+and one fused Pallas kernel launch combines it — instead of one op per
+pytree leaf.
+
+Because the alive flag rides the same all-reduce as the payload, the
+reduced buffer's flag slot holds the live contributor count: the masked
+mean (``sum(grads) / n_alive``) costs no second collective.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bucket_combine import MAX_BUCKET_BYTES
+
+LANES = 128                        # TPU lane width: rows stay tile-aligned
+DEFAULT_BUCKET_ELEMS = 1 << 16     # 256 KiB f32 rows
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Static identity of the bucketed buffer: part of the compiled
+    program's key (it is derived from the param spec, which only changes
+    when the model does)."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    payload: int                   # raveled grad elems; flag sits after
+    n_buckets: int
+    bucket_elems: int
+
+    @property
+    def total_elems(self) -> int:
+        return self.n_buckets * self.bucket_elems
+
+    def flatten(self, tree, alive) -> jax.Array:
+        """tree -> (n_buckets, bucket_elems) f32, alive flag appended."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self.sizes), \
+            (len(leaves), len(self.sizes))
+        parts = [l.astype(jnp.float32).reshape(-1) for l in leaves]
+        parts.append(jnp.asarray(alive, jnp.float32).reshape(1))
+        flat = jnp.concatenate(parts)
+        pad = self.total_elems - flat.shape[0]
+        assert pad >= 0, (flat.shape[0], self.total_elems)
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+        return flat.reshape(self.n_buckets, self.bucket_elems)
+
+    def unflatten(self, buf: jax.Array) -> Tuple[Any, jax.Array]:
+        """(n_buckets, bucket_elems) -> (tree, contributor count)."""
+        flat = buf.reshape(-1)
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes,
+                                      self.sizes):
+            leaves.append(flat[off:off + size].reshape(shape)
+                          .astype(dtype))
+            off += size
+        count = flat[self.payload]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves), count
+
+
+def make_layout(tree, *, bucket_elems: int = None) -> BucketLayout:
+    """Derive the bucket layout from a pytree of arrays or
+    ShapeDtypeStructs (typically ``api.param_spec()``)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    assert leaves, "empty gradient tree"
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(math.prod(s)) for s in shapes)
+    payload = sum(sizes)
+    total = payload + 1                       # + alive flag
+    if bucket_elems is None:
+        bucket_elems = min(DEFAULT_BUCKET_ELEMS,
+                           -(-total // LANES) * LANES)
+    assert bucket_elems % LANES == 0, bucket_elems
+    assert bucket_elems * 4 <= MAX_BUCKET_BYTES, bucket_elems
+    n_buckets = -(-total // bucket_elems)
+    return BucketLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                        sizes=sizes, payload=payload, n_buckets=n_buckets,
+                        bucket_elems=bucket_elems)

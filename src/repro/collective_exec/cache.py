@@ -1,0 +1,63 @@
+"""Epoch-aware program cache: ``(member_set, kind)`` -> compiled program.
+
+The elastic runtime swaps data-plane programs at phase-advance
+boundaries (DESIGN.md §3): when a boundary lands a new epoch, the next
+epoch's program is looked up here — compiled once per distinct
+``(member_set, kind)`` and re-used when churn revisits a team (a worker
+set that grew back, an A/B membership flip). The phaser's keys are never
+recycled, so within one runtime the member set *is* the topology
+identity: skip-list heights are a deterministic function of
+``(seed, key)``, so equal key sets under the same seed derive equal
+skip lists and therefore equal schedules. The cache key carries
+``(seed, p)`` alongside ``(member_set, kind)`` to stay correct when one
+cache serves collectives from differently-seeded runtimes.
+
+LRU-bounded: compiled shard_map executables hold device buffers; the
+default capacity keeps the last 8 teams warm.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Optional, Tuple
+
+from ..core.collective import PhaserCollective
+
+
+class ProgramCache:
+    def __init__(self, builder: Callable[[PhaserCollective], Any], *,
+                 capacity: Optional[int] = 8):
+        self._builder = builder
+        self._programs: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key_of(pc: PhaserCollective) -> Tuple:
+        return (pc.keys, pc.kind, pc.seed, pc.p)
+
+    def get(self, pc: PhaserCollective) -> Any:
+        """The compiled program for this collective's (member_set, kind),
+        building it on first use."""
+        key = self.key_of(pc)
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.hits += 1
+            self._programs.move_to_end(key)
+            return prog
+        self.misses += 1
+        prog = self._builder(pc)
+        self._programs[key] = prog
+        if self.capacity and len(self._programs) > self.capacity:
+            self._programs.popitem(last=False)
+        return prog
+
+    def __contains__(self, pc: PhaserCollective) -> bool:
+        return self.key_of(pc) in self._programs
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._programs), "hits": self.hits,
+                "misses": self.misses}

@@ -1,0 +1,39 @@
+"""Device-side execution of a compiled collective over the bucket buffer.
+
+``execute_flat`` is the data plane of one gradient sync: it runs the
+epoch's schedule as ``lax.ppermute`` rounds over the mesh axis, with the
+local reduce of each round fused into one Pallas bucket-combine kernel
+launch (``fused=True``) or plain masked jnp (``fused=False`` — the
+reference the kernel is tested against). Segment-level kinds dispatch to
+their dedicated executors (``halving_doubling``), and ``xla_psum`` stays
+native.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax import lax
+
+from ..core.collective import (PhaserCollective, halving_doubling_allreduce,
+                               schedule_allreduce)
+from ..kernels.ops import bucket_combine_op
+
+
+def execute_flat(flat: jax.Array, pc: PhaserCollective, *,
+                 fused: bool = True,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """All-reduce the (n_buckets, bucket_elems) buffer along
+    ``pc.axis_name`` through the collective's compiled schedule. Must be
+    called inside ``shard_map`` over that axis."""
+    if pc.kind == "xla_psum":
+        return lax.psum(flat, pc.axis_name)
+    if pc.kind == "halving_doubling":
+        return halving_doubling_allreduce(flat, pc.axis_name, pc.n)
+    combine = None
+    if fused:
+        def combine(acc, y, gate, op):
+            return bucket_combine_op(acc, y, gate, op=op,
+                                     interpret=interpret)
+    return schedule_allreduce(flat, pc.axis_name, pc.unified_schedule(),
+                              combine=combine)

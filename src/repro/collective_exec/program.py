@@ -1,0 +1,173 @@
+"""Compiled device-resident programs: phaser schedules inside shard_map.
+
+``build_gradsync_program`` compiles one membership epoch's gradient sync
+into an executable ``shard_map`` train step over a real mesh axis:
+
+  1. each mesh rank computes loss + grads on its own batch shard,
+  2. the grad pytree is flattened into the bucketed buffer (alive flag
+     appended — ``buckets.py``),
+  3. the epoch's schedule runs as ``lax.ppermute`` rounds with the fused
+     Pallas bucket-combine for the local reduce (``executor.py``),
+  4. the buffer is unflattened, the masked mean is taken from the
+     reduced alive count, and the optimizer update runs replicated.
+
+Params and optimizer state are replicated (``P()``); batch and alive
+mask are sharded over the data axis. ``check_rep=False`` because Pallas
+calls carry no replication rule — the schedule itself guarantees every
+rank ends with the same reduced buffer (tested against ``xla_psum``).
+
+``build_allreduce_program`` is the raw data-plane program (no model):
+it all-reduces a stacked per-rank value through the same bucket path —
+what benchmarks and equivalence tests drive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.collective import PhaserCollective
+from .buckets import BucketLayout, make_layout
+from .executor import execute_flat
+
+
+def mesh_for(pc: PhaserCollective,
+             devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices) if devices is not None else jax.devices()
+    assert len(devices) >= pc.n, \
+        f"need {pc.n} devices for axis {pc.axis_name!r}, " \
+        f"have {len(devices)}"
+    return Mesh(np.array(devices[:pc.n]), (pc.axis_name,))
+
+
+@dataclass
+class GradSyncProgram:
+    """One epoch's compiled train step. ``key`` is the program-cache
+    identity: (member_set, kind, seed, p)."""
+
+    key: tuple
+    pc: PhaserCollective
+    mesh: Mesh
+    layout: BucketLayout
+    jitted: Callable          # (params, opt, batch, alive) -> (p, o, pm)
+    stacked: bool
+    meta: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.pc.n
+
+    def _replicated(self, tree):
+        """Re-commit carried state onto this program's mesh (the epoch
+        swap moves params between meshes of different sizes; jit refuses
+        mixed committed device sets, so the swap is an explicit
+        replicated device_put — a no-op within an epoch)."""
+        sh = jax.sharding.NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map(
+            lambda x: x if getattr(x, "sharding", None) == sh
+            else jax.device_put(x, sh), tree)
+
+    def step(self, params, opt_state, batch, alive=None):
+        """Run one synced step; ``alive`` defaults to the full team."""
+        if alive is None:
+            alive = jnp.ones((self.pc.n,), jnp.float32)
+        params = self._replicated(params)
+        opt_state = self._replicated(opt_state)
+        return self.jitted(params, opt_state, batch, alive)
+
+    def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
+        """Per-worker (n,) metric rows -> scalars: masked mean for the
+        pre-sync losses, any rank's copy for post-sync values (they are
+        replicated by construction), plus the schedule's static meta."""
+        n_alive = jnp.maximum(pm["alive"].sum(), 1.0)
+        out = {}
+        for k, v in pm.items():
+            if k in ("loss", "aux"):
+                out[k] = v.sum() / n_alive
+            elif k == "alive":
+                out[k] = v.sum()
+            else:
+                out[k] = v[0]
+        out.update({k: jnp.asarray(v, jnp.float32)
+                    for k, v in self.meta.items()})
+        return out
+
+
+def build_gradsync_program(api, opt, pc: PhaserCollective, *,
+                           devices: Optional[Sequence] = None,
+                           stacked: bool = False,
+                           remat: bool = False,
+                           fused: bool = True,
+                           interpret: Optional[bool] = None,
+                           donate: bool = False,
+                           bucket_elems: Optional[int] = None
+                           ) -> GradSyncProgram:
+    """Compile the epoch's schedule into a shard_map train step.
+
+    ``stacked=True`` takes per-worker batches stacked on a leading team
+    axis (leaves ``(n, B, S)``); ``stacked=False`` shards a global batch
+    (leaves ``(B, S)``, ``B % n == 0``) over the data axis.
+    """
+    mesh = mesh_for(pc, devices)
+    layout = make_layout(api.param_spec(), bucket_elems=bucket_elems)
+    axis = pc.axis_name
+
+    def worker(params, opt_state, batch, alive):
+        if stacked:
+            batch = jax.tree_util.tree_map(lambda x: x[0], batch)
+        a = alive[0]
+        (_, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch, remat=remat)
+        grads = jax.tree_util.tree_map(lambda g: g * a.astype(g.dtype),
+                                       grads)
+        flat = layout.flatten(grads, a)
+        flat = execute_flat(flat, pc, fused=fused, interpret=interpret)
+        grads, count = layout.unflatten(flat)
+        inv = 1.0 / jnp.maximum(count, 1.0)
+        grads = jax.tree_util.tree_map(
+            lambda g: g * inv.astype(g.dtype), grads)
+        new_p, new_o, om = opt.update(grads, opt_state, params)
+        pm = {"loss": metrics["loss"] * a,
+              "aux": metrics.get("aux", jnp.zeros(())) * a,
+              "alive": a, **om}
+        pm = {k: jnp.asarray(v, jnp.float32).reshape(1)
+              for k, v in pm.items()}
+        return new_p, new_o, pm
+
+    sm = shard_map(worker, mesh=mesh,
+                   in_specs=(P(), P(), P(axis), P(axis)),
+                   out_specs=(P(), P(), P(axis)),
+                   check_rep=False)
+    jitted = jax.jit(sm, donate_argnums=(0, 1) if donate else ())
+    st = pc.stats()
+    meta = {"team": pc.n, "sync_rounds": st["rounds"],
+            "sync_messages": st["messages"]}
+    return GradSyncProgram(key=(pc.keys, pc.kind, pc.seed, pc.p), pc=pc,
+                           mesh=mesh,
+                           layout=layout, jitted=jitted, stacked=stacked,
+                           meta=meta)
+
+
+def build_allreduce_program(pc: PhaserCollective, spec, *,
+                            devices: Optional[Sequence] = None,
+                            fused: bool = True,
+                            interpret: Optional[bool] = None) -> Callable:
+    """Compile a bare bucketed all-reduce: ``(n, *spec.shape)`` stacked
+    per-rank values -> the same, every rank holding the reduced sum."""
+    mesh = mesh_for(pc, devices)
+    layout = make_layout({"x": spec})
+
+    def worker(x):
+        flat = layout.flatten({"x": x[0].astype(jnp.float32)},
+                              jnp.float32(1.0))
+        flat = execute_flat(flat, pc, fused=fused, interpret=interpret)
+        tree, _ = layout.unflatten(flat)
+        return tree["x"][None].astype(x.dtype)
+
+    return jax.jit(shard_map(worker, mesh=mesh, in_specs=P(pc.axis_name),
+                             out_specs=P(pc.axis_name), check_rep=False))

@@ -21,6 +21,16 @@ Schedules are derived once (host side, from the deterministic skip-list
 oracle) and are traced into the compiled step; topology changes (elastic
 add/delete) swap the schedule at the next re-lower — the "lazy" phase of the
 paper's two-phase structural protocol.
+
+Every kind is valid for **any** team size: non-power-of-two teams use the
+elimination derivations (PR 2) — extras fold into their hypercube images
+before the XOR exchange (recursive doubling), or run a vector-halving 2-1
+elimination pre-phase (halving doubling) — mirroring the creation
+exchange's fold in ``core/creation.py``. A ``Schedule`` therefore carries
+a per-round op: ``"add"`` rounds accumulate at the destination, ``"copy"``
+rounds overwrite (the broadcast/hydration direction). The device-resident
+execution engine (``collective_exec/``) compiles these schedules into
+``shard_map`` programs with a fused Pallas bucket-combine kernel.
 """
 from __future__ import annotations
 
@@ -43,11 +53,20 @@ from .skiplist import HEAD, SkipList
 @dataclass(frozen=True)
 class Schedule:
     """A sequence of ppermute rounds. ``rounds[r]`` = tuple of (src, dst)
-    pairs, each a partial permutation (distinct srcs, distinct dsts)."""
+    pairs, each a partial permutation (distinct srcs, distinct dsts).
+
+    ``ops[r]`` is the destination combine for round ``r``: ``"add"``
+    (reduce into the accumulator) or ``"copy"`` (overwrite — the
+    broadcast/hydration direction). An empty ``ops`` means every round
+    is ``"add"`` (the pre-existing reduce-only schedules)."""
 
     n: int
     rounds: Tuple[Tuple[Tuple[int, int], ...], ...]
     kind: str = "generic"
+    ops: Tuple[str, ...] = ()
+
+    def op(self, r: int) -> str:
+        return self.ops[r] if self.ops else "add"
 
     @property
     def depth(self) -> int:
@@ -58,6 +77,9 @@ class Schedule:
         return sum(len(r) for r in self.rounds)
 
     def check(self) -> None:
+        assert not self.ops or len(self.ops) == len(self.rounds), \
+            (len(self.ops), len(self.rounds))
+        assert all(op in ("add", "copy") for op in self.ops), self.ops
         for r in self.rounds:
             srcs = [s for s, _ in r]
             dsts = [d for _, d in r]
@@ -163,22 +185,42 @@ def snsl_broadcast_schedule(sl: SkipList, ranks: Sequence[int]) -> Schedule:
         assert this_round, "broadcast stalled"
         have |= {ranks[d] for _, d in this_round}
         rounds.append(tuple(sorted(this_round)))
-    sched = Schedule(len(ranks), tuple(rounds), kind="snsl_broadcast")
+    sched = Schedule(len(ranks), tuple(rounds), kind="snsl_broadcast",
+                     ops=("copy",) * len(rounds))
     sched.check()
     return sched
 
 
 def recursive_doubling_schedule(n: int) -> Schedule:
-    """log2(n) XOR-exchange rounds (the paper's creation algorithm [2] as an
-    all-reduce). Requires power-of-two n (mesh axes always are)."""
-    assert n & (n - 1) == 0, f"recursive doubling needs power-of-2 n, got {n}"
-    rounds = []
-    r = 0
-    while (1 << r) < n:
-        stride = 1 << r
-        rounds.append(tuple(sorted((i, i ^ stride) for i in range(n))))
-        r += 1
-    sched = Schedule(n, tuple(rounds), kind="recursive_doubling")
+    """XOR-exchange all-reduce rounds (the paper's creation algorithm [2]).
+
+    Power-of-two teams run the pure hypercube exchange. Any other team
+    size gets the rank-elimination derivation (the whole-buffer member of
+    the Rabenseifner-Träff elimination family, the same fold the creation
+    exchange uses in ``core/creation.py``): the ``r = n - 2^k`` extras
+    fold their contribution into their hypercube images (one ``add``
+    round), the 2^k core runs the XOR exchange, and one final ``copy``
+    round re-hydrates the extras with the total. Latency is
+    ``log2(2^k) + 2`` rounds instead of falling back to ``phaser_scsl``.
+    """
+    assert n >= 1, n
+    k = 1 << (n.bit_length() - 1)           # largest power of two <= n
+    r = n - k
+    rounds: List[Tuple[Tuple[int, int], ...]] = []
+    ops: List[str] = []
+    if r:
+        rounds.append(tuple(sorted((k + i, i) for i in range(r))))
+        ops.append("add")
+    stride = 1
+    while stride < k:
+        rounds.append(tuple(sorted((i, i ^ stride) for i in range(k))))
+        ops.append("add")
+        stride *= 2
+    if r:
+        rounds.append(tuple(sorted((i, k + i) for i in range(r))))
+        ops.append("copy")
+    sched = Schedule(n, tuple(rounds), kind="recursive_doubling",
+                     ops=tuple(ops))
     sched.check()
     return sched
 
@@ -193,56 +235,85 @@ def _dst_mask(n: int, round_pairs: Sequence[Tuple[int, int]]):
     return m
 
 
+def schedule_allreduce(x: jax.Array, axis_name: str, sched: Schedule, *,
+                       combine: Optional[callable] = None) -> jax.Array:
+    """Execute any round ``Schedule`` along ``axis_name``: per round, the
+    destinations of the partial permutation either accumulate (``add``)
+    or overwrite (``copy``) the incoming value; everyone else keeps their
+    accumulator. ``combine(acc, incoming, gate, op) -> acc`` overrides the
+    per-round combine — the execution engine passes the fused Pallas
+    bucket-combine kernel here; the default is plain masked jnp."""
+    idx = lax.axis_index(axis_name)
+    acc = x
+    for r, pairs in enumerate(sched.rounds):
+        gate = jnp.asarray(_dst_mask(sched.n, pairs))[idx]
+        y = lax.ppermute(acc, axis_name, perm=list(pairs))
+        if combine is not None:
+            acc = combine(acc, y, gate, sched.op(r))
+        elif sched.op(r) == "add":
+            acc = acc + jnp.where(gate, y, jnp.zeros_like(y))
+        else:
+            acc = jnp.where(gate, y, acc)
+    return acc
+
+
 def scsl_allreduce(x: jax.Array, axis_name: str, up: Schedule,
-                   down: Schedule) -> jax.Array:
+                   down: Schedule, *,
+                   combine: Optional[callable] = None) -> jax.Array:
     """All-reduce(+) along ``axis_name`` with the phaser SCSL/SNSL schedules:
     reduce up the signal-collection edges, broadcast down the notification
     edges. Correct for any x dtype supporting +."""
-    n = up.n
-    idx = lax.axis_index(axis_name)
-    acc = x
-    for pairs in up.rounds:
-        recv = jnp.asarray(_dst_mask(n, pairs))[idx]
-        y = lax.ppermute(acc, axis_name, perm=list(pairs))
-        acc = acc + jnp.where(recv, y, jnp.zeros_like(y))
-    # acc at the root now holds the total; diffuse it down
-    out = acc
-    for pairs in down.rounds:
-        recv = jnp.asarray(_dst_mask(n, pairs))[idx]
-        y = lax.ppermute(out, axis_name, perm=list(pairs))
-        out = jnp.where(recv, y, out)
-    return out
-
-
-def recursive_doubling_allreduce(x: jax.Array, axis_name: str,
-                                 sched: Schedule) -> jax.Array:
-    acc = x
-    for pairs in sched.rounds:
-        y = lax.ppermute(acc, axis_name, perm=list(pairs))
-        acc = acc + y
-    return acc
+    uni = Schedule(up.n, up.rounds + down.rounds, kind="phaser_scsl",
+                   ops=("add",) * up.depth + ("copy",) * down.depth)
+    return schedule_allreduce(x, axis_name, uni, combine=combine)
 
 
 def halving_doubling_allreduce(x: jax.Array, axis_name: str,
                                n: int) -> jax.Array:
     """Bandwidth-optimal all-reduce: recursive-halving reduce-scatter then
-    recursive-doubling all-gather. Transfers 2·(n-1)/n·|x| per device versus
-    log2(n)·|x| for plain recursive doubling. Requires |x| divisible by n
-    (callers pad); power-of-two n."""
-    assert n & (n - 1) == 0
+    recursive-doubling all-gather over the 2^k core (2·(2^k-1)/2^k data
+    volume versus log2(n)·|x| for plain recursive doubling).
+
+    Any team size: the ``r = n - 2^k`` extras are retired by a
+    vector-halving **2-1 elimination** pre-phase (Rabenseifner-Träff
+    elimination family): extra and core image swap opposite halves and
+    each reduces the half it kept (two half-sized messages), the extra
+    returns its reduced half (one more half-sized message), and after the
+    core finishes, one full-sized copy re-hydrates the extras."""
+    if n == 1:
+        return x
+    k = 1 << (n.bit_length() - 1)           # largest power of two <= n
+    r = n - k
     flat = x.reshape(-1)
     orig_size = flat.shape[0]
-    pad = (-orig_size) % n
+    pad = (-orig_size) % (2 * k)            # even halves at every depth
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     size = flat.shape[0]
     idx = lax.axis_index(axis_name)
-    # reduce-scatter: after round r each device owns a 1/2^(r+1) slice
     acc = flat
-    stride = n // 2
+    if r:
+        # 2-1 elimination: extra k+i <-> core i swap opposite halves.
+        half = size // 2
+        lo = lax.dynamic_slice(acc, (0,), (half,))
+        hi = lax.dynamic_slice(acc, (half,), (half,))
+        is_extra = idx >= k
+        has_extra = idx < r
+        pairs1 = ([(k + i, i) for i in range(r)]
+                  + [(i, k + i) for i in range(r)])
+        send1 = jnp.where(is_extra, lo, hi)
+        got1 = lax.ppermute(send1, axis_name, perm=pairs1)
+        lo = jnp.where(has_extra, lo + got1, lo)    # core reduces low half
+        hi = jnp.where(is_extra, hi + got1, hi)     # extra reduces high half
+        got2 = lax.ppermute(hi, axis_name,
+                            perm=[(k + i, i) for i in range(r)])
+        hi = jnp.where(has_extra, got2, hi)         # extra hands it back
+        acc = jnp.concatenate([lo, hi])
+    # reduce-scatter among the core: after each round a device owns half
+    stride = k // 2
     width = size
     while stride >= 1:
-        pairs = [(i, i ^ stride) for i in range(n)]
+        pairs = [(i, i ^ stride) for i in range(k)]
         keep_low = (idx // stride) % 2 == 0     # low-half keeper this round
         half = width // 2
         low = lax.dynamic_slice(acc, (0,), (half,))
@@ -255,15 +326,36 @@ def halving_doubling_allreduce(x: jax.Array, axis_name: str,
         stride //= 2
     # all-gather back up (doubling)
     stride = 1
-    while stride < n:
-        pairs = [(i, i ^ stride) for i in range(n)]
+    while stride < k:
+        pairs = [(i, i ^ stride) for i in range(k)]
         got = lax.ppermute(acc, axis_name, perm=pairs)
         keep_low = (idx // stride) % 2 == 0
         acc = jnp.where(keep_low,
                         jnp.concatenate([acc, got]),
                         jnp.concatenate([got, acc]))
         stride *= 2
+    if r:
+        # re-hydrate the eliminated extras with the full result
+        got3 = lax.ppermute(acc, axis_name,
+                            perm=[(i, k + i) for i in range(r)])
+        acc = jnp.where(idx >= k, got3, acc)
     return acc[:orig_size].reshape(x.shape)
+
+
+def simulate_schedule(sched: Schedule, xs: Sequence[np.ndarray]
+                      ) -> List[np.ndarray]:
+    """Host-side reference execution of a round schedule (one value per
+    rank) — the exact mirror of ``schedule_allreduce``."""
+    assert len(xs) == sched.n, (len(xs), sched.n)
+    vals = [np.asarray(x, dtype=np.float64) for x in xs]
+    for r, pairs in enumerate(sched.rounds):
+        incoming = {d: vals[s] for s, d in pairs}
+        if sched.op(r) == "add":
+            vals = [vals[i] + incoming[i] if i in incoming else vals[i]
+                    for i in range(sched.n)]
+        else:
+            vals = [incoming.get(i, vals[i]) for i in range(sched.n)]
+    return vals
 
 
 ALLREDUCE_KINDS = ("xla_psum", "phaser_scsl", "recursive_doubling",
@@ -308,20 +400,30 @@ class PhaserCollective:
             self.down = snsl_broadcast_schedule(sl, list(self.keys))
         elif self.kind == "recursive_doubling":
             self.rd = recursive_doubling_schedule(self.n)
-        elif self.kind == "halving_doubling":
-            assert self.n & (self.n - 1) == 0, \
-                f"halving doubling needs power-of-2 n, got {self.n}"
 
-    def all_reduce(self, x: jax.Array) -> jax.Array:
+    def unified_schedule(self) -> Optional[Schedule]:
+        """The single round schedule the execution engine compiles:
+        reduce-up + copy-down for ``phaser_scsl``, the (possibly
+        elimination-extended) XOR exchange for ``recursive_doubling``.
+        ``None`` for the kinds that are not whole-buffer round schedules
+        (``xla_psum`` is native; ``halving_doubling`` is segment-level)."""
+        if self.kind == "phaser_scsl":
+            return Schedule(self.n, self.up.rounds + self.down.rounds,
+                            kind="phaser_scsl",
+                            ops=("add",) * self.up.depth
+                            + ("copy",) * self.down.depth)
+        if self.kind == "recursive_doubling":
+            return self.rd
+        return None
+
+    def all_reduce(self, x: jax.Array, *,
+                   combine: Optional[callable] = None) -> jax.Array:
         if self.kind == "xla_psum":
             return lax.psum(x, self.axis_name)
-        if self.kind == "phaser_scsl":
-            return scsl_allreduce(x, self.axis_name, self.up, self.down)
-        if self.kind == "recursive_doubling":
-            return recursive_doubling_allreduce(x, self.axis_name, self.rd)
         if self.kind == "halving_doubling":
             return halving_doubling_allreduce(x, self.axis_name, self.n)
-        raise ValueError(self.kind)
+        return schedule_allreduce(x, self.axis_name,
+                                  self.unified_schedule(), combine=combine)
 
     def pmean(self, x: jax.Array) -> jax.Array:
         return self.all_reduce(x) / self.n
@@ -334,8 +436,12 @@ class PhaserCollective:
         if self.kind == "recursive_doubling":
             return {"rounds": self.rd.depth, "messages": self.rd.messages}
         if self.kind == "halving_doubling":
-            lg = int(math.log2(self.n))
-            return {"rounds": 2 * lg, "messages": 2 * lg * self.n}
+            k = 1 << (self.n.bit_length() - 1)
+            r = self.n - k
+            lg = int(math.log2(k)) if k > 1 else 0
+            # core: lg rounds each way; elimination: 2 pre + 1 hydrate
+            return {"rounds": 2 * lg + (3 if r else 0),
+                    "messages": 2 * lg * k + 4 * r}
         return {"rounds": 1, "messages": self.n}
 
     # --- host-side execution -----------------------------------------------
@@ -353,58 +459,65 @@ class PhaserCollective:
         if self.kind == "xla_psum":
             total = sum(vals)
             return [total.copy() for _ in range(self.n)]
-        if self.kind == "phaser_scsl":
-            acc = [v.copy() for v in vals]
-            for pairs in self.up.rounds:        # reduce up the SCSL edges
-                incoming = {d: acc[s] for s, d in pairs}
-                acc = [acc[i] + incoming[i] if i in incoming else acc[i]
-                       for i in range(self.n)]
-            out = acc
-            for pairs in self.down.rounds:      # broadcast down the SNSL
-                incoming = {d: out[s] for s, d in pairs}
-                out = [incoming.get(i, out[i]) for i in range(self.n)]
-            return out
-        if self.kind == "recursive_doubling":
-            acc = [v.copy() for v in vals]
-            for pairs in self.rd.rounds:
-                incoming = {d: acc[s] for s, d in pairs}
-                acc = [acc[i] + incoming[i] for i in range(self.n)]
-            return acc
+        if self.kind in ("phaser_scsl", "recursive_doubling"):
+            return simulate_schedule(self.unified_schedule(), vals)
         if self.kind == "halving_doubling":
-            # mirror halving_doubling_allreduce round for round:
-            # recursive-halving reduce-scatter, then doubling all-gather
+            # mirror halving_doubling_allreduce round for round: 2-1
+            # elimination pre-phase (non-pow2), recursive-halving
+            # reduce-scatter, doubling all-gather, extra re-hydration
             n = self.n
+            if n == 1:
+                return [v.copy() for v in vals]
+            k = 1 << (n.bit_length() - 1)
+            r = n - k
             shape = vals[0].shape
             flat = [v.ravel() for v in vals]
             orig = flat[0].size
-            pad = (-orig) % n
+            pad = (-orig) % (2 * k)
             acc = [np.concatenate([f, np.zeros((pad,))]) if pad
                    else f.copy() for f in flat]
-            width = acc[0].size
-            stride = n // 2
+            size = acc[0].size
+            if r:
+                half = size // 2
+                nxt = [a.copy() for a in acc]
+                for i in range(r):
+                    e = k + i
+                    nxt[i][:half] = acc[i][:half] + acc[e][:half]
+                    nxt[e][half:] = acc[e][half:] + acc[i][half:]
+                acc = nxt
+                for i in range(r):              # extra returns its half
+                    acc[i][half:] = acc[k + i][half:]
+            width = size
+            stride = k // 2
             while stride >= 1:
                 half = width // 2
                 nxt = []
                 for i in range(n):
-                    j = i ^ stride
                     keep_low = (i // stride) % 2 == 0
                     keep = acc[i][:half] if keep_low else acc[i][half:]
-                    sent = (acc[j][half:] if (j // stride) % 2 == 0
-                            else acc[j][:half])
+                    if i < k:                   # extras idle (masked out)
+                        j = i ^ stride
+                        sent = (acc[j][half:] if (j // stride) % 2 == 0
+                                else acc[j][:half])
+                    else:
+                        sent = np.zeros((half,))
                     nxt.append(keep + sent)
                 acc = nxt
                 width = half
                 stride //= 2
             stride = 1
-            while stride < n:
+            while stride < k:
                 nxt = []
                 for i in range(n):
-                    j = i ^ stride
                     keep_low = (i // stride) % 2 == 0
-                    nxt.append(np.concatenate([acc[i], acc[j]]) if keep_low
-                               else np.concatenate([acc[j], acc[i]]))
+                    got = (acc[i ^ stride] if i < k
+                           else np.zeros_like(acc[i]))
+                    nxt.append(np.concatenate([acc[i], got]) if keep_low
+                               else np.concatenate([got, acc[i]]))
                 acc = nxt
                 stride *= 2
+            for i in range(r):                  # hydrate the extras
+                acc[k + i] = acc[i].copy()
             return [a[:orig].reshape(shape) for a in acc]
         raise ValueError(self.kind)
 
@@ -415,7 +528,7 @@ class PhaserCollective:
         if self.kind == "phaser_scsl":
             return (self.kind, self.keys, self.up.rounds, self.down.rounds)
         if self.kind == "recursive_doubling":
-            return (self.kind, self.keys, self.rd.rounds)
+            return (self.kind, self.keys, self.rd.rounds, self.rd.ops)
         return (self.kind, self.keys)
 
     def matches_oracle(self) -> bool:

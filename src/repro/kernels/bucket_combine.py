@@ -1,0 +1,68 @@
+"""Fused bucket-combine Pallas kernel for the collective execution engine.
+
+One schedule round over the bucketed gradient buffer is one fused kernel
+launch: instead of ~hundreds of per-leaf adds (one XLA op per pytree
+leaf), the flattened gradient rides a (n_buckets, bucket_elems) f32
+buffer and the local reduce of a ``lax.ppermute`` round is a single
+grid-over-buckets elementwise kernel. The round's *gate* — whether this
+device is a destination of the round's partial permutation — is a scalar
+in SMEM, so the same compiled kernel serves every round of the schedule:
+
+* ``op="add"``  — reduce rounds: ``acc + gate * incoming``
+* ``op="copy"`` — broadcast/hydration rounds: ``gate ? incoming : acc``
+
+Each bucket row is one VMEM block (buckets are sized by the engine to a
+few hundred KB, well under the ~16 MB VMEM budget for the three
+operands); off-TPU callers run the same kernel body under the
+interpreter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# 3 operands (acc, incoming, out) must fit VMEM together; stay well clear.
+MAX_BUCKET_BYTES = 4 * 1024 * 1024
+
+
+def _combine_kernel(gate_ref, acc_ref, y_ref, o_ref, *, op: str):
+    g = gate_ref[0, 0] != 0
+    acc = acc_ref[...]
+    y = y_ref[...]
+    if op == "add":
+        o_ref[...] = acc + jnp.where(g, y, jnp.zeros_like(y))
+    else:  # "copy": round destinations take the incoming value wholesale
+        o_ref[...] = jnp.where(g, y, acc)
+
+
+def bucket_combine(acc: jax.Array, y: jax.Array, gate: jax.Array, *,
+                   op: str = "add", interpret: bool = False) -> jax.Array:
+    """Combine one ppermute round into the bucketed accumulator.
+
+    ``acc``/``y``: (n_buckets, bucket_elems); ``gate``: scalar bool/int
+    (is this device a destination this round); ``op``: "add" | "copy".
+    """
+    assert acc.ndim == 2 and acc.shape == y.shape, (acc.shape, y.shape)
+    assert op in ("add", "copy"), op
+    nb, be = acc.shape
+    assert be * acc.dtype.itemsize <= MAX_BUCKET_BYTES, \
+        f"bucket row of {be} elems exceeds the VMEM block budget"
+    kernel = functools.partial(_combine_kernel, op=op)
+    gate2 = jnp.asarray(gate).astype(jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, be), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        interpret=interpret,
+    )(gate2, acc, y)

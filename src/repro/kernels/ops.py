@@ -10,6 +10,7 @@ import functools
 
 import jax
 
+from .bucket_combine import bucket_combine
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
 from .mamba2_scan import mamba2_scan
@@ -50,3 +51,11 @@ def mlstm_op(q, k, v, logi, logf, *, chunk=256, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return mlstm_chunkwise(q, k, v, logi, logf, chunk=chunk,
                            interpret=interpret)
+
+
+def bucket_combine_op(acc, y, gate, *, op="add", interpret=None):
+    """Fused local reduce of one collective round over the bucketed grad
+    buffer (collective_exec). Not jitted here: it is traced inside the
+    engine's shard_map programs."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return bucket_combine(acc, y, gate, op=op, interpret=interpret)

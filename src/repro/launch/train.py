@@ -15,11 +15,19 @@ schedule of events, e.g.:
 Each event is ``kind@step`` (kind: join | leave | fail; leave/fail may
 pin a worker with ``kind:wid@step``). The loop re-lowers its compiled
 step at every epoch boundary and prints the epoch log.
+
+``--host-devices 8`` splits the host CPU into a simulated 8-device mesh
+(must be the first thing to touch jax, so it is applied before any
+device use) and ``--device-collective`` forces gradient sync through the
+execution engine's compiled shard_map programs; by default the engine is
+used automatically whenever more than one device is visible and the
+batch divides the team.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 
@@ -73,8 +81,25 @@ def main(argv=None):
     ap.add_argument("--sync-kind", default="phaser_scsl",
                     choices=["phaser_scsl", "recursive_doubling",
                              "halving_doubling", "xla_psum"],
-                    help="preferred per-epoch gradient-sync schedule")
+                    help="per-epoch gradient-sync schedule (every kind "
+                         "now covers non-power-of-two teams)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="split the host into N simulated devices "
+                         "(XLA_FLAGS; must precede first jax device use)")
+    ap.add_argument("--device-collective", action="store_true",
+                    help="require gradient sync through the compiled "
+                         "shard_map engine (default: auto)")
     args = ap.parse_args(argv)
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        ).strip()
+        if len(jax.devices()) != args.host_devices:
+            print(f"# --host-devices {args.host_devices}: backend already "
+                  f"initialized with {len(jax.devices())} devices; set "
+                  "XLA_FLAGS before launch instead")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -86,9 +111,13 @@ def main(argv=None):
                        seq=args.seq, seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     runtime = events = None
-    if args.elastic is not None:
+    if args.elastic is not None or args.device_collective:
+        # --device-collective without churn still needs the runtime: the
+        # engine's programs are keyed by its epochs (a static team is
+        # just a single epoch)
         runtime = ElasticPhaserRuntime(args.workers, seed=args.seed,
                                        kind=args.sync_kind)
+    if args.elastic is not None:
         try:
             events = parse_elastic(args.elastic)
         except ValueError as e:
@@ -97,7 +126,9 @@ def main(argv=None):
                      ckpt_every=args.ckpt_every,
                      microbatches=args.microbatches,
                      runtime=runtime,
-                     elastic_events=events or {})
+                     elastic_events=events or {},
+                     device_collective=(True if args.device_collective
+                                        else None))
     try:
         loop.run(args.steps, resume=args.resume)
     except ValueError as e:

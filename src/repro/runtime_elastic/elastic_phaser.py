@@ -71,11 +71,10 @@ class Epoch:
 class ElasticPhaserRuntime:
     """Drives membership epochs through the protocol actors.
 
-    ``kind`` is the *preferred* gradient-sync schedule; epochs whose live
-    count breaks its precondition (recursive/halving doubling need a
-    power-of-two team) fall back to ``phaser_scsl``, which is valid for
-    any team — the fallback is itself epoch-versioned, so the preferred
-    schedule returns automatically once the team size allows.
+    ``kind`` is the per-epoch gradient-sync schedule. Every kind is valid
+    for any team size (non-power-of-two teams get the elimination
+    derivations in ``core/collective.py``), so an epoch's kind equals the
+    preference — the historical fallback to ``phaser_scsl`` is gone.
     """
 
     def __init__(self, n_workers: int, *, seed: int = 0,
@@ -117,12 +116,26 @@ class ElasticPhaserRuntime:
         data plane's re-lower trigger."""
         self._on_epoch.append(fn)
 
+    def bind_program_cache(self, cache) -> None:
+        """Attach an epoch-aware program cache (anything with
+        ``.get(collective)``, e.g. ``collective_exec.ProgramCache``): the
+        current epoch's program is compiled now, and every boundary
+        compiles (or re-uses) the next epoch's program right at the phase
+        advance — the data plane swaps executables instead of
+        re-simulating the schedule on host."""
+        def hook(old: Epoch, new: Epoch) -> None:
+            if new.collective is not None:
+                cache.get(new.collective)
+        self.on_epoch(hook)
+        if self.epoch.collective is not None:
+            cache.get(self.epoch.collective)
+
     def _kind_for(self, n: int, kind: Optional[str] = None) -> str:
-        kind = kind if kind is not None else self.kind
-        if kind in ("recursive_doubling", "halving_doubling") \
-                and (n == 0 or n & (n - 1) != 0):
-            return "phaser_scsl"
-        return kind
+        """The schedule kind an epoch of ``n`` members compiles. Since
+        the elimination derivations (PR 2) every kind covers every team
+        size, so this is the preference itself; the hook is kept for
+        callers that pass explicit overrides."""
+        return kind if kind is not None else self.kind
 
     def _derive_epoch(self, index: int, phase_start: int) -> Epoch:
         keys = tuple(sorted(self.live))

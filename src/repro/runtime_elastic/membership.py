@@ -49,8 +49,8 @@ class ElasticController(ElasticPhaserRuntime):
     def collective(self, kind: Optional[str] = None) -> PhaserCollective:
         """Current-epoch collective schedule for the data axis. Passing a
         ``kind`` overrides the epoch's preferred schedule (derived over
-        the same live keys, with the same power-of-two fallback the
-        epoch machinery applies)."""
+        the same live keys; every kind covers any team size via the
+        elimination derivations)."""
         ep = self.epoch
         kind = self._kind_for(len(ep.live), kind)
         if kind == ep.kind:

@@ -14,12 +14,21 @@ the same epoch mechanism as elastic training:
   observable only at phase boundaries, so a step never sees a
   half-admitted batch.
 
+Admission is **bulk**: all free slots are filled at the same phase
+boundary, grouped by prompt length, and each group runs one
+``prefill_fn`` call over the whole prompt (a single forward instead of
+one decode step per token); the returned per-layer KV is spliced into
+the admitted slots' cache regions without touching running slots.
+Families whose decode state is not a plain KV cache (ssm/xlstm/hybrid
+recurrences, enc-dec, vlm) and prompts longer than the cache window keep
+the token-by-token path.
+
 Correctness note (the bug this design fixed): anything handed to the
 async-dispatched jitted decode must be an immutable snapshot. Passing a
 live numpy buffer zero-copy and then mutating it in place (the next
 prefill token, ``slot_pos[i] += 1``) races the pending execution —
 flakily, since the window depends on dispatch latency. All device inputs
-are therefore fresh copies taken at the call boundary.
+therefore go through ``utils.to_device_copy``.
 """
 from __future__ import annotations
 
@@ -33,6 +42,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.registry import ModelAPI
 from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
+from ..utils import to_device_copy
 
 
 @dataclass
@@ -64,6 +74,7 @@ class ServeEngine:
         self.finished: List[Request] = []
         # no donation: _admit snapshots the pre-prefill state for splicing
         self._decode = jax.jit(api.decode_fn)
+        self._prefill = jax.jit(api.prefill_fn)
         # per-leaf batch dim: the dim whose size changes with the batch
         # (needed to splice a newly-prefilled slot into the live state
         # without touching other slots)
@@ -73,6 +84,14 @@ class ServeEngine:
             lambda a, b: next(i for i, (x, y)
                               in enumerate(zip(a.shape, b.shape))
                               if x != y), s1, s2)
+        # bulk-prefill eligibility: decode state must be the plain stacked
+        # KV cache whose layout prefill_fn's caches splice into directly
+        layers = self.state.get("layers")
+        self._bulk = (self.cfg.family in ("dense", "moe")
+                      and not self.cfg.is_encdec
+                      and isinstance(layers, dict)
+                      and set(layers) == {"k", "v", "pos"})
+        self._kv_window = layers["k"].shape[2] if self._bulk else 0
 
     @property
     def epoch(self) -> int:
@@ -93,46 +112,94 @@ class ServeEngine:
 
     def _dispatch(self, token_b: np.ndarray, pos_b: np.ndarray):
         """One jitted decode call. Inputs are SNAPSHOTTED into fresh
-        numpy buffers owned by this call: ``jnp.array``'s host-to-device
-        transfer may alias the source buffer and read it asynchronously,
-        so handing it a buffer the caller mutates right after dispatch
-        (the next prefill token, ``slot_pos[i] += 1``) races the pending
-        execution (see module docstring). A fresh copy is never mutated."""
+        buffers owned by this call (``to_device_copy``): the
+        host-to-device transfer may alias the source buffer and read it
+        asynchronously, so handing it a buffer the caller mutates right
+        after dispatch (the next prefill token, ``slot_pos[i] += 1``)
+        races the pending execution (see module docstring)."""
         return self._decode(
             self.params, self.state,
-            {"token": jnp.asarray(np.array(token_b, dtype=np.int32)),
-             "t": jnp.asarray(np.array(pos_b, dtype=np.int32))})
+            {"token": to_device_copy(token_b, dtype=np.int32),
+             "t": to_device_copy(pos_b, dtype=np.int32)})
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def _admit(self) -> None:
-        """Phase-boundary refill: fill free slots from the queue (JOIN =
-        eager insertion) by prefilling the prompt token-by-token into the
-        slot's cache region."""
+        """Phase-boundary refill: fill ALL free slots from the queue at
+        this boundary (JOIN = eager insertion). Admits are batched: bulk
+        groups (same prompt length, KV-cache family) run one prefill_fn
+        forward each and splice their caches in; everything else falls
+        back to token-by-token prefill."""
+        admits: List[Tuple[int, Request]] = []
         for slot in range(self.batch):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            # prefill via decode steps, then splice only this slot's state
-            # back (simple and correct for every family; the bulk prefill
-            # path is exercised by prefill_fn in the dryrun cells)
-            old_state = self.state
-            token_b = np.zeros((self.batch,), np.int32)
-            logits = None
-            for t, tok in enumerate(req.prompt):
-                token_b[slot] = tok
-                logits, self.state = self._dispatch(
-                    token_b, self._pos_with(slot, t))
-            self.state = self._splice_slot(old_state, self.state, slot)
-            req.out.append(int(jnp.argmax(logits[slot])))
-            self.slot_key[slot] = self.gate.request_join()
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = len(req.prompt)
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self._retire(slot)
+            if self.slot_req[slot] is None and self.queue:
+                admits.append((slot, self.queue.pop(0)))
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, req in admits:
+            if self._bulk and len(req.prompt) <= self._kv_window:
+                groups.setdefault(len(req.prompt), []).append((slot, req))
+            else:
+                self._admit_sequential(slot, req)
+        for length, group in sorted(groups.items()):
+            self._admit_bulk(group, length)
+
+    def _admit_bulk(self, group: List[Tuple[int, "Request"]],
+                    length: int) -> None:
+        """One prefill_fn forward over the whole group, then splice each
+        slot's cache region (running slots untouched)."""
+        tokens = to_device_copy(np.stack([r.prompt for _, r in group]),
+                                dtype=np.int32)
+        logits, caches = self._prefill(self.params, {"tokens": tokens})
+        self.state = self._splice_prefill(self.state, caches,
+                                          [s for s, _ in group], length)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for g, (slot, req) in enumerate(group):
+            self._occupy(slot, req, int(nxt[g]), length)
+
+    def _splice_prefill(self, state, caches, slots: List[int],
+                        length: int):
+        """Write the prefilled per-layer KV into the admitted slots'
+        cache regions: positions 0..length-1 become valid (pos mask),
+        every other slot's cache is untouched."""
+        st = state["layers"]
+        pf = caches["layers"]
+        sl = jnp.asarray(slots)
+        new = dict(st)
+        new["k"] = st["k"].at[:, sl, :length].set(
+            pf["k"].astype(st["k"].dtype))
+        new["v"] = st["v"].at[:, sl, :length].set(
+            pf["v"].astype(st["v"].dtype))
+        pos = jnp.arange(length, dtype=jnp.int32)
+        new["pos"] = st["pos"].at[:, sl, :length].set(
+            jnp.broadcast_to(pos, (st["pos"].shape[0], len(slots), length)))
+        return {**state, "layers": new}
+
+    def _admit_sequential(self, slot: int, req: "Request") -> None:
+        """Fallback admission for recurrent-state families and prompts
+        beyond the cache window: prefill via decode steps, then splice
+        only this slot's state back."""
+        old_state = self.state
+        token_b = np.zeros((self.batch,), np.int32)
+        logits = None
+        for t, tok in enumerate(req.prompt):
+            token_b[slot] = tok
+            logits, self.state = self._dispatch(
+                token_b, self._pos_with(slot, t))
+        self.state = self._splice_slot(old_state, self.state, slot)
+        self._occupy(slot, req, int(jnp.argmax(logits[slot])),
+                     len(req.prompt))
+
+    def _occupy(self, slot: int, req: "Request", first_tok: int,
+                length: int) -> None:
+        req.out.append(first_tok)
+        self.slot_key[slot] = self.gate.request_join()
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = length
+        if len(req.out) >= req.max_new:
+            req.done = True
+            self._retire(slot)
 
     def _retire(self, slot: int) -> None:
         """LEAVE: the finished request's participant deregisters; the

@@ -10,6 +10,13 @@ deletions. When an ``ElasticPhaserRuntime`` is attached, the loop
 re-lowers its compiled step at every epoch boundary (the schedule is part
 of the step's static identity) and saves a checkpoint first, so a crash
 mid-re-lower resumes into a consistent (params, epoch) pair.
+
+With multiple devices available (``device_collective`` auto/True), the
+per-epoch step is the execution engine's compiled shard_map program: the
+global batch is sharded over the epoch's mesh axis and gradients sync
+through the schedule's ppermute rounds on device. Programs come from an
+epoch-aware cache keyed by (member_set, kind), so a boundary that
+revisits a team swaps back to an already-compiled executable.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import CheckpointManager
@@ -25,6 +33,7 @@ from ..data import SyntheticLM
 from ..models.registry import ModelAPI
 from ..optim import AdamW
 from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
+from ..utils import to_device_copy
 from .step import build_train_step
 
 
@@ -44,6 +53,10 @@ class TrainLoop:
     # step -> list of ("join", None) | ("leave", wid|None) | ("fail", wid|None)
     elastic_events: Dict[int, List] = field(default_factory=dict)
     epoch_log: List[Dict] = field(default_factory=list)
+    # device-collective data plane: None = auto (on when >1 device and the
+    # batch divides the team), True = required, False = host/XLA path
+    device_collective: Optional[bool] = None
+    _progs: Any = field(default=None, init=False, repr=False)
 
     def _apply_elastic_events(self, step: int) -> None:
         for kind, arg in self.elastic_events.get(step, []):
@@ -78,9 +91,36 @@ class TrainLoop:
             self._apply_elastic_events(s)
             self.runtime.advance(step=s)
 
+    def _collective_devices(self, pc) -> Optional[List]:
+        """Devices for the device-collective path, or None for the
+        host/XLA path. Auto mode requires >1 device, enough of them for
+        the team, a batch the team divides, and no microbatching."""
+        if self.device_collective is False or pc is None:
+            return None
+        devs = jax.devices()
+        ok = (len(devs) >= pc.n and pc.n >= 1
+              and self.data.batch % pc.n == 0
+              and self.microbatches == 1)
+        if self.device_collective is True:
+            assert ok, (f"device_collective requested but team={pc.n}, "
+                        f"devices={len(devs)}, batch={self.data.batch}, "
+                        f"microbatches={self.microbatches}")
+            return devs
+        return devs if ok and len(devs) > 1 else None
+
     def _build_step(self):
         pc = (self.runtime.epoch.collective
               if self.runtime is not None else None)
+        devs = self._collective_devices(pc)
+        if devs is not None:
+            if self._progs is None:
+                from ..collective_exec import ProgramCache
+                self._progs = ProgramCache(
+                    lambda c: build_train_step(
+                        self.api, self.opt, rules=None, remat=self.remat,
+                        microbatches=1, donate=False, collective=c,
+                        collective_devices=jax.devices()))
+            return self._progs.get(pc)
         return build_train_step(self.api, self.opt, rules=None,
                                 remat=self.remat,
                                 microbatches=self.microbatches,
@@ -110,10 +150,21 @@ class TrainLoop:
             if self.runtime is not None:
                 self._apply_elastic_events(step)
             batch = next(self.data)
-            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            # snapshot into fresh device buffers: jnp.asarray on a host
+            # buffer may alias it and read asynchronously (see utils)
+            batch = {k: to_device_copy(v) for k, v in batch.items()}
             t0 = time.time()
-            params, opt_state, metrics = ts.jitted(params, opt_state,
-                                                   batch)
+            if ts.program is not None:
+                # per-worker alive mask: a worker that left mid-epoch
+                # contributes zeros; the program's masked mean re-scales
+                ep = self.runtime.epoch
+                alive = jnp.asarray([1.0 if w in self.runtime.live else 0.0
+                                     for w in ep.live], jnp.float32)
+                params, opt_state, metrics = ts.jitted(params, opt_state,
+                                                       batch, alive)
+            else:
+                params, opt_state, metrics = ts.jitted(params, opt_state,
+                                                       batch)
             if self.runtime is not None:
                 # the step is one phaser phase; churn requested above
                 # lands as a new epoch exactly at this boundary

@@ -1,15 +1,21 @@
 """Train-step builder: loss + grad + AdamW update, with optional gradient
 accumulation (microbatching) and remat, distributed via NamedShardings
-derived from the sharding policy. The gradient cross-replica reduction is
-performed by XLA from the shardings (baseline) — the phaser-coordinated
-explicit schedules (core/collective.py) are exercised by the shard_map
-path in runtime_elastic / examples and compared in benchmarks.
+derived from the sharding policy.
+
+Gradient cross-replica reduction has two paths:
+
+* baseline — XLA derives the reduction from the shardings (psum);
+* device collective — when a ``collective`` *and* ``collective_devices``
+  are passed, the step is compiled by the execution engine
+  (``collective_exec``): a shard_map program over a real mesh axis that
+  runs the epoch's schedule as ``lax.ppermute`` rounds with the fused
+  Pallas bucket-combine local reduce.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,16 +30,38 @@ from ..sharding.policies import batch_specs
 
 @dataclass
 class TrainStep:
-    """A lowered/compilable train step plus its shardings."""
+    """A lowered/compilable train step plus its shardings. ``program``
+    is set on the device-collective path (the engine's compiled
+    GradSyncProgram); its ``jitted`` then also accepts an optional
+    trailing per-worker alive mask."""
 
     fn: Callable                      # (params, opt, batch) -> (p, o, m)
     jitted: Any
     param_sh: Any
     opt_sh: Any
     batch_sh: Any
+    program: Any = None
 
     def lower(self, param_spec, opt_spec, batch_spec):
         return self.jitted.lower(param_spec, opt_spec, batch_spec)
+
+
+def _program_step(api: ModelAPI, opt: AdamW, collective,
+                  devices: Sequence, *, remat: bool, stacked: bool,
+                  donate: bool) -> TrainStep:
+    """Device-collective path: compile the schedule into a shard_map
+    program (collective_exec) and adapt it to the TrainStep surface."""
+    from ..collective_exec import build_gradsync_program
+    prog = build_gradsync_program(api, opt, collective, devices=devices,
+                                  stacked=stacked, remat=remat,
+                                  donate=donate)
+
+    def jitted(params, opt_state, batch, alive=None):
+        new_p, new_o, pm = prog.step(params, opt_state, batch, alive)
+        return new_p, new_o, prog.reduce_metrics(pm)
+
+    return TrainStep(fn=jitted, jitted=jitted, param_sh=None, opt_sh=None,
+                     batch_sh=None, program=prog)
 
 
 def build_train_step(api: ModelAPI, opt: AdamW, *,
@@ -41,14 +69,23 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
                      remat: bool = True,
                      microbatches: int = 1,
                      donate: bool = True,
-                     collective=None) -> TrainStep:
+                     collective=None,
+                     collective_devices: Optional[Sequence] = None,
+                     stacked_batch: bool = False) -> TrainStep:
     """``collective``: the elastic epoch's PhaserCollective. It is part
     of the lowered step's *static identity* — re-building at an epoch
-    boundary re-lowers for the new team. On a single-process simulation
+    boundary re-lowers for the new team. Without ``collective_devices``
     the schedule enters the step as static sync metadata in the metrics
-    (team size, rounds, messages); on a mesh the same hook is where the
-    schedule's all-reduce wraps the gradient reduction (ROADMAP)."""
+    (team size, rounds, messages); with them, the step is the execution
+    engine's compiled shard_map program and the schedule's ppermute
+    rounds *are* the gradient reduction."""
     cfg = api.cfg
+    if collective is not None and collective_devices is not None:
+        assert microbatches == 1, \
+            "microbatching is not supported on the device-collective path"
+        return _program_step(api, opt, collective, collective_devices,
+                             remat=remat, stacked=stacked_batch,
+                             donate=donate)
     sync_meta = None
     if collective is not None:
         st = collective.stats()

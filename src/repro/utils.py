@@ -1,0 +1,22 @@
+"""Small cross-cutting helpers.
+
+``to_device_copy`` exists because of a real flake (DESIGN.md §5):
+``jnp.asarray(np_buf)``'s host-to-device transfer may *alias* the source
+buffer and read it asynchronously after dispatch returns. Handing it a
+buffer the caller mutates right afterwards (the next prefill token, an
+in-place position bump, a reused staging array) races the pending
+execution — flakily, since the window depends on dispatch latency. Every
+dispatch site that feeds a host buffer it does not exclusively own into
+a jitted call must snapshot through this helper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_device_copy(buf, dtype=None) -> jnp.ndarray:
+    """Snapshot a host buffer into a device array via a fresh, never
+    mutated copy. Safe against the async host-to-device aliasing race;
+    also normalizes non-contiguous views (np slices) before transfer."""
+    return jnp.asarray(np.array(buf, dtype=dtype, copy=True))

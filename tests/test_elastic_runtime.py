@@ -67,16 +67,21 @@ def test_on_epoch_hook_fires_with_old_and_new():
     assert seen == [(0, 1, (0, 1, 2, 3), (0, 1, 2, 3, 4))]
 
 
-def test_kind_fallback_non_pow2():
+def test_kind_kept_for_non_pow2_teams():
+    """Since the elimination derivations every kind covers every team
+    size: a non-pow2 epoch keeps the preferred schedule (the historical
+    fallback to phaser_scsl is gone)."""
     rt = ElasticPhaserRuntime(4, seed=0, kind="recursive_doubling")
     assert rt.epoch.kind == "recursive_doubling"
     rt.request_join()
     rt.advance()
-    assert rt.epoch.n == 5 and rt.epoch.kind == "phaser_scsl"  # fallback
+    assert rt.epoch.n == 5 and rt.epoch.kind == "recursive_doubling"
+    assert rt.epoch.collective.rd.ops[-1] == "copy"   # elimination form
     for _ in range(3):
         rt.request_join()
     rt.advance()
     assert rt.epoch.n == 8 and rt.epoch.kind == "recursive_doubling"
+    assert rt.epoch.collective.rd.ops == ("add",) * 3  # pure hypercube
     rt.verify_epoch()
 
 
@@ -143,9 +148,6 @@ def test_simulate_allreduce_matches_direct_sum():
         for keys in [(0, 1, 2, 3), (1, 3, 5, 9), (0, 2, 3, 5, 7, 11),
                      (4, 7, 9)]:
             n = len(keys)
-            if kind in ("recursive_doubling", "halving_doubling") \
-                    and n & (n - 1):
-                continue
             pc = PhaserCollective(n, "data", kind=kind, keys=keys, seed=3)
             xs = [rng.normal(size=17).astype(np.float32) for _ in range(n)]
             out = pc.simulate_allreduce(xs)
@@ -263,9 +265,16 @@ def test_serve_engine_one_token_requests_still_land_epochs():
     assert eng.gate.epoch.live == ()
 
 
-def test_halving_doubling_rejects_non_pow2_up_front():
-    with pytest.raises(AssertionError, match="power-of-2"):
-        PhaserCollective(3, "data", kind="halving_doubling")
+def test_halving_doubling_accepts_non_pow2():
+    """Shrink-to-3-style teams run the elimination pre-phase instead of
+    being rejected (or falling back)."""
+    pc = PhaserCollective(3, "data", kind="halving_doubling")
+    xs = [np.full((5,), float(i + 1)) for i in range(3)]
+    out = pc.simulate_allreduce(xs)
+    for o in out:
+        np.testing.assert_allclose(o, np.full((5,), 6.0))
+    st = pc.stats()
+    assert st["rounds"] == 2 + 3          # 1 core round each way + elim
 
 
 def test_train_loop_resume_replays_elastic_churn(tmp_path):
@@ -303,15 +312,15 @@ def test_train_loop_resume_replays_elastic_churn(tmp_path):
     b.runtime.verify_epoch()
 
 
-def test_controller_collective_kind_override_applies_fallback():
+def test_controller_collective_kind_override_keeps_kind():
     from repro.runtime_elastic import ElasticController
 
     c = ElasticController(4, seed=0, kind="recursive_doubling")
     c.join(0)
     c.step_barrier(0)                       # epoch of 5: not a pow2 team
-    assert c.epoch.kind == "phaser_scsl"
-    # an explicit override request gets the same fallback, not a crash
-    pc = c.collective("recursive_doubling")
-    assert pc.kind == "phaser_scsl" and pc.n == 5
+    assert c.epoch.kind == "recursive_doubling"   # elimination, no fallback
+    # explicit overrides derive over the same live keys, any kind
     pc = c.collective("halving_doubling")
-    assert pc.kind == "phaser_scsl"
+    assert pc.kind == "halving_doubling" and pc.n == 5
+    pc = c.collective("phaser_scsl")
+    assert pc.kind == "phaser_scsl" and pc.keys == c.epoch.live

@@ -106,3 +106,44 @@ def test_mlstm_vs_ref(B, NH, S, hd, chunk, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------- bucket combine
+@pytest.mark.parametrize("op", ["add", "copy"])
+@pytest.mark.parametrize("gate", [0, 1])
+def test_bucket_combine_vs_ref(op, gate):
+    from repro.kernels.ops import bucket_combine_op
+
+    rng = np.random.default_rng(7)
+    acc = jnp.asarray(rng.normal(size=(3, 256)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(3, 256)).astype(np.float32))
+    out = bucket_combine_op(acc, y, jnp.asarray(bool(gate)), op=op,
+                            interpret=True)
+    if op == "add":
+        want = np.asarray(acc) + gate * np.asarray(y)
+    else:
+        want = np.asarray(y) if gate else np.asarray(acc)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+
+def test_bucket_combine_executes_schedule_like_simulate():
+    """Chained combines reproduce the host simulate_schedule semantics
+    on a 3-rank elimination schedule (kernel as the round primitive)."""
+    from repro.core.collective import recursive_doubling_schedule, simulate_schedule
+    from repro.kernels.ops import bucket_combine_op
+
+    sched = recursive_doubling_schedule(3)
+    rng = np.random.default_rng(1)
+    vals = [rng.normal(size=(2, 128)).astype(np.float32) for _ in range(3)]
+    accs = [jnp.asarray(v) for v in vals]
+    for r, pairs in enumerate(sched.rounds):
+        incoming = {d: accs[s] for s, d in pairs}
+        accs = [bucket_combine_op(accs[i],
+                                  incoming.get(i, jnp.zeros_like(accs[i])),
+                                  jnp.asarray(i in incoming),
+                                  op=sched.op(r), interpret=True)
+                for i in range(3)]
+    want = simulate_schedule(sched, vals)
+    for got, w in zip(accs, want):
+        np.testing.assert_allclose(np.asarray(got), w, rtol=1e-5,
+                                   atol=1e-5)
