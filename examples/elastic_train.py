@@ -58,9 +58,15 @@ ckpt_dir = tempfile.mkdtemp(prefix="elastic_ckpt_")
 ckpt = CheckpointManager(ckpt_dir, async_write=False)
 
 # epoch-aware program caches: compiled once per (member_set, kind); the
-# runtime swaps programs at phase-advance boundaries via the bound cache
+# runtime swaps programs at phase-advance boundaries via the bound cache.
+# The engine programs are the OVERLAPPED ones (DESIGN.md §5): reverse-topo
+# bucket groups synced through the double-buffered pipelined executor
+# while the backward pass still runs — bitwise-equal to eager by design,
+# proven here against the xla_psum baseline at every step.
 programs = ProgramCache(
-    lambda pc: build_gradsync_program(api, opt, pc, stacked=True))
+    lambda pc: build_gradsync_program(api, opt, pc, stacked=True,
+                                      overlap="pipelined"),
+    extra_key=("pipelined", 1))
 baseline = ProgramCache(
     lambda pc: build_gradsync_program(
         api, opt,
@@ -165,6 +171,8 @@ for ep in rt.epochs:
 assert programs.stats()["misses"] == len(rt.epochs)
 assert losses[-1] < losses[0], "loss did not decrease through churn"
 print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across grow 4->6 / "
-      f"shrink 6->3, synced on-device by the compiled "
-      f"{rt.kind} schedule: OK")
+      f"shrink 6->3, synced on-device by the compiled OVERLAPPED "
+      f"{rt.kind} schedule "
+      f"({programs.get(rt.collective()).meta['bucket_groups']} bucket "
+      f"groups): OK")
 shutil.rmtree(ckpt_dir, ignore_errors=True)

@@ -8,6 +8,12 @@ but corrupt checkpoint (restart-safety). Writes can run on a background
 thread (async) so the training loop overlaps checkpoint I/O with compute —
 the phaser split-phase idea applied to I/O: "signal" (snapshot + enqueue)
 early, "wait" (join) only before the next snapshot.
+
+The manifest also records the **program-cache key** of the epoch that
+produced the checkpoint (member set, schedule kind, seed/p, overlap
+config — DESIGN.md §5): ``program_key()`` reads it without touching the
+parameter arrays, so a resuming trainer pre-compiles the exact epoch
+program before step 1 instead of discovering it at the first re-lower.
 """
 from __future__ import annotations
 
@@ -43,8 +49,13 @@ class CheckpointManager:
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, params, opt_state=None,
-             extra: Optional[Dict] = None) -> None:
-        """Snapshot to host memory now; write (possibly async) after."""
+             extra: Optional[Dict] = None,
+             program_key: Optional[Dict] = None) -> None:
+        """Snapshot to host memory now; write (possibly async) after.
+
+        ``program_key`` is the epoch's program-cache identity (member
+        set, kind, overlap config) — stored in the manifest so resume
+        can pre-compile the exact program before step 1."""
         self.wait()           # at most one outstanding async write
         snap = {}
         snap_tree = {"params": params}
@@ -57,6 +68,7 @@ class CheckpointManager:
             "step": step,
             "leaves": sorted(snap),
             "extra": extra or {},
+            "program": program_key,
             "time": time.time(),
         }
 
@@ -104,6 +116,18 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def program_key(self, step: Optional[int] = None) -> Optional[Dict]:
+        """The program-cache key recorded at ``step`` (default latest),
+        or None for checkpoints from non-engine runs. Reads only the
+        manifest — cheap enough to call before the array restore."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(self.dir, f"step_{step:09d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f).get("program")
 
     def restore(self, template, step: Optional[int] = None
                 ) -> Tuple[int, Any, Dict]:

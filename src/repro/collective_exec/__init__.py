@@ -1,18 +1,24 @@
-"""Device-resident collective execution engine (DESIGN.md §4).
+"""Device-resident collective execution engine (DESIGN.md §4–§5).
 
 Compiles phaser-derived schedules into executable gradient-sync
-programs: bucketed grad flattening (``buckets``), scheduled
-``lax.ppermute`` rounds with a fused Pallas bucket-combine local reduce
-(``executor``), ``shard_map`` train-step programs over a real mesh axis
-(``program``), and the epoch-aware program cache that lets the elastic
-runtime swap compiled programs at phase-advance boundaries (``cache``).
+programs: bucketed grad flattening in reverse-topological (backprop
+readiness) order with per-bucket readiness groups (``buckets``),
+scheduled ``lax.ppermute`` rounds with a fused Pallas bucket-combine
+local reduce — eager over the whole buffer or double-buffered per
+readiness group (``executor``), ``shard_map`` train-step programs over
+a real mesh axis with optional comm/compute overlap and microbatch
+pipelining (``program``), and the epoch-aware program cache that lets
+the elastic runtime swap compiled programs — eager and overlapped alike
+— at phase-advance boundaries (``cache``).
 """
 from .buckets import BucketLayout, make_layout
 from .cache import ProgramCache
-from .executor import execute_flat
-from .program import (GradSyncProgram, build_allreduce_program,
-                      build_gradsync_program, mesh_for)
+from .executor import execute_flat, execute_flat_pipelined
+from .program import (OVERLAP_MODES, GradSyncProgram,
+                      build_allreduce_program, build_gradsync_program,
+                      mesh_for)
 
 __all__ = ["BucketLayout", "make_layout", "ProgramCache", "execute_flat",
-           "GradSyncProgram", "build_allreduce_program",
-           "build_gradsync_program", "mesh_for"]
+           "execute_flat_pipelined", "OVERLAP_MODES", "GradSyncProgram",
+           "build_allreduce_program", "build_gradsync_program",
+           "mesh_for"]

@@ -1,6 +1,6 @@
 """Bucketed flattening of gradient pytrees for the execution engine.
 
-The grad pytree is raveled leaf-by-leaf into one f32 vector, the *alive
+The grad pytree is raveled leaf-by-leaf into an f32 vector, the *alive
 flag* (1.0 for a contributing worker, 0.0 for a departed one) is
 appended, and the vector is zero-padded up to a ``(n_buckets,
 bucket_elems)`` buffer whose rows are lane-aligned (multiples of 128)
@@ -11,12 +11,24 @@ pytree leaf.
 Because the alive flag rides the same all-reduce as the payload, the
 reduced buffer's flag slot holds the live contributor count: the masked
 mean (``sum(grads) / n_alive``) costs no second collective.
+
+**Reverse-layer order + readiness groups** (DESIGN.md §5): leaves are
+ordered by *reverse topological depth* of the grad pytree — output-side
+parameters (lm_head, final_norm) first, stacked block parameters next,
+input-side embeddings last — because backprop finalizes gradients in
+exactly that order. Contiguous runs of leaves with the same readiness
+class form **bucket groups**: group 0's buckets hold the gradients that
+finalize earliest, so a pipelined executor can start syncing group 0
+while the backward pass is still producing the later groups. Each group
+is padded to a whole number of buckets independently, which keeps every
+group's sub-buffer a standalone ``(g_buckets, bucket_elems)`` collective
+operand with no dataflow dependency on the other groups' leaves.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Any, Tuple
+from dataclasses import dataclass, field
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,58 +38,166 @@ from ..kernels.bucket_combine import MAX_BUCKET_BYTES
 LANES = 128                        # TPU lane width: rows stay tile-aligned
 DEFAULT_BUCKET_ELEMS = 1 << 16     # 256 KiB f32 rows
 
+# readiness classes, in the order backprop finalizes gradients:
+#   0 = output side (loss head — grads ready first)
+#   1 = interior blocks (stacked-layer leaves — ready after the backward
+#       scan reaches layer 0)
+#   2 = input side (embeddings — accumulated until the very end)
+_OUTPUT_NAMES = ("lm_head", "final_norm", "head", "out_norm")
+_INPUT_NAMES = ("embed", "patch_proj", "frame_proj")
+
+
+def _leaf_class(path: Tuple) -> int:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))).lower()
+             for p in path]
+    for n in names:
+        if any(tag in n for tag in _OUTPUT_NAMES):
+            return 0
+        if any(tag in n for tag in _INPUT_NAMES):
+            return 2
+    return 1
+
 
 @dataclass(frozen=True)
 class BucketLayout:
     """Static identity of the bucketed buffer: part of the compiled
     program's key (it is derived from the param spec, which only changes
-    when the model does)."""
+    when the model does).
+
+    ``perm[j]`` is the index (into tree-flatten order) of the j-th leaf
+    in buffer order; ``group_leaves`` are [lo, hi) ranges into that
+    permuted order, one per readiness group (group 0 finalizes
+    earliest); ``group_buckets`` is each group's bucket count, and
+    ``groups`` the derived [start, stop) *bucket* ranges. The alive flag
+    occupies ``flag_index`` (flattened element index) at the tail of the
+    last group — it is an input, so it never delays a group's readiness.
+    """
 
     treedef: Any
     shapes: Tuple[Tuple[int, ...], ...]
     dtypes: Tuple[Any, ...]
     sizes: Tuple[int, ...]
-    payload: int                   # raveled grad elems; flag sits after
+    payload: int                   # raveled grad elems (without the flag)
     n_buckets: int
     bucket_elems: int
+    perm: Tuple[int, ...] = ()
+    group_leaves: Tuple[Tuple[int, int], ...] = ()
+    group_buckets: Tuple[int, ...] = ()
+    flag_index: int = -1
+
+    def __post_init__(self):
+        if not self.perm:
+            object.__setattr__(self, "perm",
+                               tuple(range(len(self.sizes))))
+        if not self.group_leaves:
+            object.__setattr__(self, "group_leaves",
+                               ((0, len(self.sizes)),))
+        if not self.group_buckets:
+            object.__setattr__(self, "group_buckets", (self.n_buckets,))
+        if self.flag_index < 0:
+            object.__setattr__(
+                self, "flag_index",
+                (self.n_buckets - self.group_buckets[-1])
+                * self.bucket_elems + self._group_payload(-1) - 1)
 
     @property
     def total_elems(self) -> int:
         return self.n_buckets * self.bucket_elems
 
-    def flatten(self, tree, alive) -> jax.Array:
-        """tree -> (n_buckets, bucket_elems) f32, alive flag appended."""
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_buckets)
+
+    @property
+    def groups(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-group [start, stop) bucket ranges, readiness order."""
+        out, off = [], 0
+        for nb in self.group_buckets:
+            out.append((off, off + nb))
+            off += nb
+        return tuple(out)
+
+    def _group_payload(self, g: int) -> int:
+        """Raveled elems in group g, including the flag in the last."""
+        lo, hi = self.group_leaves[g]
+        base = sum(self.sizes[self.perm[j]] for j in range(lo, hi))
+        last = (g == self.n_groups - 1) or (g == -1)
+        return base + (1 if last else 0)
+
+    # ----------------------------------------------------------- flatten
+    def flatten_groups(self, tree, alive) -> List[jax.Array]:
+        """tree -> per-group ``(g_buckets, bucket_elems)`` f32 buffers.
+
+        Each group's buffer depends only on its own leaves (plus the
+        alive flag in the last group), so a consumer can launch group
+        0's collective before the later groups' gradients exist.
+        """
         leaves = jax.tree_util.tree_leaves(tree)
         assert len(leaves) == len(self.sizes), \
             (len(leaves), len(self.sizes))
-        parts = [l.astype(jnp.float32).reshape(-1) for l in leaves]
-        parts.append(jnp.asarray(alive, jnp.float32).reshape(1))
-        flat = jnp.concatenate(parts)
-        pad = self.total_elems - flat.shape[0]
-        assert pad >= 0, (flat.shape[0], self.total_elems)
-        if pad:
-            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-        return flat.reshape(self.n_buckets, self.bucket_elems)
+        out = []
+        for g, (lo, hi) in enumerate(self.group_leaves):
+            parts = [leaves[self.perm[j]].astype(jnp.float32).reshape(-1)
+                     for j in range(lo, hi)]
+            if g == self.n_groups - 1:
+                parts.append(jnp.asarray(alive, jnp.float32).reshape(1))
+            flat = (jnp.concatenate(parts) if parts
+                    else jnp.zeros((0,), jnp.float32))
+            pad = self.group_buckets[g] * self.bucket_elems - flat.shape[0]
+            assert pad >= 0, (g, flat.shape[0])
+            if pad:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros((pad,), jnp.float32)])
+            out.append(flat.reshape(self.group_buckets[g],
+                                    self.bucket_elems))
+        return out
+
+    def flatten(self, tree, alive) -> jax.Array:
+        """tree -> (n_buckets, bucket_elems) f32, alive flag appended at
+        the tail of the last readiness group."""
+        return jnp.concatenate(self.flatten_groups(tree, alive), axis=0)
+
+    # --------------------------------------------------------- unflatten
+    def unflatten_groups(self, bufs: Sequence[jax.Array]
+                         ) -> Tuple[Any, jax.Array]:
+        """Per-group buffers -> (tree, contributor count)."""
+        assert len(bufs) == self.n_groups, (len(bufs), self.n_groups)
+        return self.unflatten(jnp.concatenate(list(bufs), axis=0))
 
     def unflatten(self, buf: jax.Array) -> Tuple[Any, jax.Array]:
         """(n_buckets, bucket_elems) -> (tree, contributor count)."""
         flat = buf.reshape(-1)
-        leaves = []
+        leaves: List[Any] = [None] * len(self.sizes)
         off = 0
-        for shape, dtype, size in zip(self.shapes, self.dtypes,
-                                      self.sizes):
-            leaves.append(flat[off:off + size].reshape(shape)
-                          .astype(dtype))
-            off += size
-        count = flat[self.payload]
+        for g, (lo, hi) in enumerate(self.group_leaves):
+            pos = off
+            for j in range(lo, hi):
+                i = self.perm[j]
+                size = self.sizes[i]
+                leaves[i] = (flat[pos:pos + size]
+                             .reshape(self.shapes[i])
+                             .astype(self.dtypes[i]))
+                pos += size
+            off += self.group_buckets[g] * self.bucket_elems
+        count = flat[self.flag_index]
         return jax.tree_util.tree_unflatten(self.treedef, leaves), count
 
 
-def make_layout(tree, *, bucket_elems: int = None) -> BucketLayout:
+def make_layout(tree, *, bucket_elems: int = None,
+                order: str = "reverse_topo") -> BucketLayout:
     """Derive the bucket layout from a pytree of arrays or
-    ShapeDtypeStructs (typically ``api.param_spec()``)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    assert leaves, "empty gradient tree"
+    ShapeDtypeStructs (typically ``api.param_spec()``).
+
+    ``order="reverse_topo"`` (default) sorts leaves by reverse
+    topological depth — the order backprop finalizes their gradients —
+    and records the readiness groups; ``order="tree"`` keeps the raw
+    tree-flatten order in a single group (the pre-overlap layout).
+    """
+    assert order in ("reverse_topo", "tree"), order
+    flat_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    assert flat_with_paths, "empty gradient tree"
+    paths = [p for p, _ in flat_with_paths]
+    leaves = [l for _, l in flat_with_paths]
     shapes = tuple(tuple(l.shape) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
     sizes = tuple(int(math.prod(s)) for s in shapes)
@@ -88,7 +208,35 @@ def make_layout(tree, *, bucket_elems: int = None) -> BucketLayout:
                            -(-total // LANES) * LANES)
     assert bucket_elems % LANES == 0, bucket_elems
     assert bucket_elems * 4 <= MAX_BUCKET_BYTES, bucket_elems
-    n_buckets = -(-total // bucket_elems)
+
+    if order == "reverse_topo":
+        classes = [_leaf_class(p) for p in paths]
+        perm = tuple(sorted(range(len(leaves)),
+                            key=lambda i: (classes[i], i)))
+    else:
+        classes = [1] * len(leaves)
+        perm = tuple(range(len(leaves)))
+
+    # contiguous runs of one readiness class -> one bucket group
+    group_leaves: List[Tuple[int, int]] = []
+    lo = 0
+    for j in range(1, len(perm) + 1):
+        if j == len(perm) or classes[perm[j]] != classes[perm[lo]]:
+            group_leaves.append((lo, j))
+            lo = j
+    group_buckets = []
+    for g, (glo, ghi) in enumerate(group_leaves):
+        elems = sum(sizes[perm[j]] for j in range(glo, ghi))
+        if g == len(group_leaves) - 1:
+            elems += 1                        # alive flag rides the tail
+        group_buckets.append(max(1, -(-elems // bucket_elems)))
+    n_buckets = sum(group_buckets)
+    flag_index = ((n_buckets - group_buckets[-1]) * bucket_elems
+                  + sum(sizes[perm[j]]
+                        for j in range(*group_leaves[-1])))
     return BucketLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
                         sizes=sizes, payload=payload, n_buckets=n_buckets,
-                        bucket_elems=bucket_elems)
+                        bucket_elems=bucket_elems, perm=perm,
+                        group_leaves=tuple(group_leaves),
+                        group_buckets=tuple(group_buckets),
+                        flag_index=flag_index)

@@ -10,7 +10,11 @@ identity: skip-list heights are a deterministic function of
 ``(seed, key)``, so equal key sets under the same seed derive equal
 skip lists and therefore equal schedules. The cache key carries
 ``(seed, p)`` alongside ``(member_set, kind)`` to stay correct when one
-cache serves collectives from differently-seeded runtimes.
+cache serves collectives from differently-seeded runtimes, and an
+``extra_key`` for builder-level configuration that changes the compiled
+program without changing the collective — the overlap mode, bucket-group
+config, and microbatch count (DESIGN.md §5): an eager and a pipelined
+program over the same member set are distinct cache entries.
 
 LRU-bounded: compiled shard_map executables hold device buffers; the
 default capacity keeps the last 8 teams warm.
@@ -25,10 +29,12 @@ from ..core.collective import PhaserCollective
 
 class ProgramCache:
     def __init__(self, builder: Callable[[PhaserCollective], Any], *,
-                 capacity: Optional[int] = 8):
+                 capacity: Optional[int] = 8,
+                 extra_key: Tuple = ()):
         self._builder = builder
         self._programs: "OrderedDict[Tuple, Any]" = OrderedDict()
         self.capacity = capacity
+        self.extra_key = tuple(extra_key)
         self.hits = 0
         self.misses = 0
 
@@ -36,10 +42,16 @@ class ProgramCache:
     def key_of(pc: PhaserCollective) -> Tuple:
         return (pc.keys, pc.kind, pc.seed, pc.p)
 
+    def full_key(self, pc: PhaserCollective) -> Tuple:
+        """Cache identity of this collective's program: the collective
+        key plus the cache's static builder config (overlap mode,
+        bucket groups, microbatches)."""
+        return self.key_of(pc) + self.extra_key
+
     def get(self, pc: PhaserCollective) -> Any:
         """The compiled program for this collective's (member_set, kind),
         building it on first use."""
-        key = self.key_of(pc)
+        key = self.full_key(pc)
         prog = self._programs.get(key)
         if prog is not None:
             self.hits += 1
@@ -53,7 +65,7 @@ class ProgramCache:
         return prog
 
     def __contains__(self, pc: PhaserCollective) -> bool:
-        return self.key_of(pc) in self._programs
+        return self.full_key(pc) in self._programs
 
     def __len__(self) -> int:
         return len(self._programs)

@@ -7,17 +7,42 @@ launch (``fused=True``) or plain masked jnp (``fused=False`` — the
 reference the kernel is tested against). Segment-level kinds dispatch to
 their dedicated executors (``halving_doubling``), and ``xla_psum`` stays
 native.
+
+``execute_flat_pipelined`` is the overlapped data plane (DESIGN.md §5):
+it takes the layout's per-group sub-buffers and runs the schedule as a
+**double-buffered software pipeline** over the readiness groups. The
+rounds are skewed — at pipeline tick ``t`` group ``g`` executes round
+``t - g`` — and within a tick every active group's ``ppermute`` is
+issued *before* any group's combine runs, so group ``i``'s round is in
+flight while group ``i+1``'s previous round is being combined. Each
+group's chain depends only on that group's gradients, so when the
+caller feeds buffers straight from ``BucketLayout.flatten_groups``, the
+earliest-ready group's rounds can start while the backward pass is
+still producing the later groups (per-element combine order is
+identical to ``execute_flat``, so the reduced buffers are bitwise equal
+to the eager path).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax import lax
 
-from ..core.collective import (PhaserCollective, halving_doubling_allreduce,
+from ..core.collective import (PhaserCollective, _dst_mask,
+                               halving_doubling_allreduce,
                                schedule_allreduce)
 from ..kernels.ops import bucket_combine_op
+
+
+def _make_combine(fused: bool, interpret: Optional[bool]):
+    if not fused:
+        return None
+
+    def combine(acc, y, gate, op):
+        return bucket_combine_op(acc, y, gate, op=op, interpret=interpret)
+    return combine
 
 
 def execute_flat(flat: jax.Array, pc: PhaserCollective, *,
@@ -30,10 +55,58 @@ def execute_flat(flat: jax.Array, pc: PhaserCollective, *,
         return lax.psum(flat, pc.axis_name)
     if pc.kind == "halving_doubling":
         return halving_doubling_allreduce(flat, pc.axis_name, pc.n)
-    combine = None
-    if fused:
-        def combine(acc, y, gate, op):
-            return bucket_combine_op(acc, y, gate, op=op,
-                                     interpret=interpret)
     return schedule_allreduce(flat, pc.axis_name, pc.unified_schedule(),
-                              combine=combine)
+                              combine=_make_combine(fused, interpret))
+
+
+def execute_flat_pipelined(bufs: Sequence[jax.Array],
+                           pc: PhaserCollective, *,
+                           fused: bool = True,
+                           interpret: Optional[bool] = None
+                           ) -> List[jax.Array]:
+    """All-reduce each readiness group's sub-buffer along
+    ``pc.axis_name``, pipelining the schedule across groups.
+
+    ``bufs[g]`` is group g's ``(g_buckets, bucket_elems)`` buffer
+    (``BucketLayout.flatten_groups`` order: earliest-ready first).
+    Returns the reduced buffers in the same order. Must be called inside
+    ``shard_map`` over the axis.
+
+    The kernel combine is launched per (group, round) with the group's
+    own bucket count — the variable-group launch — so no concat/slice
+    traffic is added between groups.
+    """
+    bufs = list(bufs)
+    if pc.kind == "xla_psum":
+        return [lax.psum(b, pc.axis_name) for b in bufs]
+    if pc.kind == "halving_doubling":
+        # segment-level kind: per-group independent chains (the groups
+        # expose the overlap; the variant manages its own halving)
+        return [halving_doubling_allreduce(b, pc.axis_name, pc.n)
+                for b in bufs]
+    sched = pc.unified_schedule()
+    combine = _make_combine(fused, interpret)
+    idx = lax.axis_index(pc.axis_name)
+    gates = [jnp.asarray(_dst_mask(sched.n, pairs))[idx]
+             for pairs in sched.rounds]
+    R, G = sched.depth, len(bufs)
+    for t in range(R + G - 1):
+        active = [g for g in range(G) if 0 <= t - g < R]
+        # double buffering: issue every active group's ppermute first …
+        inflight = []
+        for g in active:
+            r = t - g
+            y = lax.ppermute(bufs[g], pc.axis_name,
+                             perm=list(sched.rounds[r]))
+            inflight.append((g, r, y))
+        # … then combine, so round t-g of group g flies while group
+        # g+1's round combines
+        for g, r, y in inflight:
+            if combine is not None:
+                bufs[g] = combine(bufs[g], y, gates[r], sched.op(r))
+            elif sched.op(r) == "add":
+                bufs[g] = bufs[g] + jnp.where(gates[r], y,
+                                              jnp.zeros_like(y))
+            else:
+                bufs[g] = jnp.where(gates[r], y, bufs[g])
+    return bufs

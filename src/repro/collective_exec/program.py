@@ -16,6 +16,18 @@ mask are sharded over the data axis. ``check_rep=False`` because Pallas
 calls carry no replication rule — the schedule itself guarantees every
 rank ends with the same reduced buffer (tested against ``xla_psum``).
 
+**Overlap modes** (DESIGN.md §5). ``overlap="pipelined"`` flattens the
+grads per readiness group (``flatten_groups``) and runs the schedule
+through ``execute_flat_pipelined``: each group's ``ppermute`` chain
+depends only on that group's gradients, so the earliest-finalized
+buckets (last layers, reverse-topo bucket 0) sync while the backward
+pass is still producing the rest. With ``microbatches > 1`` the
+grad-accumulation loop is unrolled and each microbatch's bucket stream
+is issued as soon as its backward ends — microbatch ``k`` syncs while
+microbatch ``k+1``'s backward runs, inside the same ``shard_map``. Both
+modes execute the identical per-element combine sequence, so
+``overlap="pipelined"`` is bitwise-equal to ``overlap="eager"``.
+
 ``build_allreduce_program`` is the raw data-plane program (no model):
 it all-reduces a stacked per-rank value through the same bucket path —
 what benchmarks and equivalence tests drive.
@@ -33,7 +45,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.collective import PhaserCollective
 from .buckets import BucketLayout, make_layout
-from .executor import execute_flat
+from .executor import execute_flat, execute_flat_pipelined
+
+OVERLAP_MODES = ("eager", "pipelined")
 
 
 def mesh_for(pc: PhaserCollective,
@@ -48,7 +62,7 @@ def mesh_for(pc: PhaserCollective,
 @dataclass
 class GradSyncProgram:
     """One epoch's compiled train step. ``key`` is the program-cache
-    identity: (member_set, kind, seed, p)."""
+    identity: (member_set, kind, seed, p, overlap, microbatches)."""
 
     key: tuple
     pc: PhaserCollective
@@ -105,30 +119,83 @@ def build_gradsync_program(api, opt, pc: PhaserCollective, *,
                            fused: bool = True,
                            interpret: Optional[bool] = None,
                            donate: bool = False,
-                           bucket_elems: Optional[int] = None
+                           bucket_elems: Optional[int] = None,
+                           overlap: str = "eager",
+                           microbatches: int = 1
                            ) -> GradSyncProgram:
     """Compile the epoch's schedule into a shard_map train step.
 
     ``stacked=True`` takes per-worker batches stacked on a leading team
     axis (leaves ``(n, B, S)``); ``stacked=False`` shards a global batch
     (leaves ``(B, S)``, ``B % n == 0``) over the data axis.
+
+    ``overlap="pipelined"`` runs the sync per readiness group through
+    the double-buffered executor; ``microbatches > 1`` unrolls the
+    grad-accumulation loop with one bucket stream per microbatch (each
+    microbatch's sync overlaps the next microbatch's backward). The two
+    overlap modes are bitwise-equal at fixed ``microbatches``.
     """
+    assert overlap in OVERLAP_MODES, overlap
+    assert microbatches >= 1, microbatches
     mesh = mesh_for(pc, devices)
     layout = make_layout(api.param_spec(), bucket_elems=bucket_elems)
     axis = pc.axis_name
+
+    def sync(grads, flag):
+        """One bucket-stream all-reduce; returns per-group buffers."""
+        if overlap == "pipelined":
+            bufs = layout.flatten_groups(grads, flag)
+            return execute_flat_pipelined(bufs, pc, fused=fused,
+                                          interpret=interpret)
+        flat = execute_flat(layout.flatten(grads, flag), pc,
+                            fused=fused, interpret=interpret)
+        return [flat]
+
+    def unflatten(bufs):
+        if overlap == "pipelined":
+            return layout.unflatten_groups(bufs)
+        return layout.unflatten(bufs[0])
 
     def worker(params, opt_state, batch, alive):
         if stacked:
             batch = jax.tree_util.tree_map(lambda x: x[0], batch)
         a = alive[0]
-        (_, metrics), grads = jax.value_and_grad(
-            api.loss_fn, has_aux=True)(params, batch, remat=remat)
-        grads = jax.tree_util.tree_map(lambda g: g * a.astype(g.dtype),
-                                       grads)
-        flat = layout.flatten(grads, a)
-        flat = execute_flat(flat, pc, fused=fused, interpret=interpret)
-        grads, count = layout.unflatten(flat)
+
+        def mb_grads(b):
+            (_, metrics), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, b, remat=remat)
+            grads = jax.tree_util.tree_map(
+                lambda g: g * a.astype(g.dtype), grads)
+            return metrics, grads
+
+        if microbatches == 1:
+            metrics, grads = mb_grads(batch)
+            synced = sync(grads, a)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches,
+                                    x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            synced = None
+            loss = aux = jnp.zeros((), jnp.float32)
+            # unrolled (not scan): microbatch k's collective chain has
+            # no dependency on microbatch k+1's backward, so the two
+            # overlap inside the compiled step. The flag rides each
+            # stream at a/M — the reduced count stays n_alive.
+            for k in range(microbatches):
+                b = jax.tree_util.tree_map(lambda x: x[k], mbs)
+                m, grads = mb_grads(b)
+                loss = loss + m["loss"]
+                aux = aux + m.get("aux", jnp.zeros(()))
+                red = sync(grads, a / microbatches)
+                synced = red if synced is None else \
+                    [s + r for s, r in zip(synced, red)]
+            metrics = {"loss": loss / microbatches,
+                       "aux": aux / microbatches}
+        grads, count = unflatten(synced)
         inv = 1.0 / jnp.maximum(count, 1.0)
+        if microbatches > 1:
+            inv = inv / microbatches
         grads = jax.tree_util.tree_map(
             lambda g: g * inv.astype(g.dtype), grads)
         new_p, new_o, om = opt.update(grads, opt_state, params)
@@ -146,9 +213,13 @@ def build_gradsync_program(api, opt, pc: PhaserCollective, *,
     jitted = jax.jit(sm, donate_argnums=(0, 1) if donate else ())
     st = pc.stats()
     meta = {"team": pc.n, "sync_rounds": st["rounds"],
-            "sync_messages": st["messages"]}
-    return GradSyncProgram(key=(pc.keys, pc.kind, pc.seed, pc.p), pc=pc,
-                           mesh=mesh,
+            "sync_messages": st["messages"],
+            "overlap": int(overlap == "pipelined"),
+            "bucket_groups": layout.n_groups,
+            "microbatches": microbatches}
+    return GradSyncProgram(key=(pc.keys, pc.kind, pc.seed, pc.p,
+                                overlap, microbatches),
+                           pc=pc, mesh=mesh,
                            layout=layout, jitted=jitted, stacked=stacked,
                            meta=meta)
 

@@ -78,7 +78,7 @@ class ListState:
     # (serving a search/splice before MURS_ACK initializes our links
     # would be clobbered by the ack)
     join_defer: List = field(default_factory=list)
-    # --- SCSL re-parent handshake (chain invariant, DESIGN.md §8) ---
+    # --- SCSL re-parent handshake (chain invariant, DESIGN.md §9) ---
     rp_pending: Optional[int] = None     # CHILD_ADD sent, awaiting ACK
     rp_queue: Optional[Tuple[int, int]] = None  # (next_parent, effective)
     # --- SNSL ---

@@ -15,6 +15,13 @@ Each bucket row is one VMEM block (buckets are sized by the engine to a
 few hundred KB, well under the ~16 MB VMEM budget for the three
 operands); off-TPU callers run the same kernel body under the
 interpreter.
+
+**Variable-group launch**: the grid is derived from the operand's row
+count, so the same kernel serves the eager executor (one launch over
+the full ``(n_buckets, bucket_elems)`` buffer per round) and the
+pipelined executor (one launch per readiness group per round, each with
+that group's own bucket count). A zero-row group is a no-op without a
+launch.
 """
 from __future__ import annotations
 
@@ -43,12 +50,16 @@ def bucket_combine(acc: jax.Array, y: jax.Array, gate: jax.Array, *,
                    op: str = "add", interpret: bool = False) -> jax.Array:
     """Combine one ppermute round into the bucketed accumulator.
 
-    ``acc``/``y``: (n_buckets, bucket_elems); ``gate``: scalar bool/int
-    (is this device a destination this round); ``op``: "add" | "copy".
+    ``acc``/``y``: (rows, bucket_elems) — the full buffer or one
+    readiness group's sub-buffer (the grid follows the operand, so group
+    sizes may vary launch to launch); ``gate``: scalar bool/int (is this
+    device a destination this round); ``op``: "add" | "copy".
     """
     assert acc.ndim == 2 and acc.shape == y.shape, (acc.shape, y.shape)
     assert op in ("add", "copy"), op
     nb, be = acc.shape
+    if nb == 0:
+        return acc
     assert be * acc.dtype.itemsize <= MAX_BUCKET_BYTES, \
         f"bucket row of {be} elems exceeds the VMEM block budget"
     kernel = functools.partial(_combine_kernel, op=op)

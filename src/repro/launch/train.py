@@ -21,7 +21,10 @@ step at every epoch boundary and prints the epoch log.
 device use) and ``--device-collective`` forces gradient sync through the
 execution engine's compiled shard_map programs; by default the engine is
 used automatically whenever more than one device is visible and the
-batch divides the team.
+batch divides the team. ``--overlap-sync`` compiles the pipelined
+programs (DESIGN.md §5): reverse-topo bucket groups sync while the
+backward pass still runs, and with ``--microbatches N`` each
+microbatch's bucket stream overlaps the next microbatch's backward.
 """
 from __future__ import annotations
 
@@ -89,6 +92,10 @@ def main(argv=None):
     ap.add_argument("--device-collective", action="store_true",
                     help="require gradient sync through the compiled "
                          "shard_map engine (default: auto)")
+    ap.add_argument("--overlap-sync", action="store_true",
+                    help="pipeline gradient sync against the backward "
+                         "pass (reverse-topo bucket groups, "
+                         "double-buffered rounds; device path only)")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -111,10 +118,11 @@ def main(argv=None):
                        seq=args.seq, seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     runtime = events = None
-    if args.elastic is not None or args.device_collective:
-        # --device-collective without churn still needs the runtime: the
-        # engine's programs are keyed by its epochs (a static team is
-        # just a single epoch)
+    if (args.elastic is not None or args.device_collective
+            or args.overlap_sync):
+        # --device-collective/--overlap-sync without churn still need
+        # the runtime: the engine's programs are keyed by its epochs (a
+        # static team is just a single epoch)
         runtime = ElasticPhaserRuntime(args.workers, seed=args.seed,
                                        kind=args.sync_kind)
     if args.elastic is not None:
@@ -128,7 +136,8 @@ def main(argv=None):
                      runtime=runtime,
                      elastic_events=events or {},
                      device_collective=(True if args.device_collective
-                                        else None))
+                                        or args.overlap_sync else None),
+                     overlap_sync=args.overlap_sync)
     try:
         loop.run(args.steps, resume=args.resume)
     except ValueError as e:

@@ -63,7 +63,12 @@ class ModelAPI:
         return total, {"loss": loss, "aux": aux}
 
     # ------------------------------------------------------------- serve
-    def prefill_fn(self, params, batch: Dict):
+    def prefill_full_fn(self, params, batch: Dict):
+        """Prefill returning logits at EVERY position (plus caches).
+        Length-bucketed admission pads prompts up to a shared bucket
+        length; causality keeps positions below the true prompt length
+        unaffected, so the serving engine reads each request's next
+        token at its own ``len - 1`` instead of the padded tail."""
         cfg = self.cfg
         if cfg.is_encdec:
             logits, _, caches = encdec.forward(cfg, params, batch["tokens"],
@@ -76,6 +81,10 @@ class ModelAPI:
         else:
             logits, _, caches = transformer.forward(
                 cfg, params, batch["tokens"], want_cache=True)
+        return logits, caches
+
+    def prefill_fn(self, params, batch: Dict):
+        logits, caches = self.prefill_full_fn(params, batch)
         return logits[:, -1], caches
 
     def decode_fn(self, params, state: Dict, batch: Dict):

@@ -122,7 +122,10 @@ class ElasticPhaserRuntime:
         current epoch's program is compiled now, and every boundary
         compiles (or re-uses) the next epoch's program right at the phase
         advance — the data plane swaps executables instead of
-        re-simulating the schedule on host."""
+        re-simulating the schedule on host. The cache's own extra key
+        (overlap mode, bucket groups, microbatches) rides its entries,
+        so overlapped programs swap at boundaries exactly like eager
+        ones: the runtime only hands over the epoch's collective."""
         def hook(old: Epoch, new: Epoch) -> None:
             if new.collective is not None:
                 cache.get(new.collective)
@@ -209,6 +212,17 @@ class ElasticPhaserRuntime:
     def collective(self) -> PhaserCollective:
         assert self.epoch.collective is not None, "empty team"
         return self.epoch.collective
+
+    def epoch_key(self) -> Optional[Dict]:
+        """JSON-serializable identity of the current epoch's collective
+        — the (member_set, kind, seed, p) part of the program-cache key
+        that checkpoints persist (the consumer appends its own overlap
+        config). None for an empty team."""
+        pc = self.epoch.collective
+        if pc is None:
+            return None
+        return {"member_set": list(pc.keys), "kind": pc.kind,
+                "seed": pc.seed, "p": pc.p, "axis": pc.axis_name}
 
     def oracle(self) -> SkipList:
         """Deterministic skip list over the live keys — what the protocol

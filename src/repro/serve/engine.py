@@ -15,13 +15,17 @@ the same epoch mechanism as elastic training:
   half-admitted batch.
 
 Admission is **bulk**: all free slots are filled at the same phase
-boundary, grouped by prompt length, and each group runs one
-``prefill_fn`` call over the whole prompt (a single forward instead of
-one decode step per token); the returned per-layer KV is spliced into
-the admitted slots' cache regions without touching running slots.
-Families whose decode state is not a plain KV cache (ssm/xlstm/hybrid
-recurrences, enc-dec, vlm) and prompts longer than the cache window keep
-the token-by-token path.
+boundary, grouped by prompt length **padded up to a power-of-two
+bucket** — so admission compiles one prefill executable per (group
+size, bucket) instead of one per distinct prompt length. Each group
+runs one full-logits prefill over the padded prompts (a single forward
+instead of one decode step per token); causality keeps every position
+below a request's true length unaffected by the pad tail, so the
+engine reads each request's next token at its own ``len - 1`` and
+splices only the first ``len`` KV positions into the slot's cache
+region, without touching running slots. Families whose decode state is
+not a plain KV cache (ssm/xlstm/hybrid recurrences, enc-dec, vlm) and
+prompts longer than the cache window keep the token-by-token path.
 
 Correctness note (the bug this design fixed): anything handed to the
 async-dispatched jitted decode must be an immutable snapshot. Passing a
@@ -74,7 +78,9 @@ class ServeEngine:
         self.finished: List[Request] = []
         # no donation: _admit snapshots the pre-prefill state for splicing
         self._decode = jax.jit(api.decode_fn)
-        self._prefill = jax.jit(api.prefill_fn)
+        # full-logits prefill: length-bucketed groups read each
+        # request's next token at its true len-1, not the padded tail
+        self._prefill = jax.jit(api.prefill_full_fn)
         # per-leaf batch dim: the dim whose size changes with the batch
         # (needed to splice a newly-prefilled slot into the live state
         # without touching other slots)
@@ -126,54 +132,80 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def _bucket_len(length: int) -> int:
+        """Prompt lengths pad up to power-of-two buckets, so admission
+        compiles one prefill per (group size, bucket) instead of one
+        per distinct prompt length."""
+        return 1 << max(0, (length - 1)).bit_length()
+
     def _admit(self) -> None:
         """Phase-boundary refill: fill ALL free slots from the queue at
         this boundary (JOIN = eager insertion). Admits are batched: bulk
-        groups (same prompt length, KV-cache family) run one prefill_fn
-        forward each and splice their caches in; everything else falls
-        back to token-by-token prefill."""
+        groups (same power-of-two length bucket, KV-cache family) run
+        one padded prefill forward each and splice their caches in;
+        everything else falls back to token-by-token prefill."""
         admits: List[Tuple[int, Request]] = []
         for slot in range(self.batch):
             if self.slot_req[slot] is None and self.queue:
                 admits.append((slot, self.queue.pop(0)))
         groups: Dict[int, List[Tuple[int, Request]]] = {}
         for slot, req in admits:
+            # clamp to the window so a non-pow2 window keeps its largest
+            # admissible prompts on the bulk path (they share one
+            # window-sized bucket)
+            bucket = min(self._bucket_len(len(req.prompt)),
+                         self._kv_window)
             if self._bulk and len(req.prompt) <= self._kv_window:
-                groups.setdefault(len(req.prompt), []).append((slot, req))
+                groups.setdefault(bucket, []).append((slot, req))
             else:
                 self._admit_sequential(slot, req)
-        for length, group in sorted(groups.items()):
-            self._admit_bulk(group, length)
+        for bucket, group in sorted(groups.items()):
+            self._admit_bulk(group, bucket)
 
     def _admit_bulk(self, group: List[Tuple[int, "Request"]],
-                    length: int) -> None:
-        """One prefill_fn forward over the whole group, then splice each
-        slot's cache region (running slots untouched)."""
-        tokens = to_device_copy(np.stack([r.prompt for _, r in group]),
-                                dtype=np.int32)
-        logits, caches = self._prefill(self.params, {"tokens": tokens})
+                    bucket: int) -> None:
+        """One padded prefill forward over the whole group, then splice
+        each slot's cache region up to its TRUE prompt length (running
+        slots untouched; the pad tail's KV never enters the cache)."""
+        lengths = [len(r.prompt) for _, r in group]
+        tokens = np.zeros((len(group), bucket), np.int32)
+        for g, (_, r) in enumerate(group):
+            tokens[g, :lengths[g]] = r.prompt
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": to_device_copy(tokens)})
         self.state = self._splice_prefill(self.state, caches,
-                                          [s for s, _ in group], length)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                                          [s for s, _ in group], lengths)
+        # next token at each request's own last REAL position
+        nxt = np.asarray(jnp.argmax(
+            logits[jnp.arange(len(group)),
+                   jnp.asarray(lengths) - 1], axis=-1))
         for g, (slot, req) in enumerate(group):
-            self._occupy(slot, req, int(nxt[g]), length)
+            self._occupy(slot, req, int(nxt[g]), lengths[g])
 
     def _splice_prefill(self, state, caches, slots: List[int],
-                        length: int):
+                        lengths: List[int]):
         """Write the prefilled per-layer KV into the admitted slots'
-        cache regions: positions 0..length-1 become valid (pos mask),
-        every other slot's cache is untouched."""
+        cache regions. One vectorized set per tensor over the whole
+        group (not one per slot — each eager ``.at[].set`` copies the
+        full cache): k/v take the entire padded bucket, and the pos
+        mask validates only 0..len_i-1 per slot, so the pad tail's KV
+        stays masked out of attention (kpos -1 = padding) exactly as if
+        it were never written. Every other slot's cache is untouched."""
         st = state["layers"]
         pf = caches["layers"]
+        bucket = pf["k"].shape[2]
         sl = jnp.asarray(slots)
+        pos = jnp.arange(bucket, dtype=jnp.int32)
+        valid = pos[None] < jnp.asarray(lengths, jnp.int32)[:, None]
         new = dict(st)
-        new["k"] = st["k"].at[:, sl, :length].set(
+        new["k"] = st["k"].at[:, sl, :bucket].set(
             pf["k"].astype(st["k"].dtype))
-        new["v"] = st["v"].at[:, sl, :length].set(
+        new["v"] = st["v"].at[:, sl, :bucket].set(
             pf["v"].astype(st["v"].dtype))
-        pos = jnp.arange(length, dtype=jnp.int32)
-        new["pos"] = st["pos"].at[:, sl, :length].set(
-            jnp.broadcast_to(pos, (st["pos"].shape[0], len(slots), length)))
+        new["pos"] = st["pos"].at[:, sl, :bucket].set(
+            jnp.broadcast_to(jnp.where(valid, pos[None], -1),
+                             (st["pos"].shape[0], len(slots), bucket)))
         return {**state, "layers": new}
 
     def _admit_sequential(self, slot: int, req: "Request") -> None:

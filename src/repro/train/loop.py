@@ -15,8 +15,13 @@ With multiple devices available (``device_collective`` auto/True), the
 per-epoch step is the execution engine's compiled shard_map program: the
 global batch is sharded over the epoch's mesh axis and gradients sync
 through the schedule's ppermute rounds on device. Programs come from an
-epoch-aware cache keyed by (member_set, kind), so a boundary that
-revisits a team swaps back to an already-compiled executable.
+epoch-aware cache keyed by (member_set, kind) plus the overlap config
+(``overlap_sync`` compiles the pipelined programs of DESIGN.md §5 —
+reverse-topo bucket groups synced while the backward runs, microbatch
+streams interleaved), so a boundary that revisits a team swaps back to
+an already-compiled executable. Every checkpoint carries the live
+program-cache key, so a resume pre-compiles the exact epoch program
+before step 1 instead of paying the first-step compile after restore.
 """
 from __future__ import annotations
 
@@ -56,7 +61,14 @@ class TrainLoop:
     # device-collective data plane: None = auto (on when >1 device and the
     # batch divides the team), True = required, False = host/XLA path
     device_collective: Optional[bool] = None
+    # overlapped gradient sync (device path): pipeline bucket-group
+    # rounds against the backward pass / microbatch streams (DESIGN.md §5)
+    overlap_sync: bool = False
     _progs: Any = field(default=None, init=False, repr=False)
+
+    @property
+    def _overlap_mode(self) -> str:
+        return "pipelined" if self.overlap_sync else "eager"
 
     def _apply_elastic_events(self, step: int) -> None:
         for kind, arg in self.elastic_events.get(step, []):
@@ -94,13 +106,14 @@ class TrainLoop:
     def _collective_devices(self, pc) -> Optional[List]:
         """Devices for the device-collective path, or None for the
         host/XLA path. Auto mode requires >1 device, enough of them for
-        the team, a batch the team divides, and no microbatching."""
+        the team, and a batch the team (and per-rank microbatching)
+        divides."""
         if self.device_collective is False or pc is None:
             return None
         devs = jax.devices()
         ok = (len(devs) >= pc.n and pc.n >= 1
               and self.data.batch % pc.n == 0
-              and self.microbatches == 1)
+              and (self.data.batch // pc.n) % self.microbatches == 0)
         if self.device_collective is True:
             assert ok, (f"device_collective requested but team={pc.n}, "
                         f"devices={len(devs)}, batch={self.data.batch}, "
@@ -108,23 +121,66 @@ class TrainLoop:
             return devs
         return devs if ok and len(devs) > 1 else None
 
+    def _ensure_progs(self):
+        """The epoch-aware program cache (device-collective path); the
+        overlap/microbatch config rides the cache key."""
+        if self._progs is None:
+            from ..collective_exec import ProgramCache
+            self._progs = ProgramCache(
+                lambda c: build_train_step(
+                    self.api, self.opt, rules=None, remat=self.remat,
+                    microbatches=self.microbatches, donate=False,
+                    collective=c, collective_devices=jax.devices(),
+                    overlap=self._overlap_mode),
+                extra_key=(self._overlap_mode, self.microbatches))
+        return self._progs
+
     def _build_step(self):
         pc = (self.runtime.epoch.collective
               if self.runtime is not None else None)
         devs = self._collective_devices(pc)
         if devs is not None:
-            if self._progs is None:
-                from ..collective_exec import ProgramCache
-                self._progs = ProgramCache(
-                    lambda c: build_train_step(
-                        self.api, self.opt, rules=None, remat=self.remat,
-                        microbatches=1, donate=False, collective=c,
-                        collective_devices=jax.devices()))
-            return self._progs.get(pc)
+            return self._ensure_progs().get(pc)
         return build_train_step(self.api, self.opt, rules=None,
                                 remat=self.remat,
                                 microbatches=self.microbatches,
                                 donate=False, collective=pc)
+
+    # ------------------------------------------------- program-key ckpt
+    def _program_key(self) -> Optional[Dict]:
+        """Checkpointable identity of the current epoch's compiled
+        program (member set, kind, seed/p, overlap config) — written
+        into every checkpoint manifest so a resume can pre-compile the
+        exact program before step 1."""
+        if self.runtime is None or self._progs is None:
+            return None
+        key = self.runtime.epoch_key()
+        if key is None:
+            return None
+        return {**key, "overlap": self._overlap_mode,
+                "microbatches": self.microbatches}
+
+    def _precompile_from_key(self, pk: Optional[Dict]) -> None:
+        """Resume path: rebuild the checkpointed epoch's collective and
+        compile (or cache-hit) its program before the first step."""
+        if not pk or self.device_collective is False:
+            return
+        # config changed since the save (overlap mode, microbatching,
+        # sync kind or seed): the replayed epoch would never cache-hit
+        # this program, so skip rather than compile a dead executable
+        if (pk.get("overlap") != self._overlap_mode
+                or pk.get("microbatches") != self.microbatches
+                or (self.runtime is not None
+                    and (pk.get("kind") != self.runtime.kind
+                         or pk.get("seed") != self.runtime.seed))):
+            return
+        from ..core.collective import PhaserCollective
+        keys = tuple(pk["member_set"])
+        pc = PhaserCollective(len(keys), pk.get("axis", "data"),
+                              kind=pk["kind"], seed=pk["seed"],
+                              p=pk["p"], keys=keys)
+        if self._collective_devices(pc) is not None:
+            self._ensure_progs().get(pc)
 
     def run(self, steps: int, *, params=None, opt_state=None,
             resume: bool = False, on_step: Optional[Callable] = None):
@@ -135,6 +191,11 @@ class TrainLoop:
         if opt_state is None:
             opt_state = self.opt.init(params)
         if resume and self.ckpt is not None and self.ckpt.latest_step():
+            # pre-compile the checkpointed epoch's program BEFORE the
+            # params restore and event replay: resume reaches step 1
+            # with the exact program already executable (cache hit at
+            # the re-lower below)
+            self._precompile_from_key(self.ckpt.program_key())
             tpl = {"params": params, "opt": opt_state._asdict()}
             start, tree, extra = self.ckpt.restore(tpl)
             params = tree["params"]
@@ -176,7 +237,8 @@ class TrainLoop:
                     if self.ckpt is not None:
                         self.ckpt.save(step + 1, params, opt_state,
                                        extra={"data":
-                                              self.data.state_dict()})
+                                              self.data.state_dict()},
+                                       program_key=self._program_key())
                     ts = self._build_step()
                     self.runtime.verify_epoch()
                     self.epoch_log.append({
@@ -193,11 +255,13 @@ class TrainLoop:
                 self.metrics_log.append(m)
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save(step + 1, params, opt_state,
-                               extra={"data": self.data.state_dict()})
+                               extra={"data": self.data.state_dict()},
+                               program_key=self._program_key())
             if on_step is not None:
                 on_step(step, params, metrics)
         if self.ckpt is not None:
             self.ckpt.save(steps, params, opt_state,
-                           extra={"data": self.data.state_dict()})
+                           extra={"data": self.data.state_dict()},
+                           program_key=self._program_key())
             self.ckpt.wait()
         return params, opt_state

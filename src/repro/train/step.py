@@ -9,7 +9,12 @@ Gradient cross-replica reduction has two paths:
   are passed, the step is compiled by the execution engine
   (``collective_exec``): a shard_map program over a real mesh axis that
   runs the epoch's schedule as ``lax.ppermute`` rounds with the fused
-  Pallas bucket-combine local reduce.
+  Pallas bucket-combine local reduce. ``overlap="pipelined"`` makes the
+  sync overlap the backward pass (reverse-topo readiness groups through
+  the double-buffered executor, DESIGN.md §5); with ``microbatches > 1``
+  the device path unrolls the grad-accumulation loop so microbatch k's
+  bucket stream syncs while microbatch k+1's backward runs inside the
+  same shard_map.
 """
 from __future__ import annotations
 
@@ -48,13 +53,15 @@ class TrainStep:
 
 def _program_step(api: ModelAPI, opt: AdamW, collective,
                   devices: Sequence, *, remat: bool, stacked: bool,
-                  donate: bool) -> TrainStep:
+                  donate: bool, overlap: str = "eager",
+                  microbatches: int = 1) -> TrainStep:
     """Device-collective path: compile the schedule into a shard_map
     program (collective_exec) and adapt it to the TrainStep surface."""
     from ..collective_exec import build_gradsync_program
     prog = build_gradsync_program(api, opt, collective, devices=devices,
                                   stacked=stacked, remat=remat,
-                                  donate=donate)
+                                  donate=donate, overlap=overlap,
+                                  microbatches=microbatches)
 
     def jitted(params, opt_state, batch, alive=None):
         new_p, new_o, pm = prog.step(params, opt_state, batch, alive)
@@ -71,21 +78,23 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
                      donate: bool = True,
                      collective=None,
                      collective_devices: Optional[Sequence] = None,
-                     stacked_batch: bool = False) -> TrainStep:
+                     stacked_batch: bool = False,
+                     overlap: str = "eager") -> TrainStep:
     """``collective``: the elastic epoch's PhaserCollective. It is part
     of the lowered step's *static identity* — re-building at an epoch
     boundary re-lowers for the new team. Without ``collective_devices``
     the schedule enters the step as static sync metadata in the metrics
     (team size, rounds, messages); with them, the step is the execution
     engine's compiled shard_map program and the schedule's ppermute
-    rounds *are* the gradient reduction."""
+    rounds *are* the gradient reduction (``overlap="pipelined"`` makes
+    that reduction overlap the backward pass; microbatching unrolls into
+    per-microbatch bucket streams on this path)."""
     cfg = api.cfg
     if collective is not None and collective_devices is not None:
-        assert microbatches == 1, \
-            "microbatching is not supported on the device-collective path"
         return _program_step(api, opt, collective, collective_devices,
                              remat=remat, stacked=stacked_batch,
-                             donate=donate)
+                             donate=donate, overlap=overlap,
+                             microbatches=microbatches)
     sync_meta = None
     if collective is not None:
         st = collective.stats()

@@ -8,11 +8,17 @@ Four layers of evidence:
 2. a hypothesis property sweep over (n, kind, keys, values) — skipped
    where the dev-only dependency is missing;
 3. bucket layout round-trips the grad pytree exactly, with the alive
-   flag riding the buffer;
-4. numeric (subprocess, 8 host devices): the bucketed shard_map
+   flag riding the buffer — including the reverse-topological order and
+   per-bucket readiness groups of the overlap pipeline (DESIGN.md §5);
+4. program cache: LRU recency on hits and eviction, overlap config in
+   the key, and the epoch-boundary swap ordering (the next epoch's
+   program is compiled inside the boundary, never mid-phase);
+5. numeric (subprocess, 8 host devices): the bucketed shard_map
    executor with the fused Pallas combine equals ``xla_psum`` for every
-   kind at pow2 AND non-pow2 team sizes, and the compiled gradient-sync
-   program produces the same updated params as the psum program.
+   kind at pow2 AND non-pow2 team sizes; the compiled gradient-sync
+   program produces the same updated params as the psum program; and
+   the pipelined (overlapped) program is BITWISE equal to the eager one
+   across grow 4->6 / shrink 6->3 elastic epochs.
 """
 import math
 import subprocess
@@ -128,6 +134,48 @@ def test_bucket_layout_multi_bucket_sizing():
     assert out["x"].shape == (1000,)
 
 
+def test_bucket_layout_reverse_topo_readiness_groups():
+    """Output-side leaves come first (their grads finalize first under
+    backprop), embeddings last; contiguous readiness classes become
+    bucket groups and the group views round-trip exactly."""
+    from repro.models.registry import get_api, get_config
+    api = get_api(get_config("smollm-135m").reduced())
+    lay = make_layout(api.param_spec(), bucket_elems=1024)
+    paths = ["/".join(str(getattr(p, "key", p)) for p in path)
+             for path, _ in jax.tree_util.tree_flatten_with_path(
+                 api.param_spec())[0]]
+    order = [paths[i] for i in lay.perm]
+    assert "final_norm" in order[0], order[0]          # loss side first
+    assert "embed" in order[-1], order[-1]             # input side last
+    assert lay.n_groups >= 3
+    assert sum(lay.group_buckets) == lay.n_buckets
+    assert lay.groups[0][0] == 0 and lay.groups[-1][1] == lay.n_buckets
+    # per-group buffers == contiguous slices of the flat buffer, and
+    # the round-trip (incl. contributor flag) is exact
+    params = api.init_params(jax.random.key(0))
+    bufs = lay.flatten_groups(params, 1.0)
+    assert [b.shape[0] for b in bufs] == list(lay.group_buckets)
+    flat = lay.flatten(params, 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(flat), np.asarray(jnp.concatenate(bufs, 0)))
+    tree, count = lay.unflatten_groups(bufs)
+    assert float(count) == 1.0
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucket_layout_tree_order_single_group():
+    """order="tree" preserves the pre-overlap layout: identity perm,
+    one readiness group spanning every bucket."""
+    from repro.models.registry import get_api, get_config
+    api = get_api(get_config("smollm-135m").reduced())
+    lay = make_layout(api.param_spec(), bucket_elems=1024, order="tree")
+    assert lay.perm == tuple(range(len(lay.sizes)))
+    assert lay.n_groups == 1
+    assert lay.flag_index == lay.payload       # flag right after leaves
+
+
 # ------------------------------------------------------- program cache
 def test_program_cache_hits_on_revisited_member_set():
     built = []
@@ -160,6 +208,66 @@ def test_program_cache_lru_eviction():
         cache.get(pc)
     assert len(cache) == 2
     assert pcs[0] not in cache and pcs[2] in cache
+
+
+def test_program_cache_lru_hit_refreshes_recency():
+    """A cache HIT must move the entry to most-recently-used: after
+    touching pc0 again, inserting a third entry evicts pc1, not pc0."""
+    cache = ProgramCache(lambda pc: object(), capacity=2)
+    pcs = [PhaserCollective(2, "data", keys=(i, i + 1), kind="xla_psum")
+           for i in range(3)]
+    cache.get(pcs[0])
+    cache.get(pcs[1])
+    cache.get(pcs[0])                      # HIT: pc0 becomes MRU
+    cache.get(pcs[2])                      # evicts the LRU = pc1
+    assert pcs[0] in cache and pcs[2] in cache
+    assert pcs[1] not in cache
+    assert cache.stats() == {"entries": 2, "hits": 1, "misses": 3}
+
+
+def test_program_cache_extra_key_separates_overlap_configs():
+    """An eager and a pipelined cache over the same member set hold
+    DISTINCT entries: the overlap/microbatch config rides the key."""
+    built = []
+    pc = PhaserCollective(3, "data", keys=(0, 1, 2), kind="xla_psum")
+    eager = ProgramCache(lambda c: built.append("eager") or "E",
+                         extra_key=("eager", 1))
+    pipe = ProgramCache(lambda c: built.append("pipelined") or "P",
+                        extra_key=("pipelined", 2))
+    assert eager.get(pc) == "E" and pipe.get(pc) == "P"
+    assert built == ["eager", "pipelined"]
+    assert eager.full_key(pc) != pipe.full_key(pc)
+    assert eager.full_key(pc)[:4] == pipe.full_key(pc)[:4]
+    # one shared cache would also keep them apart if keyed fully
+    assert eager.get(pc) == "E"            # hit, not rebuilt
+    assert built == ["eager", "pipelined"]
+
+
+def test_epoch_boundary_swap_ordering():
+    """The boundary's program swap is ordered: the next epoch's program
+    is compiled inside ``advance()`` (via the bound cache's on_epoch
+    hook) BEFORE the boundary returns, and hooks observe (old, new) in
+    order — a consumer never runs a phase against a missing program."""
+    events = []
+
+    def builder(pc):
+        events.append(("compile", pc.keys))
+        return ("program", pc.keys)
+
+    cache = ProgramCache(builder)
+    rt = ElasticPhaserRuntime(3, seed=0)
+    rt.bind_program_cache(cache)           # epoch 0 compiles eagerly
+    rt.on_epoch(lambda old, new: events.append(
+        ("boundary", old.live, new.live)))
+    assert events == [("compile", (0, 1, 2))]
+    w = rt.request_join()
+    # churn is pending but the swap must NOT happen mid-phase
+    assert rt.pending_churn and len(events) == 1
+    rt.advance()
+    # compile lands inside the boundary, before the follow-up hooks
+    assert events[1] == ("compile", (0, 1, 2, w))
+    assert events[2] == ("boundary", (0, 1, 2), (0, 1, 2, w))
+    assert rt.collective() in cache        # ready before the next phase
 
 
 # --------------------------- device numerics (subprocess: 8-dev mesh)
@@ -214,6 +322,96 @@ for a, b in zip(jax.tree_util.tree_leaves(p1),
                 jax.tree_util.tree_leaves(p2)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=2e-4, atol=2e-5)
+print("OK")
+"""
+    import os
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH": "src"},
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_overlapped_program_bitwise_equals_eager_across_elastic_epochs():
+    """The overlap acceptance gate (DESIGN.md §5): the pipelined
+    program (reverse-topo bucket groups, double-buffered rounds,
+    microbatch streams) produces BITWISE-equal loss+params vs the eager
+    program at every step across grow 4->6 / shrink 6->3 elastic
+    epochs, and both match the xla_psum baseline within f32 tolerance."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.collective_exec import ProgramCache, build_gradsync_program
+from repro.core.collective import PhaserCollective
+from repro.data.synthetic import make_batch
+from repro.models.registry import get_api, get_config
+from repro.optim import AdamW
+from repro.runtime_elastic import ElasticPhaserRuntime
+
+cfg = get_config("smollm-135m").reduced()
+api = get_api(cfg)
+opt = AdamW(lr=3e-3, warmup=2, total_steps=12)
+M = 2                                     # microbatches per worker
+mk = lambda overlap, kind: ProgramCache(
+    lambda pc: build_gradsync_program(
+        api, opt, PhaserCollective(pc.n, pc.axis_name, kind=kind,
+                                   keys=pc.keys, seed=pc.seed),
+        stacked=True, overlap=overlap, microbatches=M,
+        bucket_elems=1024),
+    extra_key=(overlap, M))
+pipe = mk("pipelined", "recursive_doubling")
+eager = mk("eager", "recursive_doubling")
+psum = mk("eager", "xla_psum")
+
+rt = ElasticPhaserRuntime(4, seed=0, kind="recursive_doubling")
+rt.bind_program_cache(pipe)
+p0 = api.init_params(jax.random.key(0))
+state = {n: (p0, opt.init(p0)) for n in ("pipe", "eager", "psum")}
+
+for step in range(12):
+    if step == 4:
+        rt.request_join(); rt.request_join()          # grow 4 -> 6
+    if step == 8:
+        for w in sorted(rt.live)[-3:]:
+            rt.request_leave(w)                       # shrink 6 -> 3
+    team = list(rt.epoch.live)
+    alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team],
+                        jnp.float32)
+    bs = [make_batch(cfg.vocab_size, 4, 16, seed=50 + w, step=step)
+          for w in team]
+    batch = {k: jnp.asarray(np.stack([b[k] for b in bs]))
+             for k in bs[0]}
+    pc = rt.collective()
+    losses = {}
+    for name, cache in (("pipe", pipe), ("eager", eager),
+                        ("psum", psum)):
+        prog = cache.get(pc)
+        p, o = state[name]
+        p, o, m = prog.step(p, o, batch, alive)
+        state[name] = (p, o)
+        losses[name] = float(prog.reduce_metrics(m)["loss"])
+    # pipelined vs eager: bitwise (atol=0)
+    assert losses["pipe"] == losses["eager"], (step, losses)
+    for a, b in zip(jax.tree_util.tree_leaves(state["pipe"][0]),
+                    jax.tree_util.tree_leaves(state["eager"][0])):
+        assert (np.asarray(a) == np.asarray(b)).all(), step
+    # both vs psum: f32 tolerance
+    np.testing.assert_allclose(losses["pipe"], losses["psum"],
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(state["pipe"][0]),
+                    jax.tree_util.tree_leaves(state["psum"][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    rt.advance(step=step)
+assert len(rt.epochs) == 3, len(rt.epochs)
+for cache in (pipe, eager, psum):
+    assert cache.stats()["misses"] == 3    # one program per member set
+g = pipe.get(rt.collective())
+assert g.meta["overlap"] == 1 and g.meta["bucket_groups"] >= 3
 print("OK")
 """
     import os

@@ -55,6 +55,22 @@ def test_checkpoint_atomic_no_partial(tmpdir):
     assert cm.all_steps() == [1]
 
 
+def test_checkpoint_program_key_roundtrip(tmpdir):
+    """The program-cache key (member set, kind, overlap config) rides
+    the manifest: ``program_key()`` reads it back without touching the
+    arrays, and pre-overlap checkpoints read as None."""
+    cm = CheckpointManager(tmpdir, async_write=False)
+    params = {"w": np.ones((2,), np.float32)}
+    pk = {"member_set": [0, 1, 2], "kind": "recursive_doubling",
+          "seed": 0, "p": 0.5, "axis": "data",
+          "overlap": "pipelined", "microbatches": 2}
+    cm.save(1, params, program_key=pk)
+    cm.save(2, params)                      # e.g. a non-engine run
+    assert cm.program_key(1) == pk
+    assert cm.program_key(2) is None
+    assert cm.program_key() is None         # latest step wins
+
+
 # ---------------------------------------------------------------- elastic
 def test_elastic_join_leave_phases():
     c = ElasticController(4, seed=0)
@@ -120,6 +136,66 @@ def test_serve_engine_drains_and_matches_sequential():
         tok = int(jnp.argmax(logits[0]))
         pos += 1
     assert r.out == want, (r.out, want)
+
+
+def test_serve_engine_pow2_length_buckets_share_one_prefill():
+    """Admission pads prompts to power-of-two buckets: distinct prompt
+    lengths in one bucket run ONE prefill shape (no per-length
+    recompile), each request still reads its next token at its own
+    ``len - 1`` and splices only its true-length KV."""
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.key(0))
+    eng = ServeEngine(api, params, batch=4, window=32)
+    shapes = []
+    orig = eng._prefill
+    eng._prefill = lambda p, b: (shapes.append(b["tokens"].shape),
+                                 orig(p, b))[1]
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 50, size=L).astype(np.int32)
+               for L in (5, 6, 7, 8, 5, 7)]
+    reqs = [Request(rid=i, prompt=p, max_new=3)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 6 and all(len(r.out) == 3 for r in reqs)
+    # every prefill launch used the shared bucket length 8
+    assert shapes and all(s[1] == 8 for s in shapes), shapes
+    assert len({s[1] for s in shapes}) == 1
+
+    # per-request correctness vs an unpadded single-request engine
+    solo = ServeEngine(api, params, batch=4, window=32)
+    r0 = Request(rid=99, prompt=prompts[0], max_new=3)
+    solo.submit(r0)
+    solo.run_until_drained()
+    assert r0.out == reqs[0].out, (r0.out, reqs[0].out)
+
+
+def test_serve_engine_bucket_len():
+    bl = ServeEngine._bucket_len
+    assert [bl(n) for n in (1, 2, 3, 4, 5, 8, 9, 33)] == \
+        [1, 2, 4, 4, 8, 8, 16, 64]
+
+
+def test_serve_engine_non_pow2_window_keeps_bulk_path():
+    """A prompt whose pow2 bucket exceeds a non-pow2 window (but whose
+    length fits) clamps to a window-sized bucket instead of regressing
+    to the token-by-token path."""
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.key(0))
+    eng = ServeEngine(api, params, batch=2, window=24)
+    shapes = []
+    orig = eng._prefill
+    eng._prefill = lambda p, b: (shapes.append(b["tokens"].shape),
+                                 orig(p, b))[1]
+    prompt = np.arange(1, 21, dtype=np.int32)      # len 20: bucket 32>24
+    r = Request(rid=0, prompt=prompt, max_new=2)
+    eng.submit(r)
+    eng.run_until_drained()
+    assert r.done and len(r.out) == 2
+    assert shapes == [(1, 24)], shapes             # clamped bulk prefill
 
 
 # ------------------------------------------------------------- train loop
