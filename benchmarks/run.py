@@ -47,22 +47,25 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: complexity,modelcheck,collective,"
-                         "kernel,roofline")
+                         "pipeline,kernel,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke path: schedule-derivation benches only "
-                         "(complexity + collective tables; skips the "
-                         "model-check sweep, kernel timing and roofline)")
+                         "(complexity + collective + pipeline tables; "
+                         "skips the model-check sweep, kernel timing "
+                         "and roofline)")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
     if args.quick and want is None:
-        want = {"complexity", "collective"}
+        want = {"complexity", "collective", "pipeline"}
 
     from benchmarks import (collective_bench, complexity_bench,
-                            kernel_bench, modelcheck_bench, roofline_bench)
+                            kernel_bench, modelcheck_bench,
+                            pipeline_bench, roofline_bench)
     benches = {
         "complexity": complexity_bench,
         "modelcheck": modelcheck_bench,
         "collective": collective_bench,
+        "pipeline": pipeline_bench,
         "kernel": kernel_bench,
         "roofline": roofline_bench,
     }

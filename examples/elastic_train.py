@@ -21,12 +21,28 @@ Every step also runs an ``xla_psum`` baseline program from the *same*
 params: the engine's loss matches the baseline to fp32 tolerance at
 every step of every epoch, and so do the updated parameters.
 
-  PYTHONPATH=src python examples/elastic_train.py
+With ``--pipeline-stages S`` the train path is the 2-D pipeline program
+instead (``pipeline_exec``, DESIGN.md §6): the stacked blocks shard
+over a stage axis, microbatches flow through the wave-synchronous 1F1B
+schedule derived from the point-to-point phaser graph, and each stage
+row syncs gradients over the data axis through the SAME per-epoch
+compiled schedule. The baseline stays the single-axis engine — the 2-D
+path must match it step for step through the identical churn — and
+every epoch boundary additionally proves the 1F1B phase ordering
+against real SIG/WAIT phaser actors (``verify_phase_order``).
+
+  PYTHONPATH=src python examples/elastic_train.py [--pipeline-stages 2]
 """
 import os
+import sys
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
+PIPE_S = (int(sys.argv[sys.argv.index("--pipeline-stages") + 1])
+          if "--pipeline-stages" in sys.argv else 1)
+PIPE_M = 2 if PIPE_S > 1 else 1               # pipeline depth (1F1B M)
+# the peak team is 6 workers; the 2-D mesh needs a stage row per worker
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={max(8, 6 * PIPE_S)}")
 
 import shutil
 import tempfile
@@ -41,13 +57,16 @@ from repro.core.collective import PhaserCollective
 from repro.data.synthetic import make_batch
 from repro.models.registry import get_api, get_config
 from repro.optim import AdamW, OptState
+from repro.pipeline_exec import (build_pipeline_program, derive_1f1b,
+                                 verify_phase_order)
 from repro.runtime_elastic import ElasticPhaserRuntime
 from repro.utils import to_device_copy
 
 STEPS = 60
 BATCH, SEQ = 4, 64
 
-assert jax.device_count() >= 8, "needs the 8-device host mesh (XLA_FLAGS)"
+assert jax.device_count() >= max(8, 6 * PIPE_S), \
+    "needs the simulated host mesh (XLA_FLAGS)"
 
 cfg = get_config("smollm-135m").reduced()
 api = get_api(cfg)
@@ -63,10 +82,20 @@ ckpt = CheckpointManager(ckpt_dir, async_write=False)
 # bucket groups synced through the double-buffered pipelined executor
 # while the backward pass still runs — bitwise-equal to eager by design,
 # proven here against the xla_psum baseline at every step.
-programs = ProgramCache(
-    lambda pc: build_gradsync_program(api, opt, pc, stacked=True,
-                                      overlap="pipelined"),
-    extra_key=("pipelined", 1))
+if PIPE_S > 1:
+    # 2-D path: 1F1B stage pipeline x per-epoch data-axis schedule
+    programs = ProgramCache(
+        lambda pc: build_pipeline_program(api, opt, pc,
+                                          n_stages=PIPE_S,
+                                          microbatches=PIPE_M,
+                                          stacked=True,
+                                          overlap="pipelined"),
+        extra_key=("pipeline", PIPE_S, "pipelined", PIPE_M))
+else:
+    programs = ProgramCache(
+        lambda pc: build_gradsync_program(api, opt, pc, stacked=True,
+                                          overlap="pipelined"),
+        extra_key=("pipelined", 1))
 baseline = ProgramCache(
     lambda pc: build_gradsync_program(
         api, opt,
@@ -89,9 +118,20 @@ def worker_batches(team, step):
             for k in bs[0]}
 
 
+def verify_pipeline_phase_order():
+    """The stage axis's own per-boundary proof: drive the 1F1B wave
+    schedule through real SIG/WAIT phaser actors (one per pipeline
+    edge) and assert the release order matches the counter oracle."""
+    if PIPE_S > 1:
+        verify_phase_order(derive_1f1b(PIPE_S, PIPE_M))
+
+
 losses = []
+verify_pipeline_phase_order()
 print(f"epoch 0: live={list(rt.epoch.live)} kind={rt.epoch.kind} "
-      f"schedule={rt.epoch.stats()}")
+      f"schedule={rt.epoch.stats()}"
+      + (f" pipeline: {PIPE_S} stages x {PIPE_M} microbatches "
+         f"(phase order verified)" if PIPE_S > 1 else ""))
 
 for step in range(STEPS):
     # ---- elastic events ---------------------------------------------------
@@ -146,7 +186,8 @@ for step in range(STEPS):
         # epoch boundary: checkpoint, swap programs, verify vs oracle
         ckpt.save(step + 1, params, opt_state)
         rt.verify_epoch()                  # protocol lanes == oracle ==
-        ep = rt.epoch                      # compiled schedule (asserts)
+        verify_pipeline_phase_order()      # compiled schedule (asserts)
+        ep = rt.epoch
         assert programs.get(ep.collective) is not None
         print(f"epoch {ep.index} @ phase {released}: live={list(ep.live)} "
               f"kind={ep.kind} schedule={ep.stats()} — verified vs "
@@ -170,8 +211,10 @@ for ep in rt.epochs:
 # one compiled program per distinct (member_set, kind), reused otherwise
 assert programs.stats()["misses"] == len(rt.epochs)
 assert losses[-1] < losses[0], "loss did not decrease through churn"
+mode = (f"on the 2-D ({PIPE_S}-stage 1F1B x data) mesh"
+        if PIPE_S > 1 else "synced on-device")
 print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across grow 4->6 / "
-      f"shrink 6->3, synced on-device by the compiled OVERLAPPED "
+      f"shrink 6->3, {mode} by the compiled OVERLAPPED "
       f"{rt.kind} schedule "
       f"({programs.get(rt.collective()).meta['bucket_groups']} bucket "
       f"groups): OK")

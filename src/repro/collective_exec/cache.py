@@ -40,7 +40,10 @@ class ProgramCache:
 
     @staticmethod
     def key_of(pc: PhaserCollective) -> Tuple:
-        return (pc.keys, pc.kind, pc.seed, pc.p)
+        # leaf_keys: a demoted straggler changes the schedule without
+        # changing the member set — it must be a distinct cache entry
+        return (pc.keys, pc.kind, pc.seed, pc.p,
+                tuple(getattr(pc, "leaf_keys", ()) or ()))
 
     def full_key(self, pc: PhaserCollective) -> Tuple:
         """Cache identity of this collective's program: the collective

@@ -187,7 +187,7 @@ def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     """Assignment rules: which (arch x shape) cells run.
 
     ``long_500k`` needs sub-quadratic attention — skipped for pure
-    full-attention archs (noted in DESIGN.md §6)."""
+    full-attention archs (noted in DESIGN.md §7)."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "full-attention arch: 500k decode is quadratic (skip)"
     return True, ""

@@ -2,7 +2,7 @@
 d_model=768 12H (kv=12) d_ff=3072 vocab=51865, conv frontend stubbed to
 precomputed frame embeddings (B, 1500, 768) [arXiv:2212.04356]. Decode
 shapes lower the decoder with a 32k self-attn KV cache structurally (the
-real model caps at 448 decoder positions — noted in DESIGN.md §6);
+real model caps at 448 decoder positions — noted in DESIGN.md §7);
 long_500k is skipped (full attention)."""
 from ..models.registry import register
 from .base import ModelConfig

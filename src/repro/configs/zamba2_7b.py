@@ -2,7 +2,7 @@
 vocab=32000, ssm_state=64; Mamba2 backbone + one *shared* attention+MLP
 block applied every 3 Mamba blocks (81 = 27 applications; the real model
 interleaves two shared blocks ~every 6 — period chosen to divide n_layers,
-noted in DESIGN.md §6) [arXiv:2411.15242]. Sub-quadratic: long_500k runs
+noted in DESIGN.md §7) [arXiv:2411.15242]. Sub-quadratic: long_500k runs
 (SSM state decode + O(1) shared-attn KV reads bounded by the cache
 window)."""
 from ..models.registry import register

@@ -375,6 +375,11 @@ class PhaserCollective:
     list the protocol actors converged to (heights are a deterministic
     function of the key, so survivors keep their lanes). Mesh rank i
     executes the role of ``sorted(keys)[i]``.
+
+    ``leaf_keys``: demoted (straggler) keys pinned to height 1 — leaves
+    of the SCSL reduce tree with the fewest dependents. Part of the
+    topology identity: the oracle, the fingerprint and the program-cache
+    key all carry it.
     """
 
     n: int
@@ -383,6 +388,7 @@ class PhaserCollective:
     p: float = 0.5
     seed: int = 0
     keys: Optional[Tuple[int, ...]] = None
+    leaf_keys: Tuple[int, ...] = ()
     up: Optional[Schedule] = None
     down: Optional[Schedule] = None
     rd: Optional[Schedule] = None
@@ -394,8 +400,11 @@ class PhaserCollective:
         else:
             self.keys = tuple(sorted(self.keys))
         assert len(self.keys) == self.n, (self.n, self.keys)
+        self.leaf_keys = tuple(sorted(set(self.leaf_keys)
+                                      & set(self.keys)))
         if self.kind == "phaser_scsl":
-            sl = SkipList.build(self.keys, p=self.p, seed=self.seed)
+            sl = SkipList.build(self.keys, p=self.p, seed=self.seed,
+                                leaf_keys=self.leaf_keys)
             self.up = scsl_reduce_schedule(sl, list(self.keys))
             self.down = snsl_broadcast_schedule(sl, list(self.keys))
         elif self.kind == "recursive_doubling":
@@ -526,18 +535,20 @@ class PhaserCollective:
         when the topology (live keys / kind) changes — the re-lower key
         for the elastic runtime's epoch swap."""
         if self.kind == "phaser_scsl":
-            return (self.kind, self.keys, self.up.rounds, self.down.rounds)
+            return (self.kind, self.keys, self.leaf_keys,
+                    self.up.rounds, self.down.rounds)
         if self.kind == "recursive_doubling":
             return (self.kind, self.keys, self.rd.rounds, self.rd.ops)
         return (self.kind, self.keys)
 
     def matches_oracle(self) -> bool:
         """Re-derive the schedule from a fresh deterministic skip-list
-        oracle over ``keys`` and compare structurally (the elastic
-        epoch-swap correctness check)."""
+        oracle over ``keys`` (demoted keys pinned to leaves) and compare
+        structurally (the elastic epoch-swap correctness check)."""
         if self.kind != "phaser_scsl":
             return True
-        sl = SkipList.build(self.keys, p=self.p, seed=self.seed)
+        sl = SkipList.build(self.keys, p=self.p, seed=self.seed,
+                            leaf_keys=self.leaf_keys)
         return (self.up == scsl_reduce_schedule(sl, list(self.keys))
                 and self.down == snsl_broadcast_schedule(sl,
                                                          list(self.keys)))

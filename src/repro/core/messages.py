@@ -2,7 +2,7 @@
 
 The poster's Table 1 names eight message classes used during eager insertion
 (TUS, TDS, MURS, MULS-1/2/3, AT, ENSP) without expanding the acronyms; we
-define a concrete protocol with the same structure (DESIGN.md §9) and keep the
+define a concrete protocol with the same structure (DESIGN.md §10) and keep the
 acronyms. Additional classes cover signaling (SIG), phase advance (ADV),
 registration accounting (ENSP/DEREG deltas), deletion (UNL), neighbor updates
 (PRV) and combine-set maintenance (CHILD_ADD / CHILD_DEL).

@@ -78,13 +78,17 @@ class ListState:
     # (serving a search/splice before MURS_ACK initializes our links
     # would be clobbered by the ack)
     join_defer: List = field(default_factory=list)
-    # --- SCSL re-parent handshake (chain invariant, DESIGN.md §9) ---
+    # --- SCSL re-parent handshake (chain invariant, DESIGN.md §10) ---
     rp_pending: Optional[int] = None     # CHILD_ADD sent, awaiting ACK
     rp_queue: Optional[Tuple[int, int]] = None  # (next_parent, effective)
     # --- SNSL ---
     released: int = -1
     # --- deletion driver ---
     dropping: bool = False
+    # demotion: unlink stops when the level falls below this (1 = keep
+    # level 0 — the node stays a member, pinned to a leaf position);
+    # 0 = full departure (the plain drop path)
+    demote_stop: int = 0
     unlink_level: Optional[int] = None
     unlink_waiting: bool = False      # paused on an open MULS latch
     unl_sent_succ: Optional[int] = None   # succ snapshot in the last UNL
@@ -237,6 +241,11 @@ class PhaserActor(Actor):
                 (self.sn.member and not self.sn.joined):
             self.pending_drop = True  # executed once eager insert completes
             return
+        if self.sc.demote_stop or self.sn.demote_stop:
+            # a demotion unlink is in flight: its driver state (dropping,
+            # unlink_level) is busy — run the drop when it completes
+            self.pending_drop = True
+            return
         if self.sc.member and not self.sc.dropping:
             self.sc.dropping = True
             self.sc.dereg_phase = self.sig_next
@@ -248,6 +257,32 @@ class PhaserActor(Actor):
         if self.sn.member and not self.sn.dropping:
             self.sn.dropping = True
             self._unlink_next_level(self.sn)
+
+    def local_demote(self) -> None:
+        """Straggler demotion: unlink every express lane but KEEP the
+        level-0 membership — the node becomes a leaf of the SCSL reduce
+        tree (fewest dependents) while still signaling every phase. The
+        same top-down UNL driver as deletion, stopped at level 1; no
+        DEREG (the head's expectation is unchanged)."""
+        for st in (self.sc, self.sn):
+            if not st.member or st.departed or st.dropping:
+                continue
+            st.target_height = 1
+            if st.height <= 1:
+                continue
+            st.dropping = True          # lanes >= 1 behave as leaving
+            st.demote_stop = 1
+            st.unlink_level = None
+            self._unlink_next_level(st)
+
+    def local_promote_to(self, height: int) -> None:
+        """Reverse a demotion: restore the drawn target height and walk
+        the lazy MULS promotions back up."""
+        for st in (self.sc, self.sn):
+            if not st.member or st.departed or st.dropping:
+                continue
+            st.target_height = height
+            self.start_promotion(st.lid)
 
     def start_insert(self, new_id: int, lid: int) -> None:
         """Initiate the eager insertion search from this (member) node."""
@@ -449,7 +484,11 @@ class PhaserActor(Actor):
 
     def _on_MULS2(self, m: M.MULS2) -> None:
         st = self.st(m.lid)
-        if st.dropping:
+        if st.dropping or st.height != m.level \
+                or st.target_height <= m.level:
+            # leaving, or the walk went stale (a demotion shrank our
+            # height / target while the MULS1 was in flight): decline —
+            # the grantor releases its latch and serves the next walker
             self._send(m.src, M.MULS3(self.rank, m.src, level=m.level,
                                       new_id=self.rank, commit=False,
                                       lid=m.lid))
@@ -462,7 +501,6 @@ class PhaserActor(Actor):
             self._send(m.succ, M.MULS1(self.rank, m.succ, level=m.level,
                                        new_id=self.rank, lid=m.lid))
             return
-        assert st.height == m.level, (self.rank, st.height, m.level)
         st.nxt.append(m.succ)
         st.prv.append(m.src)
         st.height += 1
@@ -509,6 +547,17 @@ class PhaserActor(Actor):
         if st.unlink_level is None:
             st.unlink_level = st.top
         l = st.unlink_level
+        if st.demote_stop > 0 and l < st.demote_stop:
+            # demotion complete: level 0 kept, node stays a live member
+            st.dropping = False
+            st.demote_stop = 0
+            st.unlink_level = None
+            st.unlink_waiting = False
+            if self.pending_drop and not (self.sc.demote_stop
+                                          or self.sn.demote_stop):
+                self.pending_drop = False
+                self.local_drop()
+            return
         if l < 0:
             st.departed = True
             self._finalize_drop(st)
@@ -609,9 +658,10 @@ class PhaserActor(Actor):
             return
         cur = st.nxt[m.level]
         if cur == m.nxt:
-            if st.dropping:
+            if st.dropping and m.level >= st.demote_stop:
                 # the handed node is already our successor, but WE are
-                # leaving: the sender must bypass us to it directly
+                # leaving this lane (a demoting node keeps the lanes
+                # below its demote_stop): the sender must bypass us
                 self._send(m.src, M.UNL(self.rank, m.src, level=m.level,
                                         node=self.rank, succ=m.nxt,
                                         lid=m.lid))
@@ -944,6 +994,9 @@ class DistPhaser:
         self.async_parent: Dict[int, int] = {}
         self.release_log: List[int] = []
         self.actors: Dict[int, PhaserActor] = {}
+        # demoted keys: height pinned to 1 (leaf of the reduce tree);
+        # part of the topology identity the oracle re-derives
+        self.demoted: set = set()
         # optional monitor(ph, k) invoked at the release instant (modelcheck)
         self.release_monitor = None
 
@@ -963,12 +1016,14 @@ class DistPhaser:
 
     # ------------------------------------------------------------- topology
     def height_of(self, key: int) -> int:
+        if key in self.demoted:
+            return 1
         return det_height(key, p=self.p, max_height=self.max_height,
                           seed=self.seed)
 
     def oracle(self, keys) -> SkipList:
         return SkipList.build(keys, p=self.p, max_height=self.max_height,
-                              seed=self.seed)
+                              seed=self.seed, leaf_keys=self.demoted)
 
     def _init_list(self, lid: int, keys: List[int]) -> None:
         sl = self.oracle(keys)
@@ -1003,6 +1058,22 @@ class DistPhaser:
 
     def drop(self, rank: int) -> None:
         self.actors[rank].local_drop()
+        self.demoted.discard(rank)
+
+    def demote(self, rank: int) -> None:
+        """Pin ``rank`` to a leaf position (height 1) in both lists: the
+        straggler keeps signaling but loses every dependent in the
+        hierarchical combining tree. Structural work is the deletion
+        unlink stopped at level 1 — no DEREG, no departure."""
+        assert self.lists_done(rank), rank
+        self.demoted.add(rank)
+        self.actors[rank].local_demote()
+
+    def repromote(self, rank: int) -> None:
+        """Undo a demotion: restore the deterministic drawn height and
+        run the lazy MULS promotions back up the lanes."""
+        self.demoted.discard(rank)
+        self.actors[rank].local_promote_to(self.height_of(rank))
 
     def async_add(self, parent: int, new_rank: int,
                   mode: str = SIG_WAIT) -> None:

@@ -25,7 +25,10 @@ def det_height(key: int, *, p: float = 0.5, max_height: int = 32,
                seed: int = 0, phaser_id: int = 0) -> int:
     """Geometric(p) height in [1, max_height] from a counter-based hash.
 
-    Height h means the node is present on levels 0..h-1.
+    Height h means the node is present on levels 0..h-1. A *demoted*
+    key (straggler pinned to a leaf position) is handled one level up:
+    ``SkipList``'s ``leaf_keys`` override forces height 1 without
+    perturbing any other key's draw.
     """
     if key == HEAD:
         return max_height + 1  # head is taller than everything: every lane ends there
@@ -73,11 +76,15 @@ class SkipList:
     """
 
     def __init__(self, *, p: float = 0.5, max_height: int = 32, seed: int = 0,
-                 phaser_id: int = 0):
+                 phaser_id: int = 0,
+                 leaf_keys: Optional[Iterable[int]] = None):
         self.p = p
         self.max_height = max_height
         self.seed = seed
         self.phaser_id = phaser_id
+        # demoted keys: pinned to height 1 (leaf of the SCSL reduce
+        # tree — fewest dependents) regardless of their hash draw
+        self.leaf_keys = frozenset(leaf_keys or ())
         self.nodes: Dict[int, Node] = {}
         head = Node(HEAD, max_height + 1)
         self.nodes[HEAD] = head
@@ -91,6 +98,8 @@ class SkipList:
         return sl
 
     def height_of(self, key: int) -> int:
+        if key in self.leaf_keys:
+            return 1
         return det_height(key, p=self.p, max_height=self.max_height,
                           seed=self.seed, phaser_id=self.phaser_id)
 

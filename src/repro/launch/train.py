@@ -25,6 +25,13 @@ batch divides the team. ``--overlap-sync`` compiles the pipelined
 programs (DESIGN.md §5): reverse-topo bucket groups sync while the
 backward pass still runs, and with ``--microbatches N`` each
 microbatch's bucket stream overlaps the next microbatch's backward.
+
+``--pipeline-stages S`` (DESIGN.md §6) compiles the 2-D program
+instead: the stacked blocks shard over a stage axis
+(workers x S devices), microbatches flow through the wave-synchronous
+1F1B schedule derived from the point-to-point phaser graph, and each
+stage row syncs gradients over the data axis through the epoch's
+collective schedule — churn re-derives both at the same boundary.
 """
 from __future__ import annotations
 
@@ -96,6 +103,13 @@ def main(argv=None):
                     help="pipeline gradient sync against the backward "
                          "pass (reverse-topo bucket groups, "
                          "double-buffered rounds; device path only)")
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="pipeline parallelism: shard the stacked "
+                         "blocks over a stage axis and run the 1F1B "
+                         "wave schedule on a 2-D (stage x data) mesh; "
+                         "needs workers*stages devices and "
+                         "--microbatches as the pipeline depth "
+                         "(device path only)")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -119,10 +133,10 @@ def main(argv=None):
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     runtime = events = None
     if (args.elastic is not None or args.device_collective
-            or args.overlap_sync):
-        # --device-collective/--overlap-sync without churn still need
-        # the runtime: the engine's programs are keyed by its epochs (a
-        # static team is just a single epoch)
+            or args.overlap_sync or args.pipeline_stages > 1):
+        # --device-collective/--overlap-sync/--pipeline-stages without
+        # churn still need the runtime: the engine's programs are keyed
+        # by its epochs (a static team is just a single epoch)
         runtime = ElasticPhaserRuntime(args.workers, seed=args.seed,
                                        kind=args.sync_kind)
     if args.elastic is not None:
@@ -136,8 +150,11 @@ def main(argv=None):
                      runtime=runtime,
                      elastic_events=events or {},
                      device_collective=(True if args.device_collective
-                                        or args.overlap_sync else None),
-                     overlap_sync=args.overlap_sync)
+                                        or args.overlap_sync
+                                        or args.pipeline_stages > 1
+                                        else None),
+                     overlap_sync=args.overlap_sync,
+                     pipeline_stages=args.pipeline_stages)
     try:
         loop.run(args.steps, resume=args.resume)
     except ValueError as e:

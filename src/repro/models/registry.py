@@ -62,7 +62,85 @@ class ModelAPI:
         total = loss + 0.01 * aux
         return total, {"loss": loss, "aux": aux}
 
+    # ------------------------------------------- pipeline stages (train)
+    def pipeline_supported(self) -> bool:
+        """Whether the model decomposes into pipeline stages: a single
+        stacked-blocks scan (dense/moe/ssm/xlstm/hybrid decoder-only).
+        vlm prepends patches (stage 0 would need the vision frontend)
+        and enc-dec has two stacks; both keep the single-axis path."""
+        return (not self.cfg.is_encdec
+                and self.cfg.family in ("dense", "moe", "ssm", "hybrid"))
+
+    def embed_fn(self, params, tokens):
+        """Input-side stage: tokens (B, S) -> activations (B, S, D)."""
+        return transformer.embed_tokens(self.cfg, params, tokens)
+
+    def stage_fn(self, io_params, blocks, h, *, remat: bool = False):
+        """One stage's compute: scan a slice of the stacked blocks over
+        the incoming activation. ``io_params`` carries the replicated
+        non-block parameters (the hybrid family's shared attention is
+        applied inside each group scan element). Returns (h, aux)."""
+        return transformer.forward_stage(
+            self.cfg, blocks, h, shared=io_params.get("shared"),
+            remat=remat)
+
+    def head_fn(self, params, h):
+        """Output-side stage: final norm + (tied) unembedding."""
+        return transformer.head_logits(self.cfg, params, h)
+
+    def loss_from_logits(self, logits, targets):
+        return _xent(logits, targets)
+
     # ------------------------------------------------------------- serve
+    def decode_state_bdims(self, batch: int, window: int):
+        """Per-leaf index of the decode state's BATCH dim, found by
+        diffing the spec at two batch sizes (leaf layouts differ per
+        family — stacked layer dims may precede the batch dim)."""
+        s1 = self.decode_state_spec(batch, window)
+        s2 = self.decode_state_spec(batch + 1, window)
+        return jax.tree_util.tree_map(
+            lambda a, b: next(i for i, (x, y)
+                              in enumerate(zip(a.shape, b.shape))
+                              if x != y), s1, s2)
+
+    def prefill_state_fn(self, params, tokens, lengths, *, window: int):
+        """Bulk prefill for RECURRENT decode states (ssm/xlstm/hybrid):
+        one scanned decode pass over a padded (G, S_bucket) prompt group
+        with per-request length masking — a group-batched compiled scan
+        instead of one full-batch decode dispatch per token. A slot's
+        state freezes once ``t >= lengths[g]`` (and its KV rows, where
+        the family has them, stay untouched for the pad tail), so the
+        final state equals the one token-by-token admission produces.
+        Returns (next_logits (G, V) f32 at each request's own len-1,
+        decode state for a G-slot batch)."""
+        G, Sb = tokens.shape
+        lengths = jnp.asarray(lengths, jnp.int32)
+        state0 = self.init_decode_state(G, window)
+        bdims = self.decode_state_bdims(G, window)
+
+        def step(carry, t):
+            state, nxt = carry
+            tok = jnp.take(tokens, t, axis=1)
+            logits, new_state = self.decode_fn(
+                params, state, {"token": tok,
+                                "t": jnp.full((G,), t, jnp.int32)})
+            live = t < lengths                          # (G,)
+
+            def sel(o, n, d):
+                shape = [1] * o.ndim
+                shape[d] = G
+                return jnp.where(live.reshape(shape), n, o)
+
+            state = jax.tree_util.tree_map(sel, state, new_state, bdims)
+            nxt = jnp.where((t == lengths - 1)[:, None],
+                            logits.astype(jnp.float32), nxt)
+            return (state, nxt), None
+
+        nxt0 = jnp.zeros((G, self.cfg.vocab_size), jnp.float32)
+        (state, nxt), _ = jax.lax.scan(step, (state0, nxt0),
+                                       jnp.arange(Sb, dtype=jnp.int32))
+        return nxt, state
+
     def prefill_full_fn(self, params, batch: Dict):
         """Prefill returning logits at EVERY position (plus caches).
         Length-bucketed admission pads prompts up to a shared bucket

@@ -135,22 +135,11 @@ def _full_kv(cfg: ModelConfig, attn_p: Dict, positions: jax.Array,
 # ---------------------------------------------------------------------------
 # Training / prefill forward
 # ---------------------------------------------------------------------------
-def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            *, patches: Optional[jax.Array] = None, remat: bool = False,
-            want_cache: bool = False):
-    """Full-sequence forward. tokens: (B, S_txt). For vlm, ``patches``
-    (B, n_vis, D) are prepended (stub frontend per assignment). Returns
-    (logits, aux_loss, caches|None)."""
-    dt = _dt(cfg)
-    h = embed_apply(params["embed"], tokens)
-    if cfg.family == "vlm":
-        assert patches is not None
-        h = jnp.concatenate([patches.astype(dt), h], axis=1)
-    B, S, D = h.shape
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
-                                 (B, S))
-    h = constrain(h, "batch", None, None)
-    shared = params.get("shared")
+def _stack_body(cfg: ModelConfig, shared: Optional[Dict],
+                positions: jax.Array, want_cache: bool):
+    """The per-layer scan body shared by the full forward and the
+    pipeline stage forward (``forward_stage``): one stacked-blocks slice
+    element -> new carry (+ optional KV cache)."""
 
     def ssm_block(pl, h):
         hn = rmsnorm(h, pl["ln1"], cfg.norm_eps)
@@ -216,6 +205,26 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
             h = ssm_block(pl, h)
         return {"h": h, "aux": aux}, cache
 
+    return body
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            *, patches: Optional[jax.Array] = None, remat: bool = False,
+            want_cache: bool = False):
+    """Full-sequence forward. tokens: (B, S_txt). For vlm, ``patches``
+    (B, n_vis, D) are prepended (stub frontend per assignment). Returns
+    (logits, aux_loss, caches|None)."""
+    dt = _dt(cfg)
+    h = embed_apply(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert patches is not None
+        h = jnp.concatenate([patches.astype(dt), h], axis=1)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    h = constrain(h, "batch", None, None)
+    body = _stack_body(cfg, params.get("shared"), positions, want_cache)
+
     if remat:
         body = jax.checkpoint(body)
 
@@ -229,6 +238,46 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
     if want_cache:
         out_caches = {"layers": caches}
     return logits, carry["aux"], out_caches
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-stage decomposition (pipeline_exec): embed | block slice | head
+# ---------------------------------------------------------------------------
+def embed_tokens(cfg: ModelConfig, params: Params,
+                 tokens: jax.Array) -> jax.Array:
+    """The input-side pipeline stage: tokens (B, S) -> h (B, S, D)."""
+    assert cfg.family != "vlm" and not cfg.is_encdec, cfg.family
+    return embed_apply(params["embed"], tokens)
+
+
+def forward_stage(cfg: ModelConfig, blocks: Params, h: jax.Array, *,
+                  shared: Optional[Params] = None,
+                  remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Scan a contiguous SLICE of the stacked blocks over an incoming
+    activation — one pipeline stage's compute. Identical math to the
+    same slice inside ``forward``'s scan (the stage map partitions the
+    scan axis, and the body is literally shared), so chaining the S
+    stage slices reproduces the full forward exactly. Returns
+    (h, aux_slice); aux contributions are per-slice and summed across
+    stages by the caller (linearity of the load-balancing loss)."""
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    body = _stack_body(cfg, shared, positions, want_cache=False)
+    if remat:
+        body = jax.checkpoint(body)
+    carry0 = {"h": h, "aux": jnp.zeros((), jnp.float32)}
+    carry, _ = jax.lax.scan(body, carry0, blocks)
+    return carry["h"], carry["aux"]
+
+
+def head_logits(cfg: ModelConfig, params: Params,
+                h: jax.Array) -> jax.Array:
+    """The output-side pipeline stage: final norm + (tied) unembedding."""
+    hout = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed_apply(
+        params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        hout, transpose=True)
 
 
 # ---------------------------------------------------------------------------

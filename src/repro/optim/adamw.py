@@ -53,11 +53,16 @@ class AdamW:
                         mu=jax.tree_util.tree_map(f32, params),
                         nu=jax.tree_util.tree_map(f32, params))
 
-    def update(self, grads, state: OptState, params
-               ) -> Tuple[Dict, OptState, Dict]:
+    def update(self, grads, state: OptState, params, *,
+               gnorm=None) -> Tuple[Dict, OptState, Dict]:
+        """``gnorm`` overrides the clip norm: a model-parallel caller
+        (pipeline stages holding disjoint block slices) passes the true
+        cross-stage global norm — the local tree alone would under-count
+        it and clip inconsistently per stage."""
         step = state.step + 1
         lr = cosine_schedule(self.lr, self.warmup, self.total_steps)(step)
-        gnorm = global_norm(grads)
+        if gnorm is None:
+            gnorm = global_norm(grads)
         if self.clip_norm is not None:
             scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
             grads = jax.tree_util.tree_map(

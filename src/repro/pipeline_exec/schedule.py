@@ -1,0 +1,200 @@
+"""1F1B pipeline schedules derived from the point-to-point phase ordering.
+
+A pipeline of S stages over M microbatches is the phaser graph of
+``core/p2p.py``: forward edge phasers (s, s+1) carry activations (stage
+s SIG, stage s+1 WAIT), backward edge phasers (s+1, s) carry cotangents.
+``F(s, m)`` signals fwd phase m after waiting on fwd phase m of the
+predecessor edge; ``B(s, m)`` signals bwd phase m after waiting on bwd
+phase m of the successor edge (and, at the last stage, on its own
+``F(S-1, m)`` — a local dependency, no phaser needed).
+
+The schedule is organized in **waves** — global ticks where every active
+stage executes the same instruction kind (the SPMD-uniform shape the
+compiled program needs):
+
+* forward wave ``f``:  stage s runs ``F(s, m=f-s)``       if 0 <= m < M
+* backward wave ``b``: stage s runs ``B(s, m=b-(S-1-s))`` if 0 <= m < M
+
+The **wave-synchronous 1F1B** order is the interleaving
+``F_0 .. F_{S-1}, B_0, F_S, B_1, F_{S+1}, ..., B_{last}``: after the
+warmup every stage alternates one backward with one forward (the
+defining 1F1B property — GPipe would run all forwards first, holding M
+activations everywhere). The alternation is tight for kind-uniform
+waves: ``B_b`` needs ``F_{S-1+b}`` (its last-stage microbatch's own
+forward), which skews early stages' first backward by one wave per hop,
+so stage s holds at most ``min(M, 2(S-1-s)+1)`` live forward
+activations (vs the asynchronous-tick bound S-s; last stage exactly 1).
+``derive_1f1b`` constructs it; ``check()`` proves dependency validity,
+the steady-state F/B alternation, and the in-flight bound;
+``as_program()`` linearizes the waves into the p2p instruction stream;
+``verify_phase_order`` drives that stream through the REAL protocol
+actors and asserts the observed release order equals the host counter
+oracle (``simulate_program``) — the per-epoch proof the example and
+tests run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..core.p2p import Edge, Op, PipelinePhaserGraph, simulate_program
+
+
+def pipeline_edges(n_stages: int) -> Tuple[Edge, ...]:
+    """Forward activation edges then backward cotangent edges."""
+    fwd = [(s, s + 1) for s in range(n_stages - 1)]
+    bwd = [(s + 1, s) for s in range(n_stages - 1)]
+    return tuple(fwd + bwd)
+
+
+@dataclass(frozen=True)
+class PipelineSchedule:
+    """A wave-ordered 1F1B schedule. ``waves[t]`` is ``("F", f)`` or
+    ``("B", b)`` — at tick t every stage s executes that wave's
+    instruction for its own microbatch (or idles outside [0, M))."""
+
+    n_stages: int
+    n_microbatches: int
+    waves: Tuple[Tuple[str, int], ...]
+
+    @property
+    def n_waves(self) -> int:
+        return len(self.waves)
+
+    def fwd_mb(self, wave: int, stage: int) -> Optional[int]:
+        m = wave - stage
+        return m if 0 <= m < self.n_microbatches else None
+
+    def bwd_mb(self, wave: int, stage: int) -> Optional[int]:
+        m = wave - (self.n_stages - 1 - stage)
+        return m if 0 <= m < self.n_microbatches else None
+
+    def stage_stream(self, stage: int) -> List[Tuple[str, int]]:
+        """The stage's own instruction sequence in wave order."""
+        out = []
+        for kind, w in self.waves:
+            m = (self.fwd_mb(w, stage) if kind == "F"
+                 else self.bwd_mb(w, stage))
+            if m is not None:
+                out.append((kind, m))
+        return out
+
+    # ------------------------------------------------------------ validity
+    def check(self) -> None:
+        S, M = self.n_stages, self.n_microbatches
+        nf = M + S - 1
+        assert sorted(w for k, w in self.waves if k == "F") == list(range(nf))
+        assert sorted(w for k, w in self.waves if k == "B") == list(range(nf))
+        done: Dict[Tuple[str, int, int], int] = {}
+        for t, (kind, w) in enumerate(self.waves):
+            for s in range(S):
+                if kind == "F":
+                    m = self.fwd_mb(w, s)
+                    if m is None:
+                        continue
+                    if s > 0:
+                        # activation from the predecessor's F, earlier wave
+                        assert done.get(("F", s - 1, m), t) < t, (t, s, m)
+                    done[("F", s, m)] = t
+                else:
+                    m = self.bwd_mb(w, s)
+                    if m is None:
+                        continue
+                    # own forward must have run (vjp recompute input)
+                    assert done.get(("F", s, m), t) < t, (t, s, m)
+                    if s < S - 1:
+                        # cotangent from the successor's B, earlier wave
+                        assert done.get(("B", s + 1, m), t) < t, (t, s, m)
+                    done[("B", s, m)] = t
+        # in-flight bound + steady-state alternation: stage s holds at
+        # most min(M, 2(S-1-s)+1) live forward activations (the
+        # wave-synchronous 1F1B memory cap; GPipe would hold M at every
+        # stage), and between any two backwards there is at most one
+        # forward — the 1F1B property
+        for s in range(S):
+            live = peak = run = 0
+            seen_b = False
+            for kind, m in self.stage_stream(s):
+                if kind == "F":
+                    live += 1
+                    run += 1
+                    assert run <= (1 if seen_b
+                                   else 2 * (S - 1 - s) + 1), (s, run)
+                else:
+                    live -= 1
+                    run = 0
+                    seen_b = True
+                peak = max(peak, live)
+            assert live == 0
+            assert peak <= min(M, 2 * (S - 1 - s) + 1), (s, peak)
+
+    # ----------------------------------------------------- p2p linearization
+    def as_program(self) -> List[Op]:
+        """The wave schedule as a p2p instruction stream: each F/B wave
+        emits its stages' wait/signal ops in dependency order (ascending
+        stage for F — a stage's input was signaled a wave earlier;
+        descending for B)."""
+        S, M = self.n_stages, self.n_microbatches
+        ops: List[Op] = []
+        for kind, w in self.waves:
+            stages = range(S) if kind == "F" else reversed(range(S))
+            for s in stages:
+                if kind == "F":
+                    m = self.fwd_mb(w, s)
+                    if m is None:
+                        continue
+                    if s > 0:
+                        ops.append(("wait", (s - 1, s), m))
+                    if s < S - 1:
+                        ops.append(("signal", (s, s + 1)))
+                else:
+                    m = self.bwd_mb(w, s)
+                    if m is None:
+                        continue
+                    if s < S - 1:
+                        ops.append(("wait", (s + 1, s), m))
+                    if s > 0:
+                        ops.append(("signal", (s, s - 1)))
+        return ops
+
+    def fingerprint(self) -> Tuple:
+        return (self.n_stages, self.n_microbatches, self.waves)
+
+
+def derive_1f1b(n_stages: int, n_microbatches: int) -> PipelineSchedule:
+    """The canonical non-interleaved 1F1B wave order: S warmup forward
+    waves, then strict B/F alternation, then the cooldown backward tail."""
+    S, M = n_stages, n_microbatches
+    assert S >= 1 and M >= 1, (S, M)
+    nf = M + S - 1
+    waves: List[Tuple[str, int]] = [("F", f) for f in range(min(S, nf))]
+    b = 0
+    for f in range(S, nf):
+        waves.append(("B", b))
+        waves.append(("F", f))
+        b += 1
+    waves.extend(("B", bb) for bb in range(b, nf))
+    sched = PipelineSchedule(S, M, tuple(waves))
+    sched.check()
+    return sched
+
+
+def verify_phase_order(sched: PipelineSchedule, *,
+                       seed: int = 0) -> Dict[str, int]:
+    """Prove the schedule against the point-to-point protocol: drive its
+    instruction stream through real phaser actors (one per edge, SIG/WAIT
+    modes) and assert (1) every wait is already satisfied when reached,
+    (2) the observed global release order equals the host counter
+    oracle's, and (3) each edge phaser's converged SCSL/SNSL match the
+    mode-filtered skip-list oracle. Returns protocol stats."""
+    if sched.n_stages == 1:
+        return {"edges": 0, "messages": 0, "releases": 0}
+    edges = pipeline_edges(sched.n_stages)
+    prog = sched.as_program()
+    g = PipelinePhaserGraph(sched.n_stages, edges, seed=seed)
+    got = g.run_program(prog)
+    want = simulate_program(edges, prog)
+    assert [(e.edge, e.phase) for e in got] == \
+        [(e.edge, e.phase) for e in want], "release order diverged"
+    g.verify_topologies()
+    return g.stats()

@@ -1,0 +1,323 @@
+"""Compiled pipeline-parallel train programs on the 2-D (stage, data) mesh.
+
+``build_pipeline_program`` lowers the point-to-point dependency graph of
+``core/p2p.py`` — stages SIG toward their successor, WAIT on their
+predecessor — into one ``shard_map`` train step over a 2-D mesh:
+
+* the **stage axis** partitions the stacked-blocks scan (stage s owns
+  scan slice ``stage_map[s]``; embed/norms/head/shared replicated);
+  activations and cotangents move between neighbouring stages as
+  ``lax.ppermute`` rounds — one per schedule wave, emitted in the
+  wave-synchronous 1F1B order ``derive_1f1b`` derives from the phase
+  ordering (``schedule.py``). Each backward wave recomputes its stage
+  slice under ``jax.vjp`` from the stored incoming activation (the 1F1B
+  in-flight set), so cross-stage dataflow is exactly the phaser graph's
+  signal/wait structure.
+* the **data axis** runs the elastic epoch's collective schedule
+  unchanged: the stage-local grads flatten into the engine's bucket
+  layout (derived from the LOCAL param slice) and sync through
+  ``execute_flat`` / ``execute_flat_pipelined`` — the same ppermute
+  rounds, fused Pallas combine, alive-flag count and overlap config as
+  the single-axis engine, now per stage row. Replicated-parameter grads
+  (embed/head/shared) are psum'ed over the stage axis first, and the
+  AdamW clip norm is computed globally across stages, so the update is
+  mathematically identical to the single-axis step (asserted to f32
+  tolerance against the ``xla_psum`` baseline program in
+  ``examples/elastic_train.py`` through grow/shrink churn).
+
+SPMD uniformity: every wave is kind-uniform (all active stages run the
+same instruction), so warmup/cooldown idleness is masked compute — the
+same wall-clock shape as a real pipeline bubble — and the per-stage
+microbatch index is data (``wave - axis_index``), not control flow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..collective_exec.buckets import make_layout
+from ..collective_exec.executor import execute_flat, execute_flat_pipelined
+from ..collective_exec.program import OVERLAP_MODES
+from ..core.collective import PhaserCollective
+from ..optim import OptState
+from ..sharding.policies import stage_data_mesh
+from .schedule import PipelineSchedule, derive_1f1b
+
+STAGE_AXIS = "stage"
+
+
+def stage_partition(api, n_stages: int) -> Tuple[Tuple[int, int], ...]:
+    """The stage map: contiguous [lo, hi) slices of the stacked-blocks
+    scan axis, one per stage. The scan length (layers, or groups for the
+    grouped families) must divide evenly."""
+    assert n_stages >= 1, n_stages
+    assert api.pipeline_supported(), \
+        f"pipeline: family {api.cfg.family!r} keeps the single-axis path"
+    spec = api.param_spec()
+    lens = {l.shape[0] for l in jax.tree_util.tree_leaves(spec["blocks"])}
+    assert len(lens) == 1, f"ragged scan axis: {lens}"
+    scan_len = lens.pop()
+    assert scan_len % n_stages == 0, \
+        f"scan length {scan_len} not divisible by {n_stages} stages"
+    per = scan_len // n_stages
+    return tuple((s * per, (s + 1) * per) for s in range(n_stages))
+
+
+def _spec_tree(param_spec, leaf_spec: P, blocks_spec: P):
+    """PartitionSpec tree over the param structure: ``blocks`` leaves
+    sharded, everything else replicated."""
+    return {k: jax.tree_util.tree_map(
+        lambda _: blocks_spec if k == "blocks" else leaf_spec, v)
+        for k, v in param_spec.items()}
+
+
+@dataclass
+class PipelineProgram:
+    """One epoch's compiled 2-D train step. Mirrors ``GradSyncProgram``'s
+    surface (``step``/``reduce_metrics``) so the train loop and example
+    drive both interchangeably; ``key`` additionally carries the stage
+    map and pipeline config."""
+
+    key: tuple
+    pc: PhaserCollective
+    mesh: Mesh
+    sched: PipelineSchedule
+    stage_map: Tuple[Tuple[int, int], ...]
+    layout: Any
+    jitted: Callable
+    stacked: bool
+    param_sh: Any
+    opt_sh: Any
+    meta: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.pc.n
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_map)
+
+    def _commit(self, tree, shardings):
+        """Re-commit carried state onto this program's 2-D mesh (stage
+        slices for blocks, replicated otherwise) — resharding is a no-op
+        within an epoch, an explicit device_put across epoch swaps."""
+        return jax.tree_util.tree_map(
+            lambda x, sh: x if getattr(x, "sharding", None) == sh
+            else jax.device_put(x, sh), tree, shardings)
+
+    def step(self, params, opt_state, batch, alive=None):
+        if alive is None:
+            alive = jnp.ones((self.pc.n,), jnp.float32)
+        params = self._commit(params, self.param_sh)
+        opt_state = self._commit(opt_state, self.opt_sh)
+        return self.jitted(params, opt_state, batch, alive)
+
+    def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
+        n_alive = jnp.maximum(pm["alive"].sum(), 1.0)
+        out = {}
+        for k, v in pm.items():
+            if k in ("loss", "aux"):
+                out[k] = v.sum() / n_alive
+            elif k == "alive":
+                out[k] = v.sum()
+            else:
+                out[k] = v[0]
+        out.update({k: jnp.asarray(v, jnp.float32)
+                    for k, v in self.meta.items()})
+        return out
+
+
+def build_pipeline_program(api, opt, pc: PhaserCollective, *,
+                           n_stages: int,
+                           devices: Optional[Sequence] = None,
+                           microbatches: int = 1,
+                           stacked: bool = False,
+                           remat: bool = False,
+                           fused: bool = True,
+                           interpret: Optional[bool] = None,
+                           overlap: str = "eager",
+                           bucket_elems: Optional[int] = None
+                           ) -> PipelineProgram:
+    """Compile the epoch's 2-D program: the 1F1B stage pipeline on the
+    stage axis interleaved with the epoch's gradient-sync schedule on
+    the data axis. ``microbatches`` is the pipeline depth M (the batch
+    splits along its leading dim); ``overlap`` selects the data-axis
+    executor exactly as in ``build_gradsync_program``."""
+    assert overlap in OVERLAP_MODES, overlap
+    assert microbatches >= 1, microbatches
+    S, M = n_stages, microbatches
+    mesh = stage_data_mesh(S, pc.n, data_axis=pc.axis_name,
+                           stage_axis=STAGE_AXIS, devices=devices)
+    stage_map = stage_partition(api, S)
+    sched = derive_1f1b(S, M)
+    axis = pc.axis_name
+    per = stage_map[0][1] - stage_map[0][0]
+
+    spec = api.param_spec()
+    local_spec = dict(spec)
+    local_spec["blocks"] = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((per, *l.shape[1:]), l.dtype),
+        spec["blocks"])
+    layout = make_layout(local_spec, bucket_elems=bucket_elems)
+
+    param_ps = _spec_tree(spec, P(), P(STAGE_AXIS))
+    opt_ps = OptState(step=P(), mu=param_ps, nu=param_ps)
+    fperm = [(s, s + 1) for s in range(S - 1)]
+    bperm = [(s, s - 1) for s in range(1, S)]
+    inv_M = 1.0 / M
+
+    def worker(params, opt_state, batch, alive):
+        if stacked:
+            batch = jax.tree_util.tree_map(lambda x: x[0], batch)
+        a = alive[0]
+        sidx = lax.axis_index(STAGE_AXIS)
+        is_first = sidx == 0
+        is_last = sidx == S - 1
+        blocks = params["blocks"]                    # local (per, ...) slice
+        io = {k: v for k, v in params.items() if k != "blocks"}
+        tok_s, tgt_s = (batch[k].reshape(M, batch[k].shape[0] // M,
+                                         *batch[k].shape[1:])
+                        for k in ("tokens", "targets"))
+
+        def local_fwd(blocks, io, recv, tok):
+            # the stage input: the embedded microbatch at stage 0, the
+            # ppermuted predecessor activation elsewhere (the `where`
+            # also routes the embed gradient to stage 0 only)
+            h0 = api.embed_fn(io, tok)
+            h_in = jnp.where(is_first, h0, recv.astype(h0.dtype))
+            return api.stage_fn(io, blocks, h_in, remat=remat)
+
+        def local_obj(blocks, io, recv, tok, tgt):
+            h_out, aux = local_fwd(blocks, io, recv, tok)
+            logits = api.head_fn(io, h_out)
+            xent = api.loss_from_logits(logits, tgt)
+            return h_out, xent, aux
+
+        zero_h = jnp.zeros_like(api.embed_fn(io, tok_s[0]))
+        # parked-activation RING: the wave-synchronous 1F1B in-flight
+        # bound is min(M, 2(S-1-s)+1) per stage (schedule.check()), so
+        # the stage-0 bound R suffices everywhere and live microbatch
+        # indices are consecutive — modular indexing is collision-free.
+        # This is what makes the compiled program hold O(S) activations
+        # instead of GPipe's O(M).
+        R = min(M, 2 * (S - 1) + 1)
+        acts = jnp.zeros((R, *zero_h.shape), zero_h.dtype)
+        fwd_reg = zero_h
+        bwd_reg = zero_h
+        f32z = lambda t: jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), t)
+        g_blocks = f32z(blocks)
+        g_io = f32z(io)
+        loss_acc = jnp.zeros((), jnp.float32)
+        aux_acc = jnp.zeros((), jnp.float32)
+
+        for kind, w in sched.waves:
+            if kind == "F":
+                y = (lax.ppermute(fwd_reg, STAGE_AXIS, perm=fperm)
+                     if S > 1 else fwd_reg)
+                m_i = w - sidx
+                active = (m_i >= 0) & (m_i < M)
+                mc = jnp.clip(m_i, 0, M - 1)
+                h_out, _ = local_fwd(blocks, io, y, tok_s[mc])
+                # park the incoming activation for the backward
+                # recompute (the wave-synchronous 1F1B in-flight set)
+                mcr = mc % R
+                acts = acts.at[mcr].set(jnp.where(active, y, acts[mcr]))
+                fwd_reg = jnp.where(active, h_out,
+                                    jnp.zeros_like(h_out))
+            else:
+                cot = (lax.ppermute(bwd_reg, STAGE_AXIS, perm=bperm)
+                       if S > 1 else bwd_reg)
+                m_i = w - (S - 1 - sidx)
+                active = (m_i >= 0) & (m_i < M)
+                mc = jnp.clip(m_i, 0, M - 1)
+                primals, pull = jax.vjp(local_obj, blocks, io,
+                                        acts[mc % R], tok_s[mc],
+                                        tgt_s[mc])
+                _, xent_p, aux_p = primals
+                cot_h = jnp.where(is_last, jnp.zeros_like(cot), cot)
+                cot_x = jnp.where(is_last, inv_M, 0.0).astype(xent_p.dtype)
+                cot_a = jnp.asarray(0.01 * inv_M, aux_p.dtype)
+                gb, gio, g_recv, _, _ = pull(
+                    (cot_h.astype(zero_h.dtype), cot_x, cot_a))
+                gate = active.astype(jnp.float32)
+                add = lambda acc, g: acc + gate * g.astype(jnp.float32)
+                g_blocks = jax.tree_util.tree_map(add, g_blocks, gb)
+                g_io = jax.tree_util.tree_map(add, g_io, gio)
+                loss_acc = loss_acc + jnp.where(
+                    active & is_last, xent_p.astype(jnp.float32), 0.0)
+                aux_acc = aux_acc + jnp.where(
+                    active, aux_p.astype(jnp.float32), 0.0)
+                bwd_reg = jnp.where(active, g_recv,
+                                    jnp.zeros_like(g_recv))
+
+        # cross-stage reductions: the loss materializes at the last
+        # stage, replicated-param grads sum their per-stage contributions
+        loss = lax.psum(loss_acc, STAGE_AXIS) * inv_M
+        aux = lax.psum(aux_acc, STAGE_AXIS) * inv_M
+        g_io = jax.tree_util.tree_map(
+            lambda g: lax.psum(g, STAGE_AXIS), g_io)
+        grads = dict(g_io)
+        grads["blocks"] = g_blocks
+        grads = jax.tree_util.tree_map(
+            lambda g: g * a.astype(g.dtype), grads)
+
+        # ---- data-axis sync: the epoch's collective schedule, per
+        # stage row, with the engine's bucket layout over the LOCAL
+        # param slice (overlap config identical to the 1-D engine) ----
+        if overlap == "pipelined":
+            bufs = layout.flatten_groups(grads, a)
+            bufs = execute_flat_pipelined(bufs, pc, fused=fused,
+                                          interpret=interpret)
+            grads, count = layout.unflatten_groups(bufs)
+        else:
+            flat = execute_flat(layout.flatten(grads, a), pc,
+                                fused=fused, interpret=interpret)
+            grads, count = layout.unflatten(flat)
+        inv = 1.0 / jnp.maximum(count, 1.0)
+        grads = jax.tree_util.tree_map(
+            lambda g: g * inv.astype(g.dtype), grads)
+
+        # clip on the TRUE global norm: stage-local block slices are
+        # disjoint (psum their square sums), replicated grads count once
+        sq = lambda t: sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                           for l in jax.tree_util.tree_leaves(t))
+        gnorm = jnp.sqrt(lax.psum(sq(grads["blocks"]), STAGE_AXIS)
+                         + sq({k: v for k, v in grads.items()
+                               if k != "blocks"}))
+        new_p, new_o, om = opt.update(grads, opt_state, params,
+                                      gnorm=gnorm)
+        pm = {"loss": loss * a, "aux": aux * a, "alive": a, **om}
+        pm = {k: jnp.asarray(v, jnp.float32).reshape(1)
+              for k, v in pm.items()}
+        return new_p, new_o, pm
+
+    sm = shard_map(worker, mesh=mesh,
+                   in_specs=(param_ps, opt_ps, P(axis), P(axis)),
+                   out_specs=(param_ps, opt_ps, P(axis)),
+                   check_rep=False)
+    jitted = jax.jit(sm)
+    named = lambda ps: NamedSharding(mesh, ps)
+    is_p = lambda x: isinstance(x, P)
+    param_sh = jax.tree_util.tree_map(named, param_ps, is_leaf=is_p)
+    opt_sh = OptState(step=named(P()), mu=param_sh, nu=param_sh)
+    st = pc.stats()
+    meta = {"team": pc.n, "stages": S, "microbatches": M,
+            "pipeline_waves": sched.n_waves,
+            "sync_rounds": st["rounds"],
+            "sync_messages": st["messages"],
+            "overlap": int(overlap == "pipelined"),
+            "bucket_groups": layout.n_groups}
+    key = (pc.keys, pc.kind, pc.seed, pc.p, "pipeline", stage_map,
+           overlap, M)
+    return PipelineProgram(key=key, pc=pc, mesh=mesh, sched=sched,
+                           stage_map=stage_map, layout=layout,
+                           jitted=jitted, stacked=stacked,
+                           param_sh=param_sh, opt_sh=opt_sh, meta=meta)

@@ -43,7 +43,8 @@ from ..core.skiplist import HEAD, SkipList
 @dataclass
 class WorkerEvent:
     step: int
-    kind: str        # "join" | "leave" | "fail" | "straggle"
+    # "join" | "leave" | "fail" | "straggle" | "demote" | "repromote"
+    kind: str
     worker: int
 
 
@@ -146,7 +147,9 @@ class ElasticPhaserRuntime:
             return Epoch(index, phase_start, keys, self.kind, None)
         k = self._kind_for(len(keys))
         pc = PhaserCollective(len(keys), self.axis_name, kind=k,
-                              seed=self.seed, keys=keys)
+                              seed=self.seed, keys=keys,
+                              leaf_keys=tuple(sorted(self.ph.demoted
+                                                     & self.live)))
         return Epoch(index, phase_start, keys, k, pc)
 
     # ------------------------------------------------------------- churn
@@ -180,6 +183,34 @@ class ElasticPhaserRuntime:
         self.events.append(WorkerEvent(self._at(step),
                                        "fail" if fail else "leave", worker))
         self._dirty = True
+
+    def request_demote(self, worker: int, *,
+                       step: Optional[int] = None) -> None:
+        """Straggler demotion: the worker keeps signaling but is pinned
+        to a leaf of the SCSL reduce tree (fewest dependents). Eager on
+        the protocol (partial top-down unlink, run to quiescence); the
+        schedule re-derives at the next boundary like any churn."""
+        assert worker in self.live, (worker, sorted(self.live))
+        if worker in self.ph.demoted:
+            return
+        self.ph.demote(worker)
+        self.ph.run(self._make_scheduler())
+        self.events.append(WorkerEvent(self._at(step), "demote", worker))
+        self._dirty = True
+
+    def request_repromote(self, worker: int, *,
+                          step: Optional[int] = None) -> None:
+        """Reverse a demotion once the worker keeps pace again."""
+        if worker not in self.live or worker not in self.ph.demoted:
+            return
+        self.ph.repromote(worker)
+        self.ph.run(self._make_scheduler())
+        self.events.append(WorkerEvent(self._at(step), "repromote", worker))
+        self._dirty = True
+
+    @property
+    def demoted(self) -> Set[int]:
+        return set(self.ph.demoted)
 
     def _at(self, step: Optional[int]) -> int:
         return self._step if step is None else step
@@ -222,13 +253,16 @@ class ElasticPhaserRuntime:
         if pc is None:
             return None
         return {"member_set": list(pc.keys), "kind": pc.kind,
-                "seed": pc.seed, "p": pc.p, "axis": pc.axis_name}
+                "seed": pc.seed, "p": pc.p, "axis": pc.axis_name,
+                "leaf_keys": list(pc.leaf_keys)}
 
     def oracle(self) -> SkipList:
-        """Deterministic skip list over the live keys — what the protocol
-        actors must have converged to at quiescence."""
+        """Deterministic skip list over the live keys (demoted keys at
+        height 1) — what the protocol actors must have converged to at
+        quiescence."""
         return SkipList.build(sorted(self.live), p=self.ph.p,
-                              max_height=self.ph.max_height, seed=self.seed)
+                              max_height=self.ph.max_height, seed=self.seed,
+                              leaf_keys=self.ph.demoted)
 
     def protocol_topology(self, lid: int = SCSL) -> List[List[int]]:
         """Lane-by-lane chains extracted from the live protocol actors
@@ -284,11 +318,17 @@ class ElasticPhaserRuntime:
     # --------------------------------------------------------- stragglers
     def record_step_times(self, step: int, times: Dict[int, float], *,
                           slack: float = 3.0,
+                          demote_after: int = 2,
                           evict_after: int = 3) -> List[int]:
-        """Straggler policy on the split-phase slack: a worker slower than
-        ``slack``x the live median accumulates a strike; ``evict_after``
-        consecutive strikes converts it to a deletion (the fail path).
-        Returns workers evicted this step."""
+        """Straggler policy on the split-phase slack: a worker slower
+        than ``slack``x the live median accumulates a strike. The
+        response escalates — at ``demote_after`` consecutive strikes the
+        worker is **demoted** to a leaf of the SCSL reduce tree (fewest
+        dependents: its slowness stops gating anyone else's combining
+        subtree) while it keeps contributing; only at ``evict_after``
+        strikes is it evicted (the fail path). A worker that recovers
+        (strike reset) is re-promoted to its drawn height. Returns
+        workers evicted this step."""
         live_times = [times[w] for w in self.live if w in times]
         if not live_times:
             return []
@@ -302,7 +342,11 @@ class ElasticPhaserRuntime:
                 if self._strikes[w] >= evict_after and len(self.live) > 1:
                     self.request_leave(w, fail=True, step=step)
                     evicted.append(w)
+                elif self._strikes[w] >= demote_after:
+                    self.request_demote(w, step=step)
             else:
+                if self._strikes.get(w, 0) and w in self.ph.demoted:
+                    self.request_repromote(w, step=step)
                 self._strikes[w] = 0
         return evicted
 

@@ -23,9 +23,18 @@ instead of one decode step per token); causality keeps every position
 below a request's true length unaffected by the pad tail, so the
 engine reads each request's next token at its own ``len - 1`` and
 splices only the first ``len`` KV positions into the slot's cache
-region, without touching running slots. Families whose decode state is
-not a plain KV cache (ssm/xlstm/hybrid recurrences, enc-dec, vlm) and
-prompts longer than the cache window keep the token-by-token path.
+region, without touching running slots.
+
+Families whose decode state is a **recurrence** (ssm / xlstm / hybrid)
+cannot splice a full-logits prefill's caches — their state is the
+O(1) carry after the prompt, not a per-position buffer. They get their
+own bulk path (``ModelAPI.prefill_state_fn``): one compiled
+length-masked decode scan over the padded group (a slot's state freezes
+at its true length), spliced into the admitted slots in one vectorized
+scatter. That replaces G x len full-batch decode dispatches per group
+with ONE jitted call per (group size, bucket) — the recurrent analogue
+of the KV cache splice. Enc-dec/vlm and prompts longer than the cache
+window keep the token-by-token path.
 
 Correctness note (the bug this design fixed): anything handed to the
 async-dispatched jitted decode must be an immutable snapshot. Passing a
@@ -84,12 +93,7 @@ class ServeEngine:
         # per-leaf batch dim: the dim whose size changes with the batch
         # (needed to splice a newly-prefilled slot into the live state
         # without touching other slots)
-        s1 = api.decode_state_spec(batch, window)
-        s2 = api.decode_state_spec(batch + 1, window)
-        self._bdim = jax.tree_util.tree_map(
-            lambda a, b: next(i for i, (x, y)
-                              in enumerate(zip(a.shape, b.shape))
-                              if x != y), s1, s2)
+        self._bdim = api.decode_state_bdims(batch, window)
         # bulk-prefill eligibility: decode state must be the plain stacked
         # KV cache whose layout prefill_fn's caches splice into directly
         layers = self.state.get("layers")
@@ -98,6 +102,14 @@ class ServeEngine:
                       and isinstance(layers, dict)
                       and set(layers) == {"k", "v", "pos"})
         self._kv_window = layers["k"].shape[2] if self._bulk else 0
+        # recurrent families take the length-masked decode-scan bulk
+        # path instead (xlstm is family "ssm" with slstm groups)
+        self._bulk_rec = (self.cfg.family in ("ssm", "hybrid")
+                          and not self.cfg.is_encdec)
+        # one compiled scan per (group size, bucket) — window is static
+        self._prefill_state = jax.jit(
+            lambda p, toks, lens: api.prefill_state_fn(
+                p, toks, lens, window=window))
 
     @property
     def epoch(self) -> int:
@@ -142,26 +154,33 @@ class ServeEngine:
     def _admit(self) -> None:
         """Phase-boundary refill: fill ALL free slots from the queue at
         this boundary (JOIN = eager insertion). Admits are batched: bulk
-        groups (same power-of-two length bucket, KV-cache family) run
-        one padded prefill forward each and splice their caches in;
-        everything else falls back to token-by-token prefill."""
+        groups (same power-of-two length bucket) run one padded prefill
+        forward (KV families) or one length-masked decode scan
+        (recurrent families) each and splice their states in; everything
+        else falls back to token-by-token prefill."""
         admits: List[Tuple[int, Request]] = []
         for slot in range(self.batch):
             if self.slot_req[slot] is None and self.queue:
                 admits.append((slot, self.queue.pop(0)))
-        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        groups: Dict[Tuple[str, int], List[Tuple[int, Request]]] = {}
         for slot, req in admits:
             # clamp to the window so a non-pow2 window keeps its largest
             # admissible prompts on the bulk path (they share one
             # window-sized bucket)
-            bucket = min(self._bucket_len(len(req.prompt)),
-                         self._kv_window)
-            if self._bulk and len(req.prompt) <= self._kv_window:
-                groups.setdefault(bucket, []).append((slot, req))
+            L = len(req.prompt)
+            if self._bulk and L <= self._kv_window:
+                bucket = min(self._bucket_len(L), self._kv_window)
+                groups.setdefault(("kv", bucket), []).append((slot, req))
+            elif self._bulk_rec and L <= self.window:
+                bucket = min(self._bucket_len(L), self.window)
+                groups.setdefault(("rec", bucket), []).append((slot, req))
             else:
                 self._admit_sequential(slot, req)
-        for bucket, group in sorted(groups.items()):
-            self._admit_bulk(group, bucket)
+        for (kind, bucket), group in sorted(groups.items()):
+            if kind == "kv":
+                self._admit_bulk(group, bucket)
+            else:
+                self._admit_bulk_recurrent(group, bucket)
 
     def _admit_bulk(self, group: List[Tuple[int, "Request"]],
                     bucket: int) -> None:
@@ -203,16 +222,59 @@ class ServeEngine:
             pf["k"].astype(st["k"].dtype))
         new["v"] = st["v"].at[:, sl, :bucket].set(
             pf["v"].astype(st["v"].dtype))
-        new["pos"] = st["pos"].at[:, sl, :bucket].set(
+        # invalidate the slot's WHOLE window first: a reused slot whose
+        # previous prompt was longer than this bucket would otherwise
+        # keep stale attendable pos rows beyond the new region
+        new["pos"] = st["pos"].at[:, sl].set(-1).at[:, sl, :bucket].set(
             jnp.broadcast_to(jnp.where(valid, pos[None], -1),
                              (st["pos"].shape[0], len(slots), bucket)))
         return {**state, "layers": new}
+
+    def _admit_bulk_recurrent(self, group: List[Tuple[int, "Request"]],
+                              bucket: int) -> None:
+        """Bulk admission for recurrent-state families: ONE compiled
+        length-masked decode scan over the padded group
+        (``prefill_state_fn``) produces every request's final recurrent
+        state and its next-token logits at its own ``len - 1``; the
+        states splice into the admitted slots in one vectorized scatter
+        (running slots untouched)."""
+        lengths = [len(r.prompt) for _, r in group]
+        tokens = np.zeros((len(group), bucket), np.int32)
+        for g, (_, r) in enumerate(group):
+            tokens[g, :lengths[g]] = r.prompt
+        logits, gstate = self._prefill_state(
+            self.params, to_device_copy(tokens),
+            to_device_copy(np.asarray(lengths), dtype=np.int32))
+        self.state = self._splice_state_group(self.state, gstate,
+                                              [s for s, _ in group])
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for g, (slot, req) in enumerate(group):
+            self._occupy(slot, req, int(nxt[g]), lengths[g])
+
+    def _splice_state_group(self, state, gstate, slots: List[int]):
+        """Scatter a group-batched decode state (leading batch = the
+        group) into the live state's admitted slots, one vectorized set
+        per leaf along its batch dim."""
+        sl = jnp.asarray(slots)
+
+        def f(o, n, d):
+            om = jnp.moveaxis(o, d, 0)
+            nm = jnp.moveaxis(n, d, 0)
+            return jnp.moveaxis(om.at[sl].set(nm.astype(om.dtype)), 0, d)
+
+        return jax.tree_util.tree_map(f, state, gstate, self._bdim)
 
     def _admit_sequential(self, slot: int, req: "Request") -> None:
         """Fallback admission for recurrent-state families and prompts
         beyond the cache window: prefill via decode steps, then splice
         only this slot's state back."""
         old_state = self.state
+        # a REUSED slot still holds the previous request's state: a
+        # recurrent carry (or stale KV pos rows) would leak into this
+        # prefill — reset the slot to a fresh init first
+        self.state = self._splice_slot(
+            old_state, self.api.init_decode_state(self.batch, self.window),
+            slot)
         token_b = np.zeros((self.batch,), np.int32)
         logits = None
         for t, tok in enumerate(req.prompt):

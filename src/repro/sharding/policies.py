@@ -125,6 +125,28 @@ def make_rules(mesh: Mesh, cfg: ModelConfig, *,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-parallel 2-D mesh
+# ---------------------------------------------------------------------------
+def stage_data_mesh(n_stages: int, n_data: int, *,
+                    data_axis: str = "data", stage_axis: str = "stage",
+                    devices=None) -> Mesh:
+    """The 2-D (stage x data) mesh of the pipeline subsystem
+    (``pipeline_exec``): ``n_stages`` model-parallel pipeline rows, each
+    a full data-parallel team of ``n_data``. Devices fill stage-major —
+    a data column's stages sit on CONSECUTIVE devices, so the per-wave
+    activation ``ppermute`` hops between physical neighbours while the
+    data-axis collective spans the stride."""
+    import numpy as np
+    devices = list(devices) if devices is not None else jax.devices()
+    need = n_stages * n_data
+    assert len(devices) >= need, \
+        f"need {n_stages}x{n_data}={need} devices for the " \
+        f"({stage_axis!r}, {data_axis!r}) mesh, have {len(devices)}"
+    arr = np.array(devices[:need]).reshape(n_data, n_stages).T
+    return Mesh(arr.copy(), (stage_axis, data_axis))
+
+
+# ---------------------------------------------------------------------------
 # Batch / decode-state shardings
 # ---------------------------------------------------------------------------
 def batch_specs(rules: ShardingRules, batch: Dict) -> Dict:

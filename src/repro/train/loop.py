@@ -64,6 +64,10 @@ class TrainLoop:
     # overlapped gradient sync (device path): pipeline bucket-group
     # rounds against the backward pass / microbatch streams (DESIGN.md §5)
     overlap_sync: bool = False
+    # pipeline parallelism (device path): shard the stacked blocks over
+    # a stage axis and run the 1F1B wave schedule on a 2-D (stage, data)
+    # mesh; ``microbatches`` is the pipeline depth M (DESIGN.md §6)
+    pipeline_stages: int = 1
     _progs: Any = field(default=None, init=False, repr=False)
 
     @property
@@ -106,16 +110,21 @@ class TrainLoop:
     def _collective_devices(self, pc) -> Optional[List]:
         """Devices for the device-collective path, or None for the
         host/XLA path. Auto mode requires >1 device, enough of them for
-        the team, and a batch the team (and per-rank microbatching)
-        divides."""
+        the team (x stages on the 2-D pipeline path), and a batch the
+        team (and per-rank microbatching) divides."""
         if self.device_collective is False or pc is None:
+            if self.pipeline_stages > 1:
+                raise ValueError("pipeline_stages > 1 requires the "
+                                 "device-collective path")
             return None
         devs = jax.devices()
-        ok = (len(devs) >= pc.n and pc.n >= 1
+        need = pc.n * max(self.pipeline_stages, 1)
+        ok = (len(devs) >= need and pc.n >= 1
               and self.data.batch % pc.n == 0
               and (self.data.batch // pc.n) % self.microbatches == 0)
-        if self.device_collective is True:
+        if self.device_collective is True or self.pipeline_stages > 1:
             assert ok, (f"device_collective requested but team={pc.n}, "
+                        f"stages={self.pipeline_stages}, "
                         f"devices={len(devs)}, batch={self.data.batch}, "
                         f"microbatches={self.microbatches}")
             return devs
@@ -131,8 +140,10 @@ class TrainLoop:
                     self.api, self.opt, rules=None, remat=self.remat,
                     microbatches=self.microbatches, donate=False,
                     collective=c, collective_devices=jax.devices(),
-                    overlap=self._overlap_mode),
-                extra_key=(self._overlap_mode, self.microbatches))
+                    overlap=self._overlap_mode,
+                    pipeline_stages=self.pipeline_stages),
+                extra_key=(self._overlap_mode, self.microbatches,
+                           self.pipeline_stages))
         return self._progs
 
     def _build_step(self):
@@ -158,7 +169,8 @@ class TrainLoop:
         if key is None:
             return None
         return {**key, "overlap": self._overlap_mode,
-                "microbatches": self.microbatches}
+                "microbatches": self.microbatches,
+                "pipeline_stages": self.pipeline_stages}
 
     def _precompile_from_key(self, pk: Optional[Dict]) -> None:
         """Resume path: rebuild the checkpointed epoch's collective and
@@ -170,6 +182,7 @@ class TrainLoop:
         # this program, so skip rather than compile a dead executable
         if (pk.get("overlap") != self._overlap_mode
                 or pk.get("microbatches") != self.microbatches
+                or pk.get("pipeline_stages", 1) != self.pipeline_stages
                 or (self.runtime is not None
                     and (pk.get("kind") != self.runtime.kind
                          or pk.get("seed") != self.runtime.seed))):
@@ -178,7 +191,8 @@ class TrainLoop:
         keys = tuple(pk["member_set"])
         pc = PhaserCollective(len(keys), pk.get("axis", "data"),
                               kind=pk["kind"], seed=pk["seed"],
-                              p=pk["p"], keys=keys)
+                              p=pk["p"], keys=keys,
+                              leaf_keys=tuple(pk.get("leaf_keys", ())))
         if self._collective_devices(pc) is not None:
             self._ensure_progs().get(pc)
 
@@ -241,6 +255,13 @@ class TrainLoop:
                                        program_key=self._program_key())
                     ts = self._build_step()
                     self.runtime.verify_epoch()
+                    if self.pipeline_stages > 1:
+                        # the stage axis's own proof: the 1F1B wave
+                        # order against the real p2p phaser actors
+                        from ..pipeline_exec import (derive_1f1b,
+                                                     verify_phase_order)
+                        verify_phase_order(derive_1f1b(
+                            self.pipeline_stages, self.microbatches))
                     self.epoch_log.append({
                         "step": step, "phase": released,
                         "epoch": ep.index, "live": list(ep.live),

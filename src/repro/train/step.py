@@ -71,6 +71,28 @@ def _program_step(api: ModelAPI, opt: AdamW, collective,
                      batch_sh=None, program=prog)
 
 
+def _pipeline_step(api: ModelAPI, opt: AdamW, collective,
+                   devices: Sequence, *, n_stages: int, remat: bool,
+                   stacked: bool, overlap: str = "eager",
+                   microbatches: int = 1) -> TrainStep:
+    """2-D path: the 1F1B stage pipeline on the stage axis interleaved
+    with the epoch's collective schedule on the data axis
+    (``pipeline_exec``), adapted to the TrainStep surface."""
+    from ..pipeline_exec import build_pipeline_program
+    prog = build_pipeline_program(api, opt, collective,
+                                  n_stages=n_stages, devices=devices,
+                                  microbatches=microbatches,
+                                  stacked=stacked, remat=remat,
+                                  overlap=overlap)
+
+    def jitted(params, opt_state, batch, alive=None):
+        new_p, new_o, pm = prog.step(params, opt_state, batch, alive)
+        return new_p, new_o, prog.reduce_metrics(pm)
+
+    return TrainStep(fn=jitted, jitted=jitted, param_sh=None, opt_sh=None,
+                     batch_sh=None, program=prog)
+
+
 def build_train_step(api: ModelAPI, opt: AdamW, *,
                      rules: Optional[ShardingRules] = None,
                      remat: bool = True,
@@ -79,7 +101,8 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
                      collective=None,
                      collective_devices: Optional[Sequence] = None,
                      stacked_batch: bool = False,
-                     overlap: str = "eager") -> TrainStep:
+                     overlap: str = "eager",
+                     pipeline_stages: int = 1) -> TrainStep:
     """``collective``: the elastic epoch's PhaserCollective. It is part
     of the lowered step's *static identity* — re-building at an epoch
     boundary re-lowers for the new team. Without ``collective_devices``
@@ -88,9 +111,21 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
     engine's compiled shard_map program and the schedule's ppermute
     rounds *are* the gradient reduction (``overlap="pipelined"`` makes
     that reduction overlap the backward pass; microbatching unrolls into
-    per-microbatch bucket streams on this path)."""
+    per-microbatch bucket streams on this path).
+
+    ``pipeline_stages > 1`` (device path only) compiles the 2-D
+    (stage x data) pipeline program instead: the stacked blocks shard
+    over the stage axis, microbatches flow through the wave-synchronous
+    1F1B schedule, and the epoch's collective syncs each stage row over
+    the data axis (``pipeline_exec``)."""
     cfg = api.cfg
     if collective is not None and collective_devices is not None:
+        if pipeline_stages > 1:
+            return _pipeline_step(api, opt, collective,
+                                  collective_devices,
+                                  n_stages=pipeline_stages, remat=remat,
+                                  stacked=stacked_batch, overlap=overlap,
+                                  microbatches=microbatches)
         return _program_step(api, opt, collective, collective_devices,
                              remat=remat, stacked=stacked_batch,
                              donate=donate, overlap=overlap,

@@ -1,6 +1,6 @@
 """Small cross-cutting helpers.
 
-``to_device_copy`` exists because of a real flake (DESIGN.md §6):
+``to_device_copy`` exists because of a real flake (DESIGN.md §7):
 ``jnp.asarray(np_buf)``'s host-to-device transfer may *alias* the source
 buffer and read it asynchronously after dispatch returns. Handing it a
 buffer the caller mutates right afterwards (the next prefill token, an

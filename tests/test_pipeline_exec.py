@@ -1,0 +1,390 @@
+"""Point-to-point phaser modes + pipeline subsystem (DESIGN.md §6).
+
+Layers of evidence:
+
+1. SIG/WAIT mode semantics on the real actors: signal accumulation
+   (producers run ahead without blocking), waiters never gate phase
+   completion, and the converged SCSL/SNSL equal the MODE-FILTERED
+   skip-list oracle;
+2. hypothesis properties: on randomized stage graphs and randomized
+   valid op interleavings, the protocol's observed release order equals
+   the host counter oracle (``simulate_program``) — the p2p analogue of
+   the collective ``simulate_schedule`` equivalence;
+3. the 1F1B wave schedule: dependency validity, the steady-state F/B
+   alternation, the wave-synchronous in-flight bound, and
+   ``verify_phase_order`` against real actors for an (S, M) sweep;
+4. ProgramCache keying across 2-D configs: (stage map x member set x
+   demotion leaf set) are distinct entries, revisits hit;
+5. straggler demotion: leaf pinning in the oracle + schedule, the
+   demote-then-evict escalation, re-promotion on recovery;
+6. numeric (subprocess, 8 host devices, slow): the compiled 2-D
+   pipeline program produces the same loss and params as the
+   single-axis ``xla_psum`` engine across grow/shrink epochs.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.collective import PhaserCollective
+from repro.core.p2p import (P2PPhaser, PipelinePhaserGraph,
+                            simulate_program)
+from repro.core.phaser import SIG_MODE, SIG_WAIT, WAIT_MODE
+from repro.core.skiplist import SkipList
+from repro.pipeline_exec import derive_1f1b, pipeline_edges, \
+    verify_phase_order
+from repro.runtime_elastic import ElasticPhaserRuntime
+
+
+# ------------------------------------------------- SIG/WAIT semantics
+def test_sig_wait_producer_consumer_accumulation():
+    p = P2PPhaser({0: SIG_MODE, 1: WAIT_MODE}, seed=0)
+    assert not p.wait(1, 0)
+    p.signal(0, times=3)                  # unbounded run-ahead
+    assert p.wait(1, 0) and p.wait(1, 2) and not p.wait(1, 3)
+    p.verify_topology()
+
+
+def test_waiters_never_gate_release():
+    """A pure WAIT participant contributes no expectation: phases
+    release on the signalers alone, and releases diffuse to it."""
+    p = P2PPhaser({0: SIG_MODE, 1: SIG_MODE, 2: WAIT_MODE}, seed=1)
+    p.signal(0, 2)
+    assert p.released(2) == -1            # held by signaler 1, not by 2
+    p.signal(1, 1)
+    assert p.released(2) == 0
+    assert p.pending(0) == 1              # one accumulated signal ahead
+    p.verify_topology()
+
+
+def test_sig_only_cannot_wait_and_wait_only_cannot_signal():
+    p = P2PPhaser({0: SIG_MODE, 1: WAIT_MODE}, seed=0)
+    with pytest.raises(AssertionError):
+        p.signal(1)
+    with pytest.raises(AssertionError):
+        p.wait(0, 0)
+
+
+def test_mode_filtered_oracle_after_dynamic_add():
+    """New participants register with explicit modes; each list's
+    converged structure is the oracle over ITS mode's key set."""
+    p = P2PPhaser({0: SIG_WAIT, 1: SIG_MODE, 2: WAIT_MODE}, seed=2)
+    p.add_participant(0, 3, SIG_MODE)
+    p.add_participant(0, 4, WAIT_MODE)
+    p.signal(0), p.signal(1), p.signal(3)
+    assert p.released(2) == 0 and p.released(4) == 0
+    assert sorted(p.signalers()) == [0, 1, 3]
+    assert sorted(p.waiters()) == [0, 2, 4]
+    p.verify_topology()
+
+
+def test_graph_modes_aggregate():
+    g = PipelinePhaserGraph(3, pipeline_edges(3), seed=0)
+    assert g.mode_of(0) == SIG_WAIT       # signals fwd, waits on bwd
+    assert g.mode_of(1) == SIG_WAIT
+    assert g.mode_of(2) == SIG_WAIT
+    g2 = PipelinePhaserGraph(2, [(0, 1)], seed=0)
+    assert g2.mode_of(0) == SIG_MODE and g2.mode_of(1) == WAIT_MODE
+
+
+# ------------------------------------------------- hypothesis property
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    @given(st.integers(2, 5), st.integers(0, 10_000), st.integers(5, 40))
+    @settings(max_examples=30, deadline=None)
+    def test_random_stage_graph_release_order_matches_oracle(
+            n, seed, n_ops):
+        """Random directed stage graphs, random VALID op interleavings:
+        the real actors' release order equals the counter oracle and
+        every wait is satisfied exactly when the oracle says so."""
+        rng = np.random.default_rng(seed)
+        pairs = [(u, v) for u in range(n) for v in range(n) if u != v]
+        k = int(rng.integers(1, min(len(pairs), 6) + 1))
+        idx = rng.choice(len(pairs), size=k, replace=False)
+        edges = [pairs[i] for i in idx]
+        prog, count = [], {tuple(e): 0 for e in edges}
+        for _ in range(n_ops):
+            e = tuple(edges[rng.integers(len(edges))])
+            if count[e] and rng.integers(2):
+                prog.append(("wait", e, int(rng.integers(count[e]))))
+            else:
+                prog.append(("signal", e))
+                count[e] += 1
+        g = PipelinePhaserGraph(n, edges, seed=seed % 7)
+        got = g.run_program(prog)
+        want = simulate_program(edges, prog)
+        assert [(e.edge, e.phase) for e in got] == \
+            [(e.edge, e.phase) for e in want]
+        g.verify_topologies()
+
+    @given(st.integers(1, 4), st.integers(1, 6))
+    @settings(max_examples=24, deadline=None)
+    def test_1f1b_phase_order_verifies_for_any_shape(S, M):
+        sched = derive_1f1b(S, M)
+        sched.check()
+        verify_phase_order(sched)
+
+    @given(st.integers(2, 6), st.integers(0, 10_000),
+           st.lists(st.sampled_from(["join", "leave", "demote",
+                                     "repromote", "step"]),
+                    max_size=14))
+    @settings(max_examples=30, deadline=None)
+    def test_churn_with_demotion_epochs_match_oracle(n, seed, ops):
+        rng = np.random.default_rng(seed)
+        rt = ElasticPhaserRuntime(n, seed=seed % 5)
+        for op in ops:
+            if op == "join":
+                rt.request_join()
+            elif op == "leave" and len(rt.live) > 1:
+                rt.request_leave(int(rng.choice(sorted(rt.live))))
+            elif op == "demote" and rt.live:
+                rt.request_demote(int(rng.choice(sorted(rt.live))))
+            elif op == "repromote" and rt.demoted:
+                rt.request_repromote(int(rng.choice(sorted(rt.demoted))))
+            else:
+                rt.advance()
+        rt.advance()
+        rt.verify_epoch()
+        rt.ph.check_quiescent_invariants()
+        for ep in rt.epochs:
+            if ep.collective is not None:
+                assert ep.collective.matches_oracle(), ep.index
+
+
+# --------------------------------------------------- 1F1B wave schedule
+def test_1f1b_last_stage_strictly_alternates():
+    s = derive_1f1b(3, 4)
+    assert s.stage_stream(2) == [("F", 0), ("B", 0), ("F", 1), ("B", 1),
+                                 ("F", 2), ("B", 2), ("F", 3), ("B", 3)]
+
+
+def test_1f1b_in_flight_bound_beats_gpipe():
+    """The wave-synchronous 1F1B cap min(M, 2(S-1-s)+1): for deep M the
+    last stages hold far fewer than GPipe's M activations."""
+    S, M = 4, 16
+    s = derive_1f1b(S, M)
+    for stage in range(S):
+        live = peak = 0
+        for kind, _ in s.stage_stream(stage):
+            live += 1 if kind == "F" else -1
+            peak = max(peak, live)
+        assert peak == min(M, 2 * (S - 1 - stage) + 1)
+
+
+def test_1f1b_program_is_valid_linearization():
+    sched = derive_1f1b(3, 3)
+    prog = sched.as_program()
+    # the oracle raising would mean an unsatisfied wait
+    simulate_program(pipeline_edges(3), prog)
+    # every fwd edge signals M phases, every bwd edge too
+    sig = {}
+    for op in prog:
+        if op[0] == "signal":
+            sig[op[1]] = sig.get(op[1], 0) + 1
+    assert all(v == 3 for v in sig.values()) and len(sig) == 4
+
+
+def test_stage_partition_validates():
+    from repro.models.registry import get_api, get_config
+    from repro.pipeline_exec import stage_partition
+    api = get_api(get_config("smollm-135m").reduced())
+    assert stage_partition(api, 2) == ((0, 1), (1, 2))
+    with pytest.raises(AssertionError):
+        stage_partition(api, 3)           # 2 layers don't split 3 ways
+    enc = get_api(get_config("whisper-small").reduced())
+    with pytest.raises(AssertionError):
+        stage_partition(enc, 2)           # enc-dec keeps single-axis
+
+
+# -------------------------------------------- ProgramCache 2-D keying
+class _FakeBuilder:
+    def __init__(self):
+        self.built = []
+
+    def __call__(self, pc):
+        self.built.append(pc)
+        return object()
+
+
+def test_program_cache_keys_stage_map_times_member_set():
+    from repro.collective_exec import ProgramCache
+    teams = [(0, 1, 2, 3), (0, 1, 2, 3, 4, 5), (0, 1, 2)]
+    progs = {}
+    for stages in (1, 2, 4):
+        b = _FakeBuilder()
+        cache = ProgramCache(b, extra_key=("pipeline", stages,
+                                           "pipelined", 2))
+        for keys in teams:
+            pc = PhaserCollective(len(keys), "data",
+                                  kind="recursive_doubling", keys=keys)
+            progs[(stages, keys)] = cache.get(pc)
+            assert cache.get(pc) is progs[(stages, keys)]   # revisit hits
+        assert cache.stats()["misses"] == len(teams)
+        assert cache.stats()["hits"] == len(teams)
+    # distinct (stage map, member set) -> distinct programs
+    assert len({id(p) for p in progs.values()}) == len(progs)
+
+
+def test_program_cache_demotion_is_distinct_entry():
+    from repro.collective_exec import ProgramCache
+    b = _FakeBuilder()
+    cache = ProgramCache(b)
+    keys = (0, 1, 2, 3)
+    plain = PhaserCollective(4, "data", kind="phaser_scsl", keys=keys)
+    demoted = PhaserCollective(4, "data", kind="phaser_scsl", keys=keys,
+                               leaf_keys=(2,))
+    assert cache.get(plain) is not cache.get(demoted)
+    assert cache.get(demoted) is cache.get(demoted)
+    assert len(cache) == 2
+
+
+def test_pipeline_program_key_carries_stage_map():
+    """The program's own key (what checkpoints persist) separates the
+    same member set at different stage counts."""
+    from repro.collective_exec import ProgramCache
+    pc = PhaserCollective(2, "data", kind="xla_psum", keys=(0, 1))
+    base = ProgramCache.key_of(pc)
+    two_stages = base + ("pipeline", ((0, 1), (1, 2)), "eager", 2)
+    one_stage = base + ("pipeline", ((0, 2),), "eager", 2)
+    assert two_stages != one_stage != base
+
+
+# ------------------------------------------------- straggler demotion
+def test_demote_pins_leaf_in_oracle_and_schedule():
+    rt = ElasticPhaserRuntime(6, seed=0, kind="phaser_scsl")
+    rt.advance()
+    tall = max(rt.live, key=lambda w: rt.ph.actors[w].sc.height)
+    assert rt.ph.actors[tall].sc.height > 1
+    rt.request_demote(tall)
+    assert rt.ph.actors[tall].sc.height == 1
+    assert rt.ph.actors[tall].sn.height == 1
+    rt.advance()
+    rt.verify_epoch()
+    ep = rt.epoch
+    assert ep.collective.leaf_keys == (tall,)
+    sl = rt.oracle()
+    assert sl.nodes[tall].height == 1
+    # a leaf's dependents: at most its level-0 successor's chain head
+    assert len(sl.children(tall)) <= 1
+    # phases keep completing with the demoted signaler contributing
+    before = rt.ph.released()
+    rt.advance()
+    assert rt.ph.released() == before + 1
+
+
+def test_demote_then_evict_escalation():
+    rt = ElasticPhaserRuntime(4, seed=0)
+    rt.advance(step=0)
+    for step in range(1, 4):
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0}
+        evicted = rt.record_step_times(step, times)
+        rt.advance(step=step)
+        if step == 1:
+            assert 3 not in rt.demoted and not evicted
+        if step == 2:        # second strike: demoted, still live
+            assert 3 in rt.demoted and 3 in rt.live and not evicted
+            assert rt.epoch.collective.leaf_keys == (3,)
+        if step == 3:        # third strike: evicted
+            assert evicted == [3] and 3 not in rt.live
+    kinds = [e.kind for e in rt.events]
+    assert "demote" in kinds and "fail" in kinds
+    rt.verify_epoch()
+
+
+def test_recovered_straggler_is_repromoted():
+    rt = ElasticPhaserRuntime(4, seed=0)
+    for step in range(2):
+        rt.record_step_times(step, {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0})
+        rt.advance(step=step)
+    assert 3 in rt.demoted
+    rt.record_step_times(2, {w: 1.0 for w in range(4)})
+    rt.advance(step=2)
+    assert 3 not in rt.demoted
+    assert rt.epoch.collective.leaf_keys == ()
+    kinds = [e.kind for e in rt.events]
+    assert "repromote" in kinds
+    rt.verify_epoch()
+
+
+def test_skiplist_leaf_keys_override():
+    keys = list(range(8))
+    plain = SkipList.build(keys, seed=0)
+    tall = max(keys, key=lambda k: plain.nodes[k].height)
+    leafed = SkipList.build(keys, seed=0, leaf_keys={tall})
+    assert leafed.nodes[tall].height == 1
+    for k in keys:
+        if k != tall:
+            assert leafed.nodes[k].height == plain.nodes[k].height
+    leafed.check_integrity()
+
+
+# ----------------------------------------------- numeric (slow, 8 dev)
+@pytest.mark.slow
+def test_pipeline_program_matches_single_axis_under_churn_subprocess():
+    """Grow 2 -> 3 on the 2-D (2-stage x data) mesh: per-step loss and
+    params equal the single-axis xla_psum engine, per epoch."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.collective_exec import build_gradsync_program
+from repro.core.collective import PhaserCollective
+from repro.data.synthetic import make_batch
+from repro.models.registry import get_api, get_config
+from repro.optim import AdamW
+from repro.pipeline_exec import build_pipeline_program, derive_1f1b, \\
+    verify_phase_order
+from repro.runtime_elastic import ElasticPhaserRuntime
+
+cfg = get_config("smollm-135m").reduced()
+api = get_api(cfg)
+opt = AdamW(lr=3e-3, warmup=2, total_steps=12)
+S, M = 2, 2
+rt = ElasticPhaserRuntime(2, seed=0, kind="recursive_doubling")
+params = api.init_params(jax.random.key(0))
+opt_state = opt.init(params)
+p2, o2 = params, opt_state
+for step in range(8):
+    if step == 3:
+        rt.request_join()
+    pc = rt.epoch.collective
+    prog = build_pipeline_program(api, opt, pc, n_stages=S,
+                                  microbatches=M, stacked=True)
+    ref = build_gradsync_program(
+        api, opt, PhaserCollective(pc.n, "data", kind="xla_psum",
+                                   keys=pc.keys), stacked=True)
+    team = list(rt.epoch.live)
+    bs = [make_batch(cfg.vocab_size, 4, 32, seed=100 + w, step=step)
+          for w in team]
+    batch = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+    alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team])
+    params, opt_state, pm = prog.step(params, opt_state, batch, alive)
+    p2, o2, pm2 = ref.step(p2, o2, batch, alive)
+    r, r2 = prog.reduce_metrics(pm), ref.reduce_metrics(pm2)
+    np.testing.assert_allclose(float(r["loss"]), float(r2["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    rt.advance(step=step)
+    rt.verify_epoch()
+    verify_phase_order(derive_1f1b(S, M))
+for a, b in zip(jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(p2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-5)
+assert len(rt.epochs) == 2 and rt.epochs[-1].n == 3
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                          "PYTHONPATH": "src"},
+                         cwd=__import__("os").path.dirname(
+                             __import__("os").path.dirname(__file__)),
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
