@@ -1,7 +1,9 @@
 import os
 if "XLA_FLAGS" not in os.environ:
-    # collective_bench checks schedule equivalence on 8 host devices
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # collective_bench checks schedule equivalence on the host mesh;
+    # pipeline_bench needs 12 devices for the 2-stage x 6-wide
+    # interleaved-vs-wave-sync comparison
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
 
 """Benchmark runner: one table per paper claim.
 

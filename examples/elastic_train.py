@@ -26,19 +26,37 @@ instead (``pipeline_exec``, DESIGN.md §6): the stacked blocks shard
 over a stage axis, microbatches flow through the wave-synchronous 1F1B
 schedule derived from the point-to-point phaser graph, and each stage
 row syncs gradients over the data axis through the SAME per-epoch
-compiled schedule. The baseline stays the single-axis engine — the 2-D
-path must match it step for step through the identical churn — and
-every epoch boundary additionally proves the 1F1B phase ordering
-against real SIG/WAIT phaser actors (``verify_phase_order``).
+compiled schedule. ``--interleave v`` additionally runs the INTERLEAVED
+1F1B order: each device owns v non-contiguous model chunks, cutting the
+pipeline bubble fraction from (S-1)/(M+S-1) to (S-1)/(vM+S-1). The
+baseline stays the single-axis engine — the 2-D path must match it step
+for step through the identical churn, for any interleave — and every
+epoch boundary additionally proves the (interleaved) 1F1B phase
+ordering against real SIG/WAIT phaser actors (``verify_phase_order``).
 
-  PYTHONPATH=src python examples/elastic_train.py [--pipeline-stages 2]
+  PYTHONPATH=src python examples/elastic_train.py \
+      [--pipeline-stages 2] [--interleave 2]
 """
 import os
 import sys
 
-PIPE_S = (int(sys.argv[sys.argv.index("--pipeline-stages") + 1])
-          if "--pipeline-stages" in sys.argv else 1)
-PIPE_M = 2 if PIPE_S > 1 else 1               # pipeline depth (1F1B M)
+
+def _flag(name: str, default: int) -> int:
+    """Parse ``--name N`` or ``--name=N`` (must run before jax import,
+    so the XLA device-count flag below can still take effect)."""
+    for i, arg in enumerate(sys.argv[1:], start=1):
+        if arg == name:
+            if i + 1 >= len(sys.argv):
+                raise SystemExit(f"{name} requires a value")
+            return int(sys.argv[i + 1])
+        if arg.startswith(name + "="):
+            return int(arg.split("=", 1)[1])
+    return default
+
+
+PIPE_S = _flag("--pipeline-stages", 1)
+PIPE_V = _flag("--interleave", 1)
+PIPE_M = 2 if PIPE_S > 1 or PIPE_V > 1 else 1  # pipeline depth (1F1B M)
 # the peak team is 6 workers; the 2-D mesh needs a stage row per worker
 os.environ.setdefault(
     "XLA_FLAGS",
@@ -57,8 +75,8 @@ from repro.core.collective import PhaserCollective
 from repro.data.synthetic import make_batch
 from repro.models.registry import get_api, get_config
 from repro.optim import AdamW, OptState
-from repro.pipeline_exec import (build_pipeline_program, derive_1f1b,
-                                 verify_phase_order)
+from repro.pipeline_exec import (build_pipeline_program,
+                                 derive_interleaved, verify_phase_order)
 from repro.runtime_elastic import ElasticPhaserRuntime
 from repro.utils import to_device_copy
 
@@ -68,7 +86,10 @@ BATCH, SEQ = 4, 64
 assert jax.device_count() >= max(8, 6 * PIPE_S), \
     "needs the simulated host mesh (XLA_FLAGS)"
 
-cfg = get_config("smollm-135m").reduced()
+# the scan axis must split into S*v chunks (one layer per chunk is
+# enough for the reduced config)
+N_CHUNKS = PIPE_S * PIPE_V
+cfg = get_config("smollm-135m").reduced(n_layers=max(2, N_CHUNKS))
 api = get_api(cfg)
 opt = AdamW(lr=3e-3, warmup=10, total_steps=STEPS)
 
@@ -82,20 +103,26 @@ ckpt = CheckpointManager(ckpt_dir, async_write=False)
 # bucket groups synced through the double-buffered pipelined executor
 # while the backward pass still runs — bitwise-equal to eager by design,
 # proven here against the xla_psum baseline at every step.
-if PIPE_S > 1:
-    # 2-D path: 1F1B stage pipeline x per-epoch data-axis schedule
+if PIPE_S > 1 or PIPE_V > 1:
+    # 2-D path: (interleaved) 1F1B stage pipeline x per-epoch data-axis
+    # schedule; block_groups=2 splits the stacked-blocks bucket group
+    # into scan-row sub-groups so the overlap runs deeper than the 3
+    # coarse readiness classes
     programs = ProgramCache(
         lambda pc: build_pipeline_program(api, opt, pc,
                                           n_stages=PIPE_S,
+                                          interleave=PIPE_V,
                                           microbatches=PIPE_M,
                                           stacked=True,
-                                          overlap="pipelined"),
-        extra_key=("pipeline", PIPE_S, "pipelined", PIPE_M))
+                                          overlap="pipelined",
+                                          block_groups=2),
+        extra_key=("pipeline", PIPE_S, PIPE_V, "pipelined", PIPE_M, 2))
 else:
     programs = ProgramCache(
         lambda pc: build_gradsync_program(api, opt, pc, stacked=True,
-                                          overlap="pipelined"),
-        extra_key=("pipelined", 1))
+                                          overlap="pipelined",
+                                          block_groups=2),
+        extra_key=("pipelined", 1, 2))
 baseline = ProgramCache(
     lambda pc: build_gradsync_program(
         api, opt,
@@ -119,19 +146,23 @@ def worker_batches(team, step):
 
 
 def verify_pipeline_phase_order():
-    """The stage axis's own per-boundary proof: drive the 1F1B wave
-    schedule through real SIG/WAIT phaser actors (one per pipeline
-    edge) and assert the release order matches the counter oracle."""
-    if PIPE_S > 1:
-        verify_phase_order(derive_1f1b(PIPE_S, PIPE_M))
+    """The stage axis's own per-boundary proof: drive the (interleaved)
+    1F1B wave schedule through real SIG/WAIT phaser actors (one per
+    chunk-graph edge) and assert the release order matches the counter
+    oracle."""
+    if PIPE_S > 1 or PIPE_V > 1:
+        verify_phase_order(derive_interleaved(PIPE_S, PIPE_M, PIPE_V))
 
 
 losses = []
 verify_pipeline_phase_order()
 print(f"epoch 0: live={list(rt.epoch.live)} kind={rt.epoch.kind} "
       f"schedule={rt.epoch.stats()}"
-      + (f" pipeline: {PIPE_S} stages x {PIPE_M} microbatches "
-         f"(phase order verified)" if PIPE_S > 1 else ""))
+      + (f" pipeline: {PIPE_S} stages x {PIPE_V} chunks x {PIPE_M} "
+         f"microbatches, bubble "
+         f"{derive_interleaved(PIPE_S, PIPE_M, PIPE_V).bubble_fraction():.3f}"
+         f" (phase order verified)"
+         if PIPE_S > 1 or PIPE_V > 1 else ""))
 
 for step in range(STEPS):
     # ---- elastic events ---------------------------------------------------
@@ -211,8 +242,10 @@ for ep in rt.epochs:
 # one compiled program per distinct (member_set, kind), reused otherwise
 assert programs.stats()["misses"] == len(rt.epochs)
 assert losses[-1] < losses[0], "loss did not decrease through churn"
-mode = (f"on the 2-D ({PIPE_S}-stage 1F1B x data) mesh"
-        if PIPE_S > 1 else "synced on-device")
+mode = (f"on the 2-D ({PIPE_S}-stage"
+        + (f" x{PIPE_V}-interleaved" if PIPE_V > 1 else "")
+        + " 1F1B x data) mesh"
+        if PIPE_S > 1 or PIPE_V > 1 else "synced on-device")
 print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} across grow 4->6 / "
       f"shrink 6->3, {mode} by the compiled OVERLAPPED "
       f"{rt.kind} schedule "

@@ -23,12 +23,25 @@ while the backward pass is still producing the later groups. Each group
 is padded to a whole number of buckets independently, which keeps every
 group's sub-buffer a standalone ``(g_buckets, bucket_elems)`` collective
 operand with no dataflow dependency on the other groups' leaves.
+
+**Per-layer scan-slice sub-groups** (``block_groups=K``): the backward
+scan over the stacked blocks finalizes the stacked grad ROWS from the
+last layer down, so the monolithic "blocks" group can split into K
+row-range sub-groups of the scan axis — ordered last-rows-first, the
+order the backward scan emits them. Each sub-group covers the same
+stacked leaves restricted to its row slice (``group_rows``), padded to
+whole buckets like any other group, which deepens the pipelined
+executor's overlap past the 3 coarse classes. Row splitting applies
+only when every stacked-blocks leaf shares one scan length; anything
+else (and non-stacked class-1 leaves, e.g. a hybrid family's shared
+attention, whose grads accumulate across the whole backward) keeps its
+own unsplit group after the block sub-groups.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,15 +60,30 @@ _OUTPUT_NAMES = ("lm_head", "final_norm", "head", "out_norm")
 _INPUT_NAMES = ("embed", "patch_proj", "frame_proj")
 
 
+def _path_names(path: Tuple) -> List[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))).lower()
+            for p in path]
+
+
 def _leaf_class(path: Tuple) -> int:
-    names = [str(getattr(p, "key", getattr(p, "idx", p))).lower()
-             for p in path]
-    for n in names:
+    for n in _path_names(path):
         if any(tag in n for tag in _OUTPUT_NAMES):
             return 0
         if any(tag in n for tag in _INPUT_NAMES):
             return 2
     return 1
+
+
+def _rows_elems(size: int, shape: Tuple[int, ...],
+                rows: Optional[Tuple[int, int]]) -> int:
+    """Raveled elems a leaf contributes to a group: the whole leaf, or
+    its [rlo, rhi) slice of the leading scan axis. The single owner of
+    the row-slice accounting (layout derivation and flatten/unflatten
+    must agree on it)."""
+    if rows is None:
+        return size
+    rlo, rhi = rows
+    return (rhi - rlo) * (size // shape[0])
 
 
 @dataclass(frozen=True)
@@ -67,10 +95,14 @@ class BucketLayout:
     ``perm[j]`` is the index (into tree-flatten order) of the j-th leaf
     in buffer order; ``group_leaves`` are [lo, hi) ranges into that
     permuted order, one per readiness group (group 0 finalizes
-    earliest); ``group_buckets`` is each group's bucket count, and
-    ``groups`` the derived [start, stop) *bucket* ranges. The alive flag
-    occupies ``flag_index`` (flattened element index) at the tail of the
-    last group — it is an input, so it never delays a group's readiness.
+    earliest); ``group_rows[g]`` restricts group g to a [rlo, rhi) slice
+    of its stacked leaves' leading (scan) axis — ``None`` takes whole
+    leaves, and row-split groups repeat the same leaf range with
+    disjoint row slices (``block_groups``). ``group_buckets`` is each
+    group's bucket count, and ``groups`` the derived [start, stop)
+    *bucket* ranges. The alive flag occupies ``flag_index`` (flattened
+    element index) at the tail of the last group — it is an input, so it
+    never delays a group's readiness.
     """
 
     treedef: Any
@@ -82,6 +114,7 @@ class BucketLayout:
     bucket_elems: int
     perm: Tuple[int, ...] = ()
     group_leaves: Tuple[Tuple[int, int], ...] = ()
+    group_rows: Tuple[Optional[Tuple[int, int]], ...] = ()
     group_buckets: Tuple[int, ...] = ()
     flag_index: int = -1
 
@@ -92,6 +125,9 @@ class BucketLayout:
         if not self.group_leaves:
             object.__setattr__(self, "group_leaves",
                                ((0, len(self.sizes)),))
+        if not self.group_rows:
+            object.__setattr__(self, "group_rows",
+                               (None,) * len(self.group_leaves))
         if not self.group_buckets:
             object.__setattr__(self, "group_buckets", (self.n_buckets,))
         if self.flag_index < 0:
@@ -117,28 +153,40 @@ class BucketLayout:
             off += nb
         return tuple(out)
 
+    def _leaf_elems(self, i: int, rows: Optional[Tuple[int, int]]) -> int:
+        return _rows_elems(self.sizes[i], self.shapes[i], rows)
+
     def _group_payload(self, g: int) -> int:
         """Raveled elems in group g, including the flag in the last."""
+        if g == -1:
+            g = len(self.group_leaves) - 1
         lo, hi = self.group_leaves[g]
-        base = sum(self.sizes[self.perm[j]] for j in range(lo, hi))
-        last = (g == self.n_groups - 1) or (g == -1)
-        return base + (1 if last else 0)
+        rows = self.group_rows[g]
+        base = sum(self._leaf_elems(self.perm[j], rows)
+                   for j in range(lo, hi))
+        return base + (1 if g == len(self.group_leaves) - 1 else 0)
 
     # ----------------------------------------------------------- flatten
     def flatten_groups(self, tree, alive) -> List[jax.Array]:
         """tree -> per-group ``(g_buckets, bucket_elems)`` f32 buffers.
 
-        Each group's buffer depends only on its own leaves (plus the
-        alive flag in the last group), so a consumer can launch group
-        0's collective before the later groups' gradients exist.
+        Each group's buffer depends only on its own leaves — or, for a
+        row-split group, only on its rows of the stacked leaves (plus
+        the alive flag in the last group) — so a consumer can launch
+        group 0's collective before the later groups' gradients exist.
         """
         leaves = jax.tree_util.tree_leaves(tree)
         assert len(leaves) == len(self.sizes), \
             (len(leaves), len(self.sizes))
         out = []
         for g, (lo, hi) in enumerate(self.group_leaves):
-            parts = [leaves[self.perm[j]].astype(jnp.float32).reshape(-1)
-                     for j in range(lo, hi)]
+            rows = self.group_rows[g]
+            parts = []
+            for j in range(lo, hi):
+                leaf = leaves[self.perm[j]]
+                if rows is not None:
+                    leaf = leaf[rows[0]:rows[1]]
+                parts.append(leaf.astype(jnp.float32).reshape(-1))
             if g == self.n_groups - 1:
                 parts.append(jnp.asarray(alive, jnp.float32).reshape(1))
             flat = (jnp.concatenate(parts) if parts
@@ -168,23 +216,36 @@ class BucketLayout:
         """(n_buckets, bucket_elems) -> (tree, contributor count)."""
         flat = buf.reshape(-1)
         leaves: List[Any] = [None] * len(self.sizes)
+        pieces: dict = {}              # leaf idx -> [(rlo, rows array)]
         off = 0
         for g, (lo, hi) in enumerate(self.group_leaves):
+            rows = self.group_rows[g]
             pos = off
             for j in range(lo, hi):
                 i = self.perm[j]
-                size = self.sizes[i]
-                leaves[i] = (flat[pos:pos + size]
-                             .reshape(self.shapes[i])
-                             .astype(self.dtypes[i]))
+                size = self._leaf_elems(i, rows)
+                seg = flat[pos:pos + size]
+                if rows is None:
+                    leaves[i] = (seg.reshape(self.shapes[i])
+                                 .astype(self.dtypes[i]))
+                else:
+                    pieces.setdefault(i, []).append(
+                        (rows[0], seg.reshape(rows[1] - rows[0],
+                                              *self.shapes[i][1:])))
                 pos += size
             off += self.group_buckets[g] * self.bucket_elems
+        for i, ps in pieces.items():
+            stacked = jnp.concatenate(
+                [p for _, p in sorted(ps, key=lambda t: t[0])], axis=0)
+            leaves[i] = (stacked.reshape(self.shapes[i])
+                         .astype(self.dtypes[i]))
         count = flat[self.flag_index]
         return jax.tree_util.tree_unflatten(self.treedef, leaves), count
 
 
 def make_layout(tree, *, bucket_elems: int = None,
-                order: str = "reverse_topo") -> BucketLayout:
+                order: str = "reverse_topo",
+                block_groups: int = 1) -> BucketLayout:
     """Derive the bucket layout from a pytree of arrays or
     ShapeDtypeStructs (typically ``api.param_spec()``).
 
@@ -192,8 +253,13 @@ def make_layout(tree, *, bucket_elems: int = None,
     topological depth — the order backprop finalizes their gradients —
     and records the readiness groups; ``order="tree"`` keeps the raw
     tree-flatten order in a single group (the pre-overlap layout).
+    ``block_groups=K`` additionally splits the stacked-blocks group into
+    K scan-row sub-groups, last rows first — the order the backward
+    scan emits them — so the pipelined executor's overlap deepens past
+    the 3 coarse readiness classes.
     """
     assert order in ("reverse_topo", "tree"), order
+    assert block_groups >= 1, block_groups
     flat_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     assert flat_with_paths, "empty gradient tree"
     paths = [p for p, _ in flat_with_paths]
@@ -211,32 +277,68 @@ def make_layout(tree, *, bucket_elems: int = None,
 
     if order == "reverse_topo":
         classes = [_leaf_class(p) for p in paths]
-        perm = tuple(sorted(range(len(leaves)),
-                            key=lambda i: (classes[i], i)))
     else:
         classes = [1] * len(leaves)
+
+    # stacked-blocks leaves: class 1, under a "blocks" subtree, with one
+    # common scan length — the only leaves eligible for row splitting
+    stacked = [classes[i] == 1 and "blocks" in _path_names(paths[i])
+               and len(shapes[i]) >= 1 and shapes[i][0] > 0
+               for i in range(len(leaves))]
+    scan_lens = {shapes[i][0] for i in range(len(leaves)) if stacked[i]}
+    scan_len = scan_lens.pop() if len(scan_lens) == 1 else 0
+    n_row_groups = (min(block_groups, scan_len)
+                    if order == "reverse_topo" and scan_len else 1)
+    if n_row_groups == 1:
+        stacked = [False] * len(leaves)
+
+    if order == "reverse_topo":
+        # within class 1, stacked-blocks leaves sort ahead of loose
+        # class-1 leaves (whose grads accumulate across the whole
+        # backward, like inputs) — a no-op unless rows are split
+        sub = [0 if (classes[i] != 1 or stacked[i] or n_row_groups == 1)
+               else 1 for i in range(len(leaves))]
+        perm = tuple(sorted(range(len(leaves)),
+                            key=lambda i: (classes[i], sub[i], i)))
+    else:
+        sub = [0] * len(leaves)
         perm = tuple(range(len(leaves)))
 
-    # contiguous runs of one readiness class -> one bucket group
+    # contiguous runs of one (readiness class, stackedness) -> groups;
+    # the stacked-blocks run fans out into n_row_groups row slices,
+    # ordered last-rows-first (the backward scan's emission order)
     group_leaves: List[Tuple[int, int]] = []
+    group_rows: List[Optional[Tuple[int, int]]] = []
     lo = 0
+    key_of = lambda i: (classes[i], sub[i], stacked[i])
     for j in range(1, len(perm) + 1):
-        if j == len(perm) or classes[perm[j]] != classes[perm[lo]]:
+        if j < len(perm) and key_of(perm[j]) == key_of(perm[lo]):
+            continue
+        if stacked[perm[lo]] and n_row_groups > 1:
+            bounds = [round(k * scan_len / n_row_groups)
+                      for k in range(n_row_groups + 1)]
+            for k in range(n_row_groups - 1, -1, -1):
+                group_leaves.append((lo, j))
+                group_rows.append((bounds[k], bounds[k + 1]))
+        else:
             group_leaves.append((lo, j))
-            lo = j
+            group_rows.append(None)
+        lo = j
+
     group_buckets = []
     for g, (glo, ghi) in enumerate(group_leaves):
-        elems = sum(sizes[perm[j]] for j in range(glo, ghi))
+        elems = sum(_rows_elems(sizes[perm[j]], shapes[perm[j]],
+                                group_rows[g])
+                    for j in range(glo, ghi))
         if g == len(group_leaves) - 1:
             elems += 1                        # alive flag rides the tail
         group_buckets.append(max(1, -(-elems // bucket_elems)))
-    n_buckets = sum(group_buckets)
-    flag_index = ((n_buckets - group_buckets[-1]) * bucket_elems
-                  + sum(sizes[perm[j]]
-                        for j in range(*group_leaves[-1])))
+    # flag_index is derived in __post_init__ (tail of the last group) —
+    # one owner for the flag-position invariant
     return BucketLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                        sizes=sizes, payload=payload, n_buckets=n_buckets,
+                        sizes=sizes, payload=payload,
+                        n_buckets=sum(group_buckets),
                         bucket_elems=bucket_elems, perm=perm,
                         group_leaves=tuple(group_leaves),
-                        group_buckets=tuple(group_buckets),
-                        flag_index=flag_index)
+                        group_rows=tuple(group_rows),
+                        group_buckets=tuple(group_buckets))

@@ -50,6 +50,27 @@ from .executor import execute_flat, execute_flat_pipelined
 OVERLAP_MODES = ("eager", "pipelined")
 
 
+def reduce_worker_metrics(pm: Dict[str, jax.Array],
+                          meta: Dict[str, int]) -> Dict[str, Any]:
+    """Per-worker (n,) metric rows -> scalars: masked mean for the
+    pre-sync losses, the sum for the alive count, any rank's copy for
+    post-sync values (replicated by construction), plus the program's
+    static meta. Shared by every compiled program flavour so the
+    reported metrics can never drift between the single-axis and
+    pipeline paths."""
+    n_alive = jnp.maximum(pm["alive"].sum(), 1.0)
+    out = {}
+    for k, v in pm.items():
+        if k in ("loss", "aux"):
+            out[k] = v.sum() / n_alive
+        elif k == "alive":
+            out[k] = v.sum()
+        else:
+            out[k] = v[0]
+    out.update({k: jnp.asarray(v, jnp.float32) for k, v in meta.items()})
+    return out
+
+
 def mesh_for(pc: PhaserCollective,
              devices: Optional[Sequence] = None) -> Mesh:
     devices = list(devices) if devices is not None else jax.devices()
@@ -95,21 +116,7 @@ class GradSyncProgram:
         return self.jitted(params, opt_state, batch, alive)
 
     def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
-        """Per-worker (n,) metric rows -> scalars: masked mean for the
-        pre-sync losses, any rank's copy for post-sync values (they are
-        replicated by construction), plus the schedule's static meta."""
-        n_alive = jnp.maximum(pm["alive"].sum(), 1.0)
-        out = {}
-        for k, v in pm.items():
-            if k in ("loss", "aux"):
-                out[k] = v.sum() / n_alive
-            elif k == "alive":
-                out[k] = v.sum()
-            else:
-                out[k] = v[0]
-        out.update({k: jnp.asarray(v, jnp.float32)
-                    for k, v in self.meta.items()})
-        return out
+        return reduce_worker_metrics(pm, self.meta)
 
 
 def build_gradsync_program(api, opt, pc: PhaserCollective, *,
@@ -121,7 +128,8 @@ def build_gradsync_program(api, opt, pc: PhaserCollective, *,
                            donate: bool = False,
                            bucket_elems: Optional[int] = None,
                            overlap: str = "eager",
-                           microbatches: int = 1
+                           microbatches: int = 1,
+                           block_groups: Optional[int] = None
                            ) -> GradSyncProgram:
     """Compile the epoch's schedule into a shard_map train step.
 
@@ -132,13 +140,19 @@ def build_gradsync_program(api, opt, pc: PhaserCollective, *,
     ``overlap="pipelined"`` runs the sync per readiness group through
     the double-buffered executor; ``microbatches > 1`` unrolls the
     grad-accumulation loop with one bucket stream per microbatch (each
-    microbatch's sync overlaps the next microbatch's backward). The two
-    overlap modes are bitwise-equal at fixed ``microbatches``.
+    microbatch's sync overlaps the next microbatch's backward);
+    ``block_groups=K`` splits the stacked-blocks group into K scan-row
+    sub-groups (last rows first — the backward scan's emission order) so
+    the pipelined overlap deepens past the 3 coarse readiness classes.
+    The overlap modes are bitwise-equal at fixed ``microbatches`` for
+    any grouping: grouping only partitions the buffer, never the
+    per-element combine sequence.
     """
     assert overlap in OVERLAP_MODES, overlap
     assert microbatches >= 1, microbatches
     mesh = mesh_for(pc, devices)
-    layout = make_layout(api.param_spec(), bucket_elems=bucket_elems)
+    layout = make_layout(api.param_spec(), bucket_elems=bucket_elems,
+                         block_groups=block_groups or 1)
     axis = pc.axis_name
 
     def sync(grads, flag):

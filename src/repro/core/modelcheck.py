@@ -12,7 +12,7 @@ yields complete coverage of each handler's interleavings at a fraction of
 the joint state space — the same engineering the paper used to get SPIN to
 complete.
 
-Checked properties (DESIGN.md §10):
+Checked properties (DESIGN.md §2):
   P1 structure   — level-0 chain is exactly the live membership, sorted;
                    every lane l links exactly the keys with height > l.
   P2 conservation— no signal lost or double-counted (head over-collection

@@ -111,6 +111,22 @@ class P2PPhaser:
         self.signaled[rank] = 0
         self.run()
 
+    def demote(self, rank: int) -> None:
+        """Straggler demotion on a p2p phaser: pin ``rank`` to a leaf
+        (height 1) in whichever lists its mode materializes it — it
+        keeps signaling/waiting, but loses every skip-list dependent.
+        The mode-filtered oracle (``verify_topology``) follows because
+        it builds with ``leaf_keys = demoted``."""
+        self.run()
+        self.ph.demote(rank)
+        self.run()
+
+    def repromote(self, rank: int) -> None:
+        """Undo a demotion: restore the deterministic drawn height."""
+        self.run()
+        self.ph.repromote(rank)
+        self.run()
+
     def run(self) -> int:
         return self.ph.run(self._make_scheduler())
 
@@ -208,6 +224,16 @@ class PipelinePhaserGraph:
 
     def wait(self, edge: Edge, phase: int) -> bool:
         return self.phasers[edge].wait(1, phase)
+
+    def demote(self, edge: Edge, rank: int) -> None:
+        """Mid-program straggler demotion of one edge phaser's
+        participant (0 = the SIG producer, 1 = the WAIT consumer):
+        release semantics are unchanged — only the skip-list topology
+        degrades to the leaf-pinned oracle."""
+        self.phasers[tuple(edge)].demote(rank)
+
+    def repromote(self, edge: Edge, rank: int) -> None:
+        self.phasers[tuple(edge)].repromote(rank)
 
     def run_program(self, program: Iterable[Op]) -> List[ReleaseEvent]:
         """Drive an instruction stream through the real protocol actors.

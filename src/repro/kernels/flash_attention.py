@@ -5,7 +5,7 @@ Blockwise causal GQA attention with online softmax. TPU adaptation: the
 the KV loop is the innermost grid dim with running (acc, m, l) carried in
 VMEM scratch across its iterations (the sequential last grid dim is the
 TPU-idiomatic replacement for the GPU kernel's warp-level softmax
-reductions — DESIGN.md §8).
+reductions).
 
 Layout: q (B, H, Sq, hd); k/v (B, Kh, Sk, hd); GQA mapping h -> h*Kh//H.
 """

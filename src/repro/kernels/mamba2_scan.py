@@ -1,7 +1,7 @@
 """Mamba2 chunked-SSD Pallas TPU kernel.
 
 The GPU reference implements the selective scan with warp-level shuffles;
-the TPU-native formulation (DESIGN.md §2/§7) is chunked SSD: the chunk is
+the TPU-native formulation (DESIGN.md §2) is chunked SSD: the chunk is
 a VMEM tile, intra-chunk work is dense (c x c) MXU matmuls, and the
 inter-chunk state carry (h: P x N per head) rides VMEM scratch across the
 sequential chunk grid dim.

@@ -32,6 +32,10 @@ instead: the stacked blocks shard over a stage axis
 1F1B schedule derived from the point-to-point phaser graph, and each
 stage row syncs gradients over the data axis through the epoch's
 collective schedule — churn re-derives both at the same boundary.
+``--interleave v`` runs the INTERLEAVED 1F1B order: each device owns v
+non-contiguous model chunks, cutting the pipeline bubble fraction from
+(S-1)/(M+S-1) to (S-1)/(vM+S-1); requires the scan length to divide by
+S*v and ``--microbatches`` to divide by S.
 """
 from __future__ import annotations
 
@@ -79,6 +83,9 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override the config's layer count (e.g. to "
+                         "make the scan axis divide stages*interleave)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -110,6 +117,13 @@ def main(argv=None):
                          "needs workers*stages devices and "
                          "--microbatches as the pipeline depth "
                          "(device path only)")
+    ap.add_argument("--interleave", type=int, default=1,
+                    help="virtual stages per device: run the "
+                         "interleaved 1F1B schedule (v non-contiguous "
+                         "model chunks per device, bubble fraction "
+                         "(S-1)/(vM+S-1)); scan length must divide by "
+                         "stages*interleave and --microbatches by "
+                         "stages")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -124,7 +138,11 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        cfg = cfg.reduced(**({"n_layers": args.layers}
+                             if args.layers else {}))
+    elif args.layers:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
     api = get_api(cfg)
     opt = AdamW(lr=args.lr, warmup=min(20, args.steps // 5),
                 total_steps=args.steps)
@@ -133,7 +151,8 @@ def main(argv=None):
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     runtime = events = None
     if (args.elastic is not None or args.device_collective
-            or args.overlap_sync or args.pipeline_stages > 1):
+            or args.overlap_sync or args.pipeline_stages > 1
+            or args.interleave > 1):
         # --device-collective/--overlap-sync/--pipeline-stages without
         # churn still need the runtime: the engine's programs are keyed
         # by its epochs (a static team is just a single epoch)
@@ -152,9 +171,11 @@ def main(argv=None):
                      device_collective=(True if args.device_collective
                                         or args.overlap_sync
                                         or args.pipeline_stages > 1
+                                        or args.interleave > 1
                                         else None),
                      overlap_sync=args.overlap_sync,
-                     pipeline_stages=args.pipeline_stages)
+                     pipeline_stages=args.pipeline_stages,
+                     interleave=args.interleave)
     try:
         loop.run(args.steps, resume=args.resume)
     except ValueError as e:

@@ -2,19 +2,22 @@
 (DESIGN.md §6).
 
 The point-to-point half of the paper's claim, lowered to the data plane:
-pipeline stages register SIG toward their successor and WAIT on their
-predecessor (``core/p2p.py``), the wave-synchronous 1F1B schedule is
-derived from — and verified against — that phaser graph's phase
-ordering (``schedule``), and ``stage_program`` compiles it into one
-``shard_map`` train step over a 2-D (stage, data) mesh where stage-axis
-``lax.ppermute`` activation/cotangent handoffs interleave with the
-elastic epoch's collective gradient-sync rounds on the data axis.
+pipeline chunks register SIG toward their successor and WAIT on their
+predecessor (``core/p2p.py``), the wave-synchronous 1F1B schedule — and
+its interleaved virtual-stage generalization (``interleave = v`` chunks
+per device, bubble fraction (S-1)/(vM+S-1)) — is derived from and
+verified against that phaser graph's phase ordering (``schedule``), and
+``stage_program`` compiles it into one ``shard_map`` train step over a
+2-D (stage, data) mesh where stage-axis ``lax.ppermute``
+activation/cotangent handoffs interleave with the elastic epoch's
+collective gradient-sync rounds on the data axis.
 """
-from .schedule import (PipelineSchedule, derive_1f1b, pipeline_edges,
-                       verify_phase_order)
+from .schedule import (PipelineSchedule, derive_1f1b, derive_interleaved,
+                       pipeline_edges, verify_phase_order)
 from .stage_program import (STAGE_AXIS, PipelineProgram,
                             build_pipeline_program, stage_partition)
 
-__all__ = ["PipelineSchedule", "derive_1f1b", "pipeline_edges",
-           "verify_phase_order", "STAGE_AXIS", "PipelineProgram",
-           "build_pipeline_program", "stage_partition"]
+__all__ = ["PipelineSchedule", "derive_1f1b", "derive_interleaved",
+           "pipeline_edges", "verify_phase_order", "STAGE_AXIS",
+           "PipelineProgram", "build_pipeline_program",
+           "stage_partition"]

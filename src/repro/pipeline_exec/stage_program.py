@@ -1,34 +1,56 @@
 """Compiled pipeline-parallel train programs on the 2-D (stage, data) mesh.
 
 ``build_pipeline_program`` lowers the point-to-point dependency graph of
-``core/p2p.py`` — stages SIG toward their successor, WAIT on their
+``core/p2p.py`` — chunks SIG toward their successor, WAIT on their
 predecessor — into one ``shard_map`` train step over a 2-D mesh:
 
-* the **stage axis** partitions the stacked-blocks scan (stage s owns
-  scan slice ``stage_map[s]``; embed/norms/head/shared replicated);
-  activations and cotangents move between neighbouring stages as
-  ``lax.ppermute`` rounds — one per schedule wave, emitted in the
-  wave-synchronous 1F1B order ``derive_1f1b`` derives from the phase
-  ordering (``schedule.py``). Each backward wave recomputes its stage
-  slice under ``jax.vjp`` from the stored incoming activation (the 1F1B
-  in-flight set), so cross-stage dataflow is exactly the phaser graph's
-  signal/wait structure.
+* the **stage axis** partitions the stacked-blocks scan. With
+  ``interleave = v`` each device owns v NON-contiguous chunks of the
+  scan (device s holds chunks s, s+S, …, the looping placement), so
+  consecutive chunks sit on neighbouring devices and every wave's
+  activation/cotangent handoff stays a single ``lax.ppermute`` hop —
+  ring perms (±1 mod S) carry the chunk-group wrap, the open chains of
+  the v=1 case are unchanged. Waves are emitted in the interleaved 1F1B
+  order ``derive_interleaved`` derives from the phase ordering
+  (``schedule.py``); the per-wave (chunk group, microbatch) item is
+  data (``wave − axis_index`` arithmetic), not control flow, and each
+  backward wave recomputes its chunk slice under ``jax.vjp`` from the
+  parked incoming activation. Parked activations live in PER-CHUNK ring
+  buffers of ``sched.ring_slots`` slots — live microbatch indices per
+  chunk are consecutive (schedule ``check()``), so modular indexing is
+  collision-free and the program holds O(ring) activations per chunk
+  instead of GPipe's O(M).
 * the **data axis** runs the elastic epoch's collective schedule
   unchanged: the stage-local grads flatten into the engine's bucket
-  layout (derived from the LOCAL param slice) and sync through
-  ``execute_flat`` / ``execute_flat_pipelined`` — the same ppermute
-  rounds, fused Pallas combine, alive-flag count and overlap config as
-  the single-axis engine, now per stage row. Replicated-parameter grads
-  (embed/head/shared) are psum'ed over the stage axis first, and the
-  AdamW clip norm is computed globally across stages, so the update is
-  mathematically identical to the single-axis step (asserted to f32
-  tolerance against the ``xla_psum`` baseline program in
-  ``examples/elastic_train.py`` through grow/shrink churn).
+  layout (derived from the LOCAL param slice — v·per scan rows) and
+  sync through ``execute_flat`` / ``execute_flat_pipelined`` — the same
+  ppermute rounds, fused Pallas combine, alive-flag count and overlap
+  config as the single-axis engine, now per stage row; with
+  ``overlap="pipelined"`` the extra backward waves of the interleaved
+  schedule are exactly where the early bucket groups' gradsync rounds
+  overlap. Replicated-parameter grads (embed/head/shared) are psum'ed
+  over the stage axis first, and the AdamW clip norm is computed
+  globally across stages, so the update is mathematically identical to
+  the single-axis step (asserted to f32 tolerance against the
+  ``xla_psum`` baseline program in ``examples/elastic_train.py``
+  through grow/shrink churn, for any interleave).
+
+Parameters stay in the CANONICAL layer order at the program surface:
+with v > 1 the step permutes the stacked-blocks rows to the
+device-major chunk layout inside the jitted function (one static
+gather) and un-permutes the updated params on the way out, so
+checkpoints, the optimizer state and the single-axis equality checks
+never see the interleaved placement. That buys surface simplicity at
+the cost of re-permuting blocks + both Adam moments each step — trivial
+on the host mesh, but on real hardware a persistent device-major
+carried state (permuting only at program bind / checkpoint / readout
+boundaries) would remove the per-step reshuffle; see ROADMAP.
 
 SPMD uniformity: every wave is kind-uniform (all active stages run the
 same instruction), so warmup/cooldown idleness is masked compute — the
-same wall-clock shape as a real pipeline bubble — and the per-stage
-microbatch index is data (``wave - axis_index``), not control flow.
+same wall-clock shape as a real pipeline bubble. Interleaving makes
+each wave 1/v of a stage, cutting the fill/drain cost to 2(S-1) thin
+waves (bubble fraction (S-1)/(vM+S-1), down from (S-1)/(M+S-1)).
 """
 from __future__ import annotations
 
@@ -37,36 +59,41 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..collective_exec.buckets import make_layout
 from ..collective_exec.executor import execute_flat, execute_flat_pipelined
-from ..collective_exec.program import OVERLAP_MODES
+from ..collective_exec.program import OVERLAP_MODES, reduce_worker_metrics
 from ..core.collective import PhaserCollective
 from ..optim import OptState
 from ..sharding.policies import stage_data_mesh
-from .schedule import PipelineSchedule, derive_1f1b
+from .schedule import PipelineSchedule, derive_interleaved
 
 STAGE_AXIS = "stage"
 
 
-def stage_partition(api, n_stages: int) -> Tuple[Tuple[int, int], ...]:
-    """The stage map: contiguous [lo, hi) slices of the stacked-blocks
-    scan axis, one per stage. The scan length (layers, or groups for the
-    grouped families) must divide evenly."""
-    assert n_stages >= 1, n_stages
+def stage_partition(api, n_stages: int,
+                    interleave: int = 1) -> Tuple[Tuple[int, int], ...]:
+    """The chunk map: contiguous [lo, hi) slices of the stacked-blocks
+    scan axis, one per CHUNK (``n_stages * interleave`` virtual stages;
+    chunk c belongs to device ``c % n_stages``). The scan length
+    (layers, or groups for the grouped families) must divide evenly."""
+    assert n_stages >= 1 and interleave >= 1, (n_stages, interleave)
     assert api.pipeline_supported(), \
         f"pipeline: family {api.cfg.family!r} keeps the single-axis path"
+    n_chunks = n_stages * interleave
     spec = api.param_spec()
     lens = {l.shape[0] for l in jax.tree_util.tree_leaves(spec["blocks"])}
     assert len(lens) == 1, f"ragged scan axis: {lens}"
     scan_len = lens.pop()
-    assert scan_len % n_stages == 0, \
-        f"scan length {scan_len} not divisible by {n_stages} stages"
-    per = scan_len // n_stages
-    return tuple((s * per, (s + 1) * per) for s in range(n_stages))
+    assert scan_len % n_chunks == 0, \
+        f"scan length {scan_len} not divisible by {n_chunks} chunks " \
+        f"({n_stages} stages x {interleave} interleave)"
+    per = scan_len // n_chunks
+    return tuple((c * per, (c + 1) * per) for c in range(n_chunks))
 
 
 def _spec_tree(param_spec, leaf_spec: P, blocks_spec: P):
@@ -81,14 +108,15 @@ def _spec_tree(param_spec, leaf_spec: P, blocks_spec: P):
 class PipelineProgram:
     """One epoch's compiled 2-D train step. Mirrors ``GradSyncProgram``'s
     surface (``step``/``reduce_metrics``) so the train loop and example
-    drive both interchangeably; ``key`` additionally carries the stage
-    map and pipeline config."""
+    drive both interchangeably; ``key`` additionally carries the chunk
+    map and pipeline config (interleave included)."""
 
     key: tuple
     pc: PhaserCollective
     mesh: Mesh
     sched: PipelineSchedule
     stage_map: Tuple[Tuple[int, int], ...]
+    interleave: int
     layout: Any
     jitted: Callable
     stacked: bool
@@ -102,7 +130,7 @@ class PipelineProgram:
 
     @property
     def n_stages(self) -> int:
-        return len(self.stage_map)
+        return len(self.stage_map) // self.interleave
 
     def _commit(self, tree, shardings):
         """Re-commit carried state onto this program's 2-D mesh (stage
@@ -120,22 +148,12 @@ class PipelineProgram:
         return self.jitted(params, opt_state, batch, alive)
 
     def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
-        n_alive = jnp.maximum(pm["alive"].sum(), 1.0)
-        out = {}
-        for k, v in pm.items():
-            if k in ("loss", "aux"):
-                out[k] = v.sum() / n_alive
-            elif k == "alive":
-                out[k] = v.sum()
-            else:
-                out[k] = v[0]
-        out.update({k: jnp.asarray(v, jnp.float32)
-                    for k, v in self.meta.items()})
-        return out
+        return reduce_worker_metrics(pm, self.meta)
 
 
 def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                            n_stages: int,
+                           interleave: int = 1,
                            devices: Optional[Sequence] = None,
                            microbatches: int = 1,
                            stacked: bool = False,
@@ -143,35 +161,53 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                            fused: bool = True,
                            interpret: Optional[bool] = None,
                            overlap: str = "eager",
-                           bucket_elems: Optional[int] = None
+                           bucket_elems: Optional[int] = None,
+                           block_groups: Optional[int] = None
                            ) -> PipelineProgram:
-    """Compile the epoch's 2-D program: the 1F1B stage pipeline on the
-    stage axis interleaved with the epoch's gradient-sync schedule on
-    the data axis. ``microbatches`` is the pipeline depth M (the batch
-    splits along its leading dim); ``overlap`` selects the data-axis
-    executor exactly as in ``build_gradsync_program``."""
+    """Compile the epoch's 2-D program: the (interleaved) 1F1B stage
+    pipeline on the stage axis interleaved with the epoch's
+    gradient-sync schedule on the data axis. ``microbatches`` is the
+    pipeline depth M (the batch splits along its leading dim);
+    ``interleave`` is the virtual-stage count v per device (M % S == 0
+    required for v > 1); ``overlap``/``block_groups`` select the
+    data-axis executor exactly as in ``build_gradsync_program``."""
     assert overlap in OVERLAP_MODES, overlap
     assert microbatches >= 1, microbatches
-    S, M = n_stages, microbatches
+    S, M, v = n_stages, microbatches, interleave
     mesh = stage_data_mesh(S, pc.n, data_axis=pc.axis_name,
                            stage_axis=STAGE_AXIS, devices=devices)
-    stage_map = stage_partition(api, S)
-    sched = derive_1f1b(S, M)
+    stage_map = stage_partition(api, S, v)
+    sched = derive_interleaved(S, M, v)
     axis = pc.axis_name
     per = stage_map[0][1] - stage_map[0][0]
+    Vc = S * v
 
     spec = api.param_spec()
     local_spec = dict(spec)
     local_spec["blocks"] = jax.tree_util.tree_map(
-        lambda l: jax.ShapeDtypeStruct((per, *l.shape[1:]), l.dtype),
+        lambda l: jax.ShapeDtypeStruct((v * per, *l.shape[1:]), l.dtype),
         spec["blocks"])
-    layout = make_layout(local_spec, bucket_elems=bucket_elems)
+    layout = make_layout(local_spec, bucket_elems=bucket_elems,
+                         block_groups=block_groups or 1)
 
     param_ps = _spec_tree(spec, P(), P(STAGE_AXIS))
     opt_ps = OptState(step=P(), mu=param_ps, nu=param_ps)
-    fperm = [(s, s + 1) for s in range(S - 1)]
-    bperm = [(s, s - 1) for s in range(1, S)]
+    if v > 1:
+        # ring perms: the chunk-group wrap (chunk jS+S-1 -> (j+1)S)
+        # lands on device 0, so every wave's handoff is one hop mod S
+        fperm = [(s, (s + 1) % S) for s in range(S)]
+        bperm = [(s, (s - 1) % S) for s in range(S)]
+        # canonical scan rows -> device-major chunk layout: device s's
+        # contiguous stage shard holds its v chunks in group order
+        chunk_perm = np.concatenate(
+            [np.arange(per) + (j * S + s) * per
+             for s in range(S) for j in range(v)])
+        chunk_inv = np.argsort(chunk_perm)
+    else:
+        fperm = [(s, s + 1) for s in range(S - 1)]
+        bperm = [(s, s - 1) for s in range(1, S)]
     inv_M = 1.0 / M
+    R = sched.ring_slots
 
     def worker(params, opt_state, batch, alive):
         if stacked:
@@ -180,35 +216,57 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
         sidx = lax.axis_index(STAGE_AXIS)
         is_first = sidx == 0
         is_last = sidx == S - 1
-        blocks = params["blocks"]                    # local (per, ...) slice
-        io = {k: v for k, v in params.items() if k != "blocks"}
+        blocks = params["blocks"]               # local (v*per, ...) slice
+        io = {k: v_ for k, v_ in params.items() if k != "blocks"}
         tok_s, tgt_s = (batch[k].reshape(M, batch[k].shape[0] // M,
                                          *batch[k].shape[1:])
                         for k in ("tokens", "targets"))
 
-        def local_fwd(blocks, io, recv, tok):
-            # the stage input: the embedded microbatch at stage 0, the
-            # ppermuted predecessor activation elsewhere (the `where`
-            # also routes the embed gradient to stage 0 only)
-            h0 = api.embed_fn(io, tok)
-            h_in = jnp.where(is_first, h0, recv.astype(h0.dtype))
-            return api.stage_fn(io, blocks, h_in, remat=remat)
+        def chunk_blocks(blocks, j):
+            if v == 1:
+                return blocks
+            return jax.tree_util.tree_map(
+                lambda p: lax.dynamic_slice_in_dim(p, j * per, per, 0),
+                blocks)
 
-        def local_obj(blocks, io, recv, tok, tgt):
-            h_out, aux = local_fwd(blocks, io, recv, tok)
-            logits = api.head_fn(io, h_out)
-            xent = api.loss_from_logits(logits, tgt)
+        def local_fwd(blocks, io, recv, tok, j, want_embed):
+            # the chunk input: the embedded microbatch at chunk 0, the
+            # ppermuted predecessor activation elsewhere (the `where`
+            # also routes the embed gradient to chunk 0 only).
+            # ``want_embed`` is STATIC per wave: with v > 1, only the
+            # waves where device 0's item is chunk group 0 can consume
+            # the embedding — the rest skip it (and its vjp) entirely,
+            # which is what keeps the thinner interleaved waves cheap.
+            ht = recv.astype(zero_h.dtype)
+            if want_embed:
+                h0 = api.embed_fn(io, tok)
+                use_embed = is_first if v == 1 else is_first & (j == 0)
+                ht = jnp.where(use_embed, h0, recv.astype(h0.dtype))
+            return api.stage_fn(io, chunk_blocks(blocks, j), ht,
+                                remat=remat)
+
+        def local_obj(blocks, io, recv, tok, tgt, j, want_embed,
+                      want_head):
+            h_out, aux = local_fwd(blocks, io, recv, tok, j, want_embed)
+            # ``want_head`` is STATIC per wave: only the waves where
+            # device S-1's item is the LAST chunk read the loss head —
+            # elsewhere the xent cotangent is zero anyway, so skipping
+            # the head (and its vjp) computes the identical gradients
+            if want_head:
+                logits = api.head_fn(io, h_out)
+                xent = api.loss_from_logits(logits, tgt)
+            else:
+                xent = jnp.zeros((), jnp.float32)
             return h_out, xent, aux
 
         zero_h = jnp.zeros_like(api.embed_fn(io, tok_s[0]))
-        # parked-activation RING: the wave-synchronous 1F1B in-flight
-        # bound is min(M, 2(S-1-s)+1) per stage (schedule.check()), so
-        # the stage-0 bound R suffices everywhere and live microbatch
-        # indices are consecutive — modular indexing is collision-free.
-        # This is what makes the compiled program hold O(S) activations
-        # instead of GPipe's O(M).
-        R = min(M, 2 * (S - 1) + 1)
-        acts = jnp.zeros((R, *zero_h.shape), zero_h.dtype)
+        # parked-activation RINGS, one per chunk group: live microbatch
+        # indices per chunk are consecutive and capped by the schedule's
+        # per-chunk in-flight bound (check()), so ``ring_slots`` slots
+        # with modular indexing are collision-free. This is what keeps
+        # the compiled program at O(ring) activations per chunk instead
+        # of GPipe's O(M).
+        acts = jnp.zeros((v, R, *zero_h.shape), zero_h.dtype)
         fwd_reg = zero_h
         bwd_reg = zero_h
         f32z = lambda t: jax.tree_util.tree_map(
@@ -222,28 +280,48 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
             if kind == "F":
                 y = (lax.ppermute(fwd_reg, STAGE_AXIS, perm=fperm)
                      if S > 1 else fwd_reg)
-                m_i = w - sidx
-                active = (m_i >= 0) & (m_i < M)
-                mc = jnp.clip(m_i, 0, M - 1)
-                h_out, _ = local_fwd(blocks, io, y, tok_s[mc])
+                r = w - sidx
+                active = (r >= 0) & (r < v * M)
+                rc = jnp.clip(r, 0, v * M - 1)
+                j = (rc // S) % v
+                m = (rc // Vc) * S + rc % S
+                # static: only device 0 consumes the embedding, and
+                # only in the waves where ITS item is chunk group 0
+                we = (0 <= w < v * M) and (w // S) % v == 0
+                h_out, _ = local_fwd(blocks, io, y, tok_s[m], j, we)
                 # park the incoming activation for the backward
-                # recompute (the wave-synchronous 1F1B in-flight set)
-                mcr = mc % R
-                acts = acts.at[mcr].set(jnp.where(active, y, acts[mcr]))
+                # recompute (this chunk's 1F1B in-flight set)
+                mr = m % R
+                acts = acts.at[j, mr].set(jnp.where(active, y,
+                                                    acts[j, mr]))
                 fwd_reg = jnp.where(active, h_out,
                                     jnp.zeros_like(h_out))
             else:
                 cot = (lax.ppermute(bwd_reg, STAGE_AXIS, perm=bperm)
                        if S > 1 else bwd_reg)
-                m_i = w - (S - 1 - sidx)
-                active = (m_i >= 0) & (m_i < M)
-                mc = jnp.clip(m_i, 0, M - 1)
-                primals, pull = jax.vjp(local_obj, blocks, io,
-                                        acts[mc % R], tok_s[mc],
-                                        tgt_s[mc])
+                r = w - (S - 1 - sidx)
+                active = (r >= 0) & (r < v * M)
+                rc = jnp.clip(r, 0, v * M - 1)
+                j = (v - 1) - (rc // S) % v
+                m = (rc // Vc) * S + rc % S
+                last_chunk = is_last if v == 1 else is_last & (j == v - 1)
+                # static per wave: device 0's backward touches the
+                # embed grad only when its item is chunk group 0;
+                # device S-1 reads the loss head only when its item is
+                # the LAST chunk (w is device 0's / S-1's local index)
+                r0 = w - (S - 1)
+                we = (0 <= r0 < v * M) and \
+                    (v - 1) - (r0 // S) % v == 0
+                wh = (0 <= w < v * M) and (w // S) % v == 0
+                obj = lambda b_, io_, recv, tok, tgt: \
+                    local_obj(b_, io_, recv, tok, tgt, j, we, wh)
+                primals, pull = jax.vjp(obj, blocks, io,
+                                        acts[j, m % R], tok_s[m],
+                                        tgt_s[m])
                 _, xent_p, aux_p = primals
-                cot_h = jnp.where(is_last, jnp.zeros_like(cot), cot)
-                cot_x = jnp.where(is_last, inv_M, 0.0).astype(xent_p.dtype)
+                cot_h = jnp.where(last_chunk, jnp.zeros_like(cot), cot)
+                cot_x = jnp.where(last_chunk, inv_M,
+                                  0.0).astype(xent_p.dtype)
                 cot_a = jnp.asarray(0.01 * inv_M, aux_p.dtype)
                 gb, gio, g_recv, _, _ = pull(
                     (cot_h.astype(zero_h.dtype), cot_x, cot_a))
@@ -252,14 +330,14 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                 g_blocks = jax.tree_util.tree_map(add, g_blocks, gb)
                 g_io = jax.tree_util.tree_map(add, g_io, gio)
                 loss_acc = loss_acc + jnp.where(
-                    active & is_last, xent_p.astype(jnp.float32), 0.0)
+                    active & last_chunk, xent_p.astype(jnp.float32), 0.0)
                 aux_acc = aux_acc + jnp.where(
                     active, aux_p.astype(jnp.float32), 0.0)
                 bwd_reg = jnp.where(active, g_recv,
                                     jnp.zeros_like(g_recv))
 
         # cross-stage reductions: the loss materializes at the last
-        # stage, replicated-param grads sum their per-stage contributions
+        # chunk, replicated-param grads sum their per-stage contributions
         loss = lax.psum(loss_acc, STAGE_AXIS) * inv_M
         aux = lax.psum(aux_acc, STAGE_AXIS) * inv_M
         g_io = jax.tree_util.tree_map(
@@ -290,34 +368,63 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
         sq = lambda t: sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                            for l in jax.tree_util.tree_leaves(t))
         gnorm = jnp.sqrt(lax.psum(sq(grads["blocks"]), STAGE_AXIS)
-                         + sq({k: v for k, v in grads.items()
+                         + sq({k: g for k, g in grads.items()
                                if k != "blocks"}))
         new_p, new_o, om = opt.update(grads, opt_state, params,
                                       gnorm=gnorm)
         pm = {"loss": loss * a, "aux": aux * a, "alive": a, **om}
-        pm = {k: jnp.asarray(v, jnp.float32).reshape(1)
-              for k, v in pm.items()}
+        pm = {k: jnp.asarray(val, jnp.float32).reshape(1)
+              for k, val in pm.items()}
         return new_p, new_o, pm
 
     sm = shard_map(worker, mesh=mesh,
                    in_specs=(param_ps, opt_ps, P(axis), P(axis)),
                    out_specs=(param_ps, opt_ps, P(axis)),
                    check_rep=False)
-    jitted = jax.jit(sm)
+
+    if v > 1:
+        # the program surface keeps the CANONICAL layer order: permute
+        # the stacked rows to the device-major chunk layout going in,
+        # un-permute the updated params coming out (static gathers
+        # inside the same jit — checkpoints/optimizer state/equality
+        # checks never see the interleaved placement)
+        to_dev = jnp.asarray(chunk_perm)
+        to_can = jnp.asarray(chunk_inv)
+
+        def permute_blocks(tree, idx):
+            blk = jax.tree_util.tree_map(
+                lambda p: jnp.take(p, idx, axis=0), tree["blocks"])
+            return {**tree, "blocks": blk}
+
+        def permute_opt(o, idx):
+            return OptState(step=o.step, mu=permute_blocks(o.mu, idx),
+                            nu=permute_blocks(o.nu, idx))
+
+        def step_fn(params, opt_state, batch, alive):
+            new_p, new_o, pm = sm(permute_blocks(params, to_dev),
+                                  permute_opt(opt_state, to_dev),
+                                  batch, alive)
+            return (permute_blocks(new_p, to_can),
+                    permute_opt(new_o, to_can), pm)
+    else:
+        step_fn = sm
+    jitted = jax.jit(step_fn)
     named = lambda ps: NamedSharding(mesh, ps)
     is_p = lambda x: isinstance(x, P)
     param_sh = jax.tree_util.tree_map(named, param_ps, is_leaf=is_p)
     opt_sh = OptState(step=named(P()), mu=param_sh, nu=param_sh)
     st = pc.stats()
     meta = {"team": pc.n, "stages": S, "microbatches": M,
+            "interleave": v,
             "pipeline_waves": sched.n_waves,
+            "ring_slots": R,
             "sync_rounds": st["rounds"],
             "sync_messages": st["messages"],
             "overlap": int(overlap == "pipelined"),
             "bucket_groups": layout.n_groups}
     key = (pc.keys, pc.kind, pc.seed, pc.p, "pipeline", stage_map,
-           overlap, M)
+           overlap, M, v)
     return PipelineProgram(key=key, pc=pc, mesh=mesh, sched=sched,
-                           stage_map=stage_map, layout=layout,
-                           jitted=jitted, stacked=stacked,
+                           stage_map=stage_map, interleave=v,
+                           layout=layout, jitted=jitted, stacked=stacked,
                            param_sh=param_sh, opt_sh=opt_sh, meta=meta)

@@ -16,14 +16,18 @@ the same epoch mechanism as elastic training:
 
 Admission is **bulk**: all free slots are filled at the same phase
 boundary, grouped by prompt length **padded up to a power-of-two
-bucket** — so admission compiles one prefill executable per (group
-size, bucket) instead of one per distinct prompt length. Each group
-runs one full-logits prefill over the padded prompts (a single forward
-instead of one decode step per token); causality keeps every position
-below a request's true length unaffected by the pad tail, so the
-engine reads each request's next token at its own ``len - 1`` and
+bucket**, and the admission *group size* is padded up to a power-of-two
+row bucket too (clamped to the slot count) — so admission compiles ONE
+prefill executable per (length bucket, group bucket) instead of one per
+distinct (prompt length, group size): a boundary that happens to admit
+3 requests hits the executable the 4-request boundary compiled. Each
+group runs one full-logits prefill over the padded prompts (a single
+forward instead of one decode step per token); causality keeps every
+position below a request's true length unaffected by the pad tail, so
+the engine reads each request's next token at its own ``len - 1`` and
 splices only the first ``len`` KV positions into the slot's cache
-region, without touching running slots.
+region, without touching running slots; the pad ROWS' outputs are
+simply sliced away before the splice.
 
 Families whose decode state is a **recurrence** (ssm / xlstm / hybrid)
 cannot splice a full-logits prefill's caches — their state is the
@@ -88,8 +92,18 @@ class ServeEngine:
         # no donation: _admit snapshots the pre-prefill state for splicing
         self._decode = jax.jit(api.decode_fn)
         # full-logits prefill: length-bucketed groups read each
-        # request's next token at its true len-1, not the padded tail
-        self._prefill = jax.jit(api.prefill_full_fn)
+        # request's next token at its true len-1, not the padded tail.
+        # The trace counters tick ONCE per lowering (the wrapped python
+        # body only runs at trace time): regression tests assert a new
+        # admission group size re-uses the cached executable.
+        self.prefill_traces = 0
+        self.prefill_state_traces = 0
+
+        def _pf(p, b):
+            self.prefill_traces += 1
+            return api.prefill_full_fn(p, b)
+
+        self._prefill = jax.jit(_pf)
         # per-leaf batch dim: the dim whose size changes with the batch
         # (needed to splice a newly-prefilled slot into the live state
         # without touching other slots)
@@ -106,10 +120,13 @@ class ServeEngine:
         # path instead (xlstm is family "ssm" with slstm groups)
         self._bulk_rec = (self.cfg.family in ("ssm", "hybrid")
                           and not self.cfg.is_encdec)
-        # one compiled scan per (group size, bucket) — window is static
-        self._prefill_state = jax.jit(
-            lambda p, toks, lens: api.prefill_state_fn(
-                p, toks, lens, window=window))
+        # one compiled scan per (group bucket, length bucket) — the
+        # window is static and the group dim pads to pow2 rows
+        def _ps(p, toks, lens):
+            self.prefill_state_traces += 1
+            return api.prefill_state_fn(p, toks, lens, window=window)
+
+        self._prefill_state = jax.jit(_ps)
 
     @property
     def epoch(self) -> int:
@@ -147,9 +164,17 @@ class ServeEngine:
     @staticmethod
     def _bucket_len(length: int) -> int:
         """Prompt lengths pad up to power-of-two buckets, so admission
-        compiles one prefill per (group size, bucket) instead of one
-        per distinct prompt length."""
+        compiles one prefill per (group bucket, length bucket) instead
+        of one per distinct prompt length."""
         return 1 << max(0, (length - 1)).bit_length()
+
+    def _bucket_group(self, n: int) -> int:
+        """Admission group sizes pad up to power-of-two ROW buckets
+        (clamped to the slot count — a group can never exceed the
+        batch), the same trick as prompt-length buckets: one compiled
+        prefill/decode-scan executable per (length bucket, group
+        bucket) serves every admission size."""
+        return min(self._bucket_len(max(1, n)), self.batch)
 
     def _admit(self) -> None:
         """Phase-boundary refill: fill ALL free slots from the queue at
@@ -184,15 +209,22 @@ class ServeEngine:
 
     def _admit_bulk(self, group: List[Tuple[int, "Request"]],
                     bucket: int) -> None:
-        """One padded prefill forward over the whole group, then splice
-        each slot's cache region up to its TRUE prompt length (running
-        slots untouched; the pad tail's KV never enters the cache)."""
+        """One padded prefill forward over the whole group (rows padded
+        to the pow2 group bucket), then splice each slot's cache region
+        up to its TRUE prompt length (running slots untouched; neither
+        the pad tail's KV nor the pad rows ever enter the cache)."""
+        G = len(group)
         lengths = [len(r.prompt) for _, r in group]
-        tokens = np.zeros((len(group), bucket), np.int32)
+        tokens = np.zeros((self._bucket_group(G), bucket), np.int32)
         for g, (_, r) in enumerate(group):
             tokens[g, :lengths[g]] = r.prompt
         logits, caches = self._prefill(self.params,
                                        {"tokens": to_device_copy(tokens)})
+        # drop the pad rows: only the true group reaches the splice
+        logits = logits[:G]
+        caches = {**caches,
+                  "layers": {k: v[:, :G]
+                             for k, v in caches["layers"].items()}}
         self.state = self._splice_prefill(self.state, caches,
                                           [s for s, _ in group], lengths)
         # next token at each request's own last REAL position
@@ -237,17 +269,27 @@ class ServeEngine:
         (``prefill_state_fn``) produces every request's final recurrent
         state and its next-token logits at its own ``len - 1``; the
         states splice into the admitted slots in one vectorized scatter
-        (running slots untouched)."""
+        (running slots untouched). The group dim pads to the pow2 group
+        bucket (pad rows scan length-1 dummies and are sliced away), so
+        a new admission size hits the cached executable."""
+        G = len(group)
+        Gp = self._bucket_group(G)
         lengths = [len(r.prompt) for _, r in group]
-        tokens = np.zeros((len(group), bucket), np.int32)
+        tokens = np.zeros((Gp, bucket), np.int32)
         for g, (_, r) in enumerate(group):
             tokens[g, :lengths[g]] = r.prompt
+        pad_lens = np.ones((Gp,), np.int32)
+        pad_lens[:G] = lengths
         logits, gstate = self._prefill_state(
             self.params, to_device_copy(tokens),
-            to_device_copy(np.asarray(lengths), dtype=np.int32))
+            to_device_copy(pad_lens, dtype=np.int32))
+        gstate = jax.tree_util.tree_map(
+            lambda leaf, d: jnp.moveaxis(
+                jnp.moveaxis(leaf, d, 0)[:G], 0, d),
+            gstate, self._bdim)
         self.state = self._splice_state_group(self.state, gstate,
                                               [s for s, _ in group])
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits[:G], axis=-1))
         for g, (slot, req) in enumerate(group):
             self._occupy(slot, req, int(nxt[g]), lengths[g])
 

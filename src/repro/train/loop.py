@@ -68,6 +68,11 @@ class TrainLoop:
     # a stage axis and run the 1F1B wave schedule on a 2-D (stage, data)
     # mesh; ``microbatches`` is the pipeline depth M (DESIGN.md §6)
     pipeline_stages: int = 1
+    # interleaved virtual stages: each device owns ``interleave``
+    # non-contiguous model chunks and runs the interleaved 1F1B order —
+    # bubble fraction (S-1)/(vM+S-1) instead of (S-1)/(M+S-1); needs
+    # microbatches % pipeline_stages == 0 (DESIGN.md §6)
+    interleave: int = 1
     _progs: Any = field(default=None, init=False, repr=False)
 
     @property
@@ -113,16 +118,17 @@ class TrainLoop:
         the team (x stages on the 2-D pipeline path), and a batch the
         team (and per-rank microbatching) divides."""
         if self.device_collective is False or pc is None:
-            if self.pipeline_stages > 1:
-                raise ValueError("pipeline_stages > 1 requires the "
-                                 "device-collective path")
+            if self.pipeline_stages > 1 or self.interleave > 1:
+                raise ValueError("pipeline_stages/interleave > 1 "
+                                 "require the device-collective path")
             return None
         devs = jax.devices()
         need = pc.n * max(self.pipeline_stages, 1)
         ok = (len(devs) >= need and pc.n >= 1
               and self.data.batch % pc.n == 0
               and (self.data.batch // pc.n) % self.microbatches == 0)
-        if self.device_collective is True or self.pipeline_stages > 1:
+        if (self.device_collective is True or self.pipeline_stages > 1
+                or self.interleave > 1):
             assert ok, (f"device_collective requested but team={pc.n}, "
                         f"stages={self.pipeline_stages}, "
                         f"devices={len(devs)}, batch={self.data.batch}, "
@@ -141,9 +147,10 @@ class TrainLoop:
                     microbatches=self.microbatches, donate=False,
                     collective=c, collective_devices=jax.devices(),
                     overlap=self._overlap_mode,
-                    pipeline_stages=self.pipeline_stages),
+                    pipeline_stages=self.pipeline_stages,
+                    interleave=self.interleave),
                 extra_key=(self._overlap_mode, self.microbatches,
-                           self.pipeline_stages))
+                           self.pipeline_stages, self.interleave))
         return self._progs
 
     def _build_step(self):
@@ -170,7 +177,8 @@ class TrainLoop:
             return None
         return {**key, "overlap": self._overlap_mode,
                 "microbatches": self.microbatches,
-                "pipeline_stages": self.pipeline_stages}
+                "pipeline_stages": self.pipeline_stages,
+                "interleave": self.interleave}
 
     def _precompile_from_key(self, pk: Optional[Dict]) -> None:
         """Resume path: rebuild the checkpointed epoch's collective and
@@ -183,6 +191,7 @@ class TrainLoop:
         if (pk.get("overlap") != self._overlap_mode
                 or pk.get("microbatches") != self.microbatches
                 or pk.get("pipeline_stages", 1) != self.pipeline_stages
+                or pk.get("interleave", 1) != self.interleave
                 or (self.runtime is not None
                     and (pk.get("kind") != self.runtime.kind
                          or pk.get("seed") != self.runtime.seed))):
@@ -255,13 +264,14 @@ class TrainLoop:
                                        program_key=self._program_key())
                     ts = self._build_step()
                     self.runtime.verify_epoch()
-                    if self.pipeline_stages > 1:
-                        # the stage axis's own proof: the 1F1B wave
-                        # order against the real p2p phaser actors
-                        from ..pipeline_exec import (derive_1f1b,
+                    if self.pipeline_stages > 1 or self.interleave > 1:
+                        # the stage axis's own proof: the (interleaved)
+                        # 1F1B wave order against the real p2p actors
+                        from ..pipeline_exec import (derive_interleaved,
                                                      verify_phase_order)
-                        verify_phase_order(derive_1f1b(
-                            self.pipeline_stages, self.microbatches))
+                        verify_phase_order(derive_interleaved(
+                            self.pipeline_stages, self.microbatches,
+                            self.interleave))
                     self.epoch_log.append({
                         "step": step, "phase": released,
                         "epoch": ep.index, "live": list(ep.live),

@@ -74,13 +74,16 @@ def _program_step(api: ModelAPI, opt: AdamW, collective,
 def _pipeline_step(api: ModelAPI, opt: AdamW, collective,
                    devices: Sequence, *, n_stages: int, remat: bool,
                    stacked: bool, overlap: str = "eager",
-                   microbatches: int = 1) -> TrainStep:
-    """2-D path: the 1F1B stage pipeline on the stage axis interleaved
-    with the epoch's collective schedule on the data axis
-    (``pipeline_exec``), adapted to the TrainStep surface."""
+                   microbatches: int = 1,
+                   interleave: int = 1) -> TrainStep:
+    """2-D path: the (interleaved) 1F1B stage pipeline on the stage
+    axis interleaved with the epoch's collective schedule on the data
+    axis (``pipeline_exec``), adapted to the TrainStep surface."""
     from ..pipeline_exec import build_pipeline_program
     prog = build_pipeline_program(api, opt, collective,
-                                  n_stages=n_stages, devices=devices,
+                                  n_stages=n_stages,
+                                  interleave=interleave,
+                                  devices=devices,
                                   microbatches=microbatches,
                                   stacked=stacked, remat=remat,
                                   overlap=overlap)
@@ -102,7 +105,8 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
                      collective_devices: Optional[Sequence] = None,
                      stacked_batch: bool = False,
                      overlap: str = "eager",
-                     pipeline_stages: int = 1) -> TrainStep:
+                     pipeline_stages: int = 1,
+                     interleave: int = 1) -> TrainStep:
     """``collective``: the elastic epoch's PhaserCollective. It is part
     of the lowered step's *static identity* — re-building at an epoch
     boundary re-lowers for the new team. Without ``collective_devices``
@@ -116,16 +120,19 @@ def build_train_step(api: ModelAPI, opt: AdamW, *,
     ``pipeline_stages > 1`` (device path only) compiles the 2-D
     (stage x data) pipeline program instead: the stacked blocks shard
     over the stage axis, microbatches flow through the wave-synchronous
-    1F1B schedule, and the epoch's collective syncs each stage row over
-    the data axis (``pipeline_exec``)."""
+    1F1B schedule — or its interleaved generalization when
+    ``interleave > 1`` (v virtual stages per device, bubble fraction
+    (S-1)/(vM+S-1)) — and the epoch's collective syncs each stage row
+    over the data axis (``pipeline_exec``)."""
     cfg = api.cfg
     if collective is not None and collective_devices is not None:
-        if pipeline_stages > 1:
+        if pipeline_stages > 1 or interleave > 1:
             return _pipeline_step(api, opt, collective,
                                   collective_devices,
                                   n_stages=pipeline_stages, remat=remat,
                                   stacked=stacked_batch, overlap=overlap,
-                                  microbatches=microbatches)
+                                  microbatches=microbatches,
+                                  interleave=interleave)
         return _program_step(api, opt, collective, collective_devices,
                              remat=remat, stacked=stacked_batch,
                              donate=donate, overlap=overlap,

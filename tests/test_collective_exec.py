@@ -165,6 +165,61 @@ def test_bucket_layout_reverse_topo_readiness_groups():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_bucket_layout_block_groups_scan_slice_subgroups():
+    """``block_groups=K`` splits the monolithic blocks group into K
+    scan-row sub-groups, LAST rows first (the order the backward scan
+    emits stacked gradients), deepening the overlap past 3 groups; the
+    group views and the full buffer still round-trip exactly."""
+    from repro.models.registry import get_api, get_config
+    api = get_api(get_config("smollm-135m").reduced(n_layers=4))
+    base = make_layout(api.param_spec(), bucket_elems=1024)
+    lay = make_layout(api.param_spec(), bucket_elems=1024,
+                      block_groups=4)
+    assert base.n_groups == 3
+    assert lay.n_groups == base.n_groups + 3      # blocks: 1 -> 4 groups
+    # the block sub-groups cover descending row ranges of the scan axis
+    rows = [r for r in lay.group_rows if r is not None]
+    assert rows == [(3, 4), (2, 3), (1, 2), (0, 1)], rows
+    # row-split groups repeat the same stacked-leaf range
+    blk_groups = [lay.group_leaves[g] for g in range(lay.n_groups)
+                  if lay.group_rows[g] is not None]
+    assert len(set(blk_groups)) == 1
+    params = api.init_params(jax.random.key(0))
+    bufs = lay.flatten_groups(params, 1.0)
+    assert [b.shape[0] for b in bufs] == list(lay.group_buckets)
+    flat = lay.flatten(params, 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(flat), np.asarray(jnp.concatenate(bufs, 0)))
+    for tree, count in (lay.unflatten(flat),
+                        lay.unflatten_groups(bufs)):
+        assert float(count) == 1.0
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # K > scan length clamps; K=1 is byte-identical to the base layout
+    assert make_layout(api.param_spec(), bucket_elems=1024,
+                       block_groups=64).n_groups == 3 + 3
+    assert make_layout(api.param_spec(), bucket_elems=1024,
+                       block_groups=1) == base
+
+
+def test_bucket_layout_block_groups_hybrid_shared_leaves_unsplit():
+    """Hybrid families carry loose class-1 leaves (shared attention)
+    whose grads accumulate across the whole backward: they keep an
+    UNSPLIT group after the scan-row sub-groups."""
+    from repro.models.registry import get_api, get_config
+    api = get_api(get_config("zamba2-7b").reduced())
+    lay = make_layout(api.param_spec(), block_groups=2)
+    rows = [r for r in lay.group_rows]
+    assert (None, (1, 2), (0, 1)) == tuple(rows[:3]), rows
+    params = api.init_params(jax.random.key(1))
+    tree, count = lay.unflatten(lay.flatten(params, 1.0))
+    assert float(count) == 1.0
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_bucket_layout_tree_order_single_group():
     """order="tree" preserves the pre-overlap layout: identity perm,
     one readiness group spanning every bucket."""
@@ -361,8 +416,8 @@ mk = lambda overlap, kind: ProgramCache(
         api, opt, PhaserCollective(pc.n, pc.axis_name, kind=kind,
                                    keys=pc.keys, seed=pc.seed),
         stacked=True, overlap=overlap, microbatches=M,
-        bucket_elems=1024),
-    extra_key=(overlap, M))
+        bucket_elems=1024, block_groups=2),
+    extra_key=(overlap, M, 2))
 pipe = mk("pipelined", "recursive_doubling")
 eager = mk("eager", "recursive_doubling")
 psum = mk("eager", "xla_psum")
@@ -411,7 +466,9 @@ assert len(rt.epochs) == 3, len(rt.epochs)
 for cache in (pipe, eager, psum):
     assert cache.stats()["misses"] == 3    # one program per member set
 g = pipe.get(rt.collective())
-assert g.meta["overlap"] == 1 and g.meta["bucket_groups"] >= 3
+# block_groups=2 splits the stacked-blocks group into 2 scan-row
+# sub-groups: the pipelined overlap runs deeper than the 3 classes
+assert g.meta["overlap"] == 1 and g.meta["bucket_groups"] >= 4
 print("OK")
 """
     import os

@@ -6,20 +6,25 @@ Layers of evidence:
    (producers run ahead without blocking), waiters never gate phase
    completion, and the converged SCSL/SNSL equal the MODE-FILTERED
    skip-list oracle;
-2. hypothesis properties: on randomized stage graphs and randomized
-   valid op interleavings, the protocol's observed release order equals
-   the host counter oracle (``simulate_program``) — the p2p analogue of
-   the collective ``simulate_schedule`` equivalence;
-3. the 1F1B wave schedule: dependency validity, the steady-state F/B
-   alternation, the wave-synchronous in-flight bound, and
-   ``verify_phase_order`` against real actors for an (S, M) sweep;
-4. ProgramCache keying across 2-D configs: (stage map x member set x
-   demotion leaf set) are distinct entries, revisits hit;
+2. hypothesis properties: on randomized stage graphs, randomized
+   (S, M, v) interleaved schedules, and randomized valid op
+   interleavings — including straggler demotion/repromotion of edge
+   participants MID-program — the protocol's observed release order
+   equals the host counter oracle (``simulate_program``) — the p2p
+   analogue of the collective ``simulate_schedule`` equivalence;
+3. the 1F1B wave schedule and its interleaved virtual-stage
+   generalization: dependency validity, the steady-state F/B
+   alternation, the per-chunk in-flight bounds (ring contiguity), the
+   factor-v bubble reduction, and ``verify_phase_order`` against real
+   actors for (S, M, v) sweeps;
+4. ProgramCache keying across 2-D configs: (stage map x interleave x
+   member set x demotion leaf set) are distinct entries, revisits hit;
 5. straggler demotion: leaf pinning in the oracle + schedule, the
    demote-then-evict escalation, re-promotion on recovery;
 6. numeric (subprocess, 8 host devices, slow): the compiled 2-D
-   pipeline program produces the same loss and params as the
-   single-axis ``xla_psum`` engine across grow/shrink epochs.
+   pipeline programs — wave-synchronous AND interleaved — produce the
+   same loss and params as the single-axis ``xla_psum`` engine across
+   grow/shrink epochs.
 """
 import subprocess
 import sys
@@ -32,8 +37,8 @@ from repro.core.p2p import (P2PPhaser, PipelinePhaserGraph,
                             simulate_program)
 from repro.core.phaser import SIG_MODE, SIG_WAIT, WAIT_MODE
 from repro.core.skiplist import SkipList
-from repro.pipeline_exec import derive_1f1b, pipeline_edges, \
-    verify_phase_order
+from repro.pipeline_exec import derive_1f1b, derive_interleaved, \
+    pipeline_edges, verify_phase_order
 from repro.runtime_elastic import ElasticPhaserRuntime
 
 
@@ -131,6 +136,80 @@ if HAVE_HYP:
         sched.check()
         verify_phase_order(sched)
 
+    @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3))
+    @settings(max_examples=24, deadline=None)
+    def test_interleaved_phase_order_verifies_for_any_shape(S, v, k):
+        """Random (stages, interleave, microbatches=k*S): the expanded
+        S*v-chunk schedule is valid (check: dependencies, per-chunk
+        in-flight bounds, ring contiguity, F/B alternation) and its
+        release order through REAL actors equals the counter oracle."""
+        M = k * S                       # chunk rotation needs M % S == 0
+        sched = derive_interleaved(S, M, v)
+        sched.check()
+        verify_phase_order(sched)
+        assert sched.n_waves == 2 * (v * M + S - 1)
+        # the interleaved bubble fraction divides the plain one
+        assert sched.bubble_fraction() <= \
+            derive_1f1b(S, M).bubble_fraction() + 1e-12
+
+    @given(st.integers(1, 3), st.integers(2, 3), st.integers(1, 2),
+           st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_interleaved_program_random_interleaving_with_demotion(
+            S, v, k, seed):
+        """Random VALID interleavings of the interleaved schedule's
+        instruction stream — including straggler demotion and
+        re-promotion of edge-phaser participants MID-program — keep the
+        real actors' release order equal to the counter oracle, and the
+        converged topologies equal to the leaf-pinned oracle."""
+        rng = np.random.default_rng(seed)
+        M = k * S
+        sched = derive_interleaved(S, M, v)
+        base = sched.as_program()
+        edges = pipeline_edges(sched.n_chunks)
+        # random valid interleaving: repeatedly pick any op whose wait
+        # is already satisfied by the oracle counters
+        count = {tuple(e): 0 for e in edges}
+        pending = list(base)
+        prog = []
+        while pending:
+            ready = [i for i, op in enumerate(pending)
+                     if op[0] == "signal" or count[tuple(op[1])] > op[2]]
+            # the wave program is valid, so a prefix op is always ready
+            i = int(rng.choice(ready[:max(1, len(ready) // 2)]))
+            op = pending.pop(i)
+            if op[0] == "signal":
+                count[tuple(op[1])] += 1
+            prog.append(op)
+        g = PipelinePhaserGraph(sched.n_chunks, edges, seed=seed % 5)
+        cut = sorted(rng.integers(0, len(prog) + 1, size=2))
+        demoted = []
+        log = []
+
+        def drive(ops):
+            for op in ops:
+                if op[0] == "signal":
+                    g.signal(op[1])
+                else:
+                    assert g.wait(op[1], op[2]), op
+
+        drive(prog[:cut[0]])
+        if edges:
+            e = tuple(edges[rng.integers(len(edges))])
+            r = int(rng.integers(2))          # SIG or WAIT participant
+            g.demote(e, r)
+            demoted.append((e, r))
+            g.verify_topologies()             # leaf-pinned oracle holds
+        drive(prog[cut[0]:cut[1]])
+        if demoted and rng.integers(2):
+            g.repromote(*demoted.pop())
+        drive(prog[cut[1]:])
+        got = [(ev.edge, ev.phase) for ev in g.release_log]
+        want = [(ev.edge, ev.phase)
+                for ev in simulate_program(edges, prog)]
+        assert got == want
+        g.verify_topologies()
+
     @given(st.integers(2, 6), st.integers(0, 10_000),
            st.lists(st.sampled_from(["join", "leave", "demote",
                                      "repromote", "step"]),
@@ -203,6 +282,86 @@ def test_stage_partition_validates():
         stage_partition(enc, 2)           # enc-dec keeps single-axis
 
 
+# --------------------------------------- interleaved (virtual stages)
+def test_interleaved_bubble_factor_v_reduction():
+    """The headline: with v chunks per device the fill/drain cost stays
+    2(S-1) waves but each wave computes 1/v of a stage — the bubble
+    fraction falls from (S-1)/(M+S-1) to (S-1)/(vM+S-1)."""
+    for S, M in ((2, 4), (2, 8), (4, 8)):
+        plain = derive_1f1b(S, M)
+        inter = derive_interleaved(S, M, 2)
+        assert plain.n_waves == 2 * (M + S - 1)
+        assert inter.n_waves == 2 * (2 * M + S - 1)
+        assert plain.n_waves - 2 * M == 2 * (S - 1)       # thick waves
+        assert inter.n_waves - 2 * 2 * M == 2 * (S - 1)   # THIN waves
+        assert abs(inter.bubble_fraction()
+                   - (S - 1) / (2 * M + S - 1)) < 1e-12
+        assert inter.bubble_fraction() < plain.bubble_fraction()
+
+
+def test_interleaved_per_chunk_inflight_tighter_than_expanded_wave_sync():
+    """Every chunk's in-flight peak stays at or under the proved bound
+    min(M, 2(S-1-s)+1 + (v-1-j)S) — strictly tighter than what the
+    expanded S*v-chunk graph would pay under the plain wave-synchronous
+    bound min(vM, 2(Sv-1-c)+1) — and live microbatches stay consecutive
+    (the compiled program's ring-buffer contract)."""
+    for S, M, v in ((2, 4, 2), (4, 8, 2), (3, 6, 2), (2, 8, 4)):
+        sched = derive_interleaved(S, M, v)
+        inflight = sched.chunk_inflight()
+        for (s, j), (peak, span) in inflight.items():
+            bound = sched.inflight_bound(s, j)
+            c = sched.chunk_of(s, j)
+            expanded = min(v * M, 2 * (S * v - 1 - c) + 1)
+            assert peak <= bound, (s, j, peak, bound)
+            assert span <= bound, (s, j, span, bound)
+            if c < S * v - 1:
+                assert bound <= expanded, (s, j, bound, expanded)
+        assert sched.ring_slots == max(sp for _, sp in inflight.values())
+
+
+def test_interleaved_chunk_stream_breadth_first_rotation():
+    """Device 0 at S=2, v=2, M=4 rotates chunk groups with period S:
+    S microbatches through group 0, S through group 1, then the next
+    round — the order that lets microbatch 0 reach chunk group 1
+    exactly when device 0 finishes group 0's first round."""
+    sched = derive_interleaved(2, 4, 2)
+    fwd = [(j, m) for k, j, m in sched.chunk_stream(0) if k == "F"]
+    assert fwd == [(0, 0), (0, 1), (1, 0), (1, 1),
+                   (0, 2), (0, 3), (1, 2), (1, 3)]
+    bwd = [(j, m) for k, j, m in sched.chunk_stream(0) if k == "B"]
+    assert bwd == [(1, 0), (1, 1), (0, 0), (0, 1),
+                   (1, 2), (1, 3), (0, 2), (0, 3)]
+    # steady state still alternates: never two forwards back to back
+    # after the first backward (backward runs drain the cooldown)
+    kinds = [k for k, _, _ in sched.chunk_stream(0)]
+    tail = kinds[kinds.index("B"):]
+    assert not any(a == b == "F" for a, b in zip(tail, tail[1:]))
+
+
+def test_interleaved_requires_microbatch_multiple_of_stages():
+    with pytest.raises(AssertionError):
+        derive_interleaved(2, 3, 2)
+    derive_interleaved(2, 3, 1)            # v=1 takes any M
+    derive_interleaved(1, 3, 2)            # S=1 divides everything
+
+
+def test_interleaved_program_reduces_to_plain_at_v1():
+    s1 = derive_1f1b(3, 6)
+    s2 = derive_interleaved(3, 6, 1)
+    assert s1.waves == s2.waves and s1.fingerprint() == s2.fingerprint()
+    assert s1.as_program() == s2.as_program()
+
+
+def test_stage_partition_interleave_chunks():
+    from repro.models.registry import get_api, get_config
+    from repro.pipeline_exec import stage_partition
+    api = get_api(get_config("smollm-135m").reduced(n_layers=4))
+    assert stage_partition(api, 2, 2) == ((0, 1), (1, 2), (2, 3), (3, 4))
+    assert stage_partition(api, 2, 1) == ((0, 2), (2, 4))
+    with pytest.raises(AssertionError):
+        stage_partition(api, 2, 3)         # 4 layers != 6 chunks
+
+
 # -------------------------------------------- ProgramCache 2-D keying
 class _FakeBuilder:
     def __init__(self):
@@ -247,13 +406,15 @@ def test_program_cache_demotion_is_distinct_entry():
 
 def test_pipeline_program_key_carries_stage_map():
     """The program's own key (what checkpoints persist) separates the
-    same member set at different stage counts."""
+    same member set at different stage counts AND interleave factors."""
     from repro.collective_exec import ProgramCache
     pc = PhaserCollective(2, "data", kind="xla_psum", keys=(0, 1))
     base = ProgramCache.key_of(pc)
-    two_stages = base + ("pipeline", ((0, 1), (1, 2)), "eager", 2)
-    one_stage = base + ("pipeline", ((0, 2),), "eager", 2)
+    two_stages = base + ("pipeline", ((0, 1), (1, 2)), "eager", 2, 1)
+    one_stage = base + ("pipeline", ((0, 2),), "eager", 2, 1)
+    interleaved = base + ("pipeline", ((0, 1), (1, 2)), "eager", 2, 2)
     assert two_stages != one_stage != base
+    assert interleaved != two_stages
 
 
 # ------------------------------------------------- straggler demotion
@@ -373,6 +534,76 @@ for step in range(8):
     rt.advance(step=step)
     rt.verify_epoch()
     verify_phase_order(derive_1f1b(S, M))
+for a, b in zip(jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(p2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-5)
+assert len(rt.epochs) == 2 and rt.epochs[-1].n == 3
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                          "PYTHONPATH": "src"},
+                         cwd=__import__("os").path.dirname(
+                             __import__("os").path.dirname(__file__)),
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_interleaved_program_matches_single_axis_under_churn_subprocess():
+    """Grow 2 -> 3 on the 2-D (2-stage x 2-interleave x data) mesh:
+    per-step loss and params equal the single-axis xla_psum engine, per
+    epoch, with the pipelined overlap + scan-row bucket sub-groups on —
+    and the interleaved phase ordering re-proved at every boundary."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.collective_exec import build_gradsync_program
+from repro.core.collective import PhaserCollective
+from repro.data.synthetic import make_batch
+from repro.models.registry import get_api, get_config
+from repro.optim import AdamW
+from repro.pipeline_exec import build_pipeline_program, \\
+    derive_interleaved, verify_phase_order
+from repro.runtime_elastic import ElasticPhaserRuntime
+
+cfg = get_config("smollm-135m").reduced(n_layers=4)
+api = get_api(cfg)
+opt = AdamW(lr=3e-3, warmup=2, total_steps=12)
+S, M, V = 2, 2, 2
+rt = ElasticPhaserRuntime(2, seed=0, kind="recursive_doubling")
+params = api.init_params(jax.random.key(0))
+opt_state = opt.init(params)
+p2, o2 = params, opt_state
+for step in range(8):
+    if step == 3:
+        rt.request_join()
+    pc = rt.epoch.collective
+    prog = build_pipeline_program(api, opt, pc, n_stages=S,
+                                  interleave=V, microbatches=M,
+                                  stacked=True, overlap="pipelined",
+                                  block_groups=2)
+    assert prog.meta["interleave"] == V
+    assert prog.meta["bucket_groups"] >= 4
+    ref = build_gradsync_program(
+        api, opt, PhaserCollective(pc.n, "data", kind="xla_psum",
+                                   keys=pc.keys), stacked=True)
+    team = list(rt.epoch.live)
+    bs = [make_batch(cfg.vocab_size, 4, 32, seed=100 + w, step=step)
+          for w in team]
+    batch = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+    alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team])
+    params, opt_state, pm = prog.step(params, opt_state, batch, alive)
+    p2, o2, pm2 = ref.step(p2, o2, batch, alive)
+    r, r2 = prog.reduce_metrics(pm), ref.reduce_metrics(pm2)
+    np.testing.assert_allclose(float(r["loss"]), float(r2["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    rt.advance(step=step)
+    rt.verify_epoch()
+    verify_phase_order(derive_interleaved(S, M, V))
 for a, b in zip(jax.tree_util.tree_leaves(params),
                 jax.tree_util.tree_leaves(p2)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),

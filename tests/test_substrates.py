@@ -285,6 +285,76 @@ def test_serve_engine_non_pow2_window_keeps_bulk_path():
     assert shapes == [(1, 24)], shapes             # clamped bulk prefill
 
 
+def test_serve_engine_group_bucket_reuses_prefill_executable():
+    """Admission group sizes pad to pow2 row buckets: a boundary that
+    admits a NEW group size within the same bucket must hit the cached
+    prefill executable (no re-lowering), and a larger size compiles
+    exactly one more."""
+    cfg = get_config("smollm-135m").reduced()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.key(0))
+    eng = ServeEngine(api, params, batch=8, window=32)
+    rng = np.random.default_rng(7)
+    mk = lambda rid: Request(rid=rid,
+                             prompt=rng.integers(1, 50, size=5)
+                             .astype(np.int32), max_new=1)
+    for i in range(3):
+        eng.submit(mk(i))                     # group 3 -> bucket 4
+    eng.step()
+    assert eng.prefill_traces == 1, eng.prefill_traces
+    for i in range(4):
+        eng.submit(mk(10 + i))                # group 4 -> SAME bucket 4
+    eng.step()
+    assert eng.prefill_traces == 1, eng.prefill_traces   # cache hit
+    for i in range(5):
+        eng.submit(mk(20 + i))                # group 5 -> bucket 8
+    eng.step()
+    assert eng.prefill_traces == 2, eng.prefill_traces
+
+
+def test_serve_engine_group_bucket_reuses_decode_scan_recurrent():
+    """Recurrent analogue: a new admission group size within the same
+    pow2 group bucket re-uses the compiled length-masked decode scan,
+    and the padded rows never leak into outputs (equal to sequential)."""
+    cfg = get_config("xlstm-125m").reduced()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.key(0))
+    rng = np.random.default_rng(8)
+    prompts3 = [rng.integers(1, 50, size=5).astype(np.int32)
+                for _ in range(3)]
+    prompts4 = [rng.integers(1, 50, size=6).astype(np.int32)
+                for _ in range(4)]
+
+    eng = ServeEngine(api, params, batch=8, window=32)
+    reqs3 = [Request(rid=i, prompt=p, max_new=2)
+             for i, p in enumerate(prompts3)]
+    for r in reqs3:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.prefill_state_traces == 1      # group 3 -> bucket 4
+    reqs4 = [Request(rid=10 + i, prompt=p, max_new=2)
+             for i, p in enumerate(prompts4)]
+    for r in reqs4:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.prefill_state_traces == 1      # group 4: cache hit
+
+    ref = ServeEngine(api, params, batch=8, window=32)
+    ref._bulk = ref._bulk_rec = False         # token-by-token baseline
+    ref3 = [Request(rid=i, prompt=p, max_new=2)
+            for i, p in enumerate(prompts3)]
+    ref4 = [Request(rid=10 + i, prompt=p, max_new=2)
+            for i, p in enumerate(prompts4)]
+    for r in ref3:
+        ref.submit(r)
+    ref.run_until_drained()
+    for r in ref4:
+        ref.submit(r)
+    ref.run_until_drained()
+    for a, b in zip(reqs3 + reqs4, ref3 + ref4):
+        assert a.out == b.out, (a.rid, a.out, b.out)
+
+
 # ------------------------------------------------------------- train loop
 def test_train_loop_elastic_relovers_at_epoch_boundaries(tmpdir):
     from repro.runtime_elastic import ElasticPhaserRuntime
