@@ -10,7 +10,11 @@ correctness gate: the CI smoke goes red if any pipeline path ever
 diverges), tabulates the schedules' shape — warmup/bubble structure,
 **bubble fraction** (S-1)/(vM+S-1), p2p protocol message counts from
 ``verify_phase_order`` — and emits ``BENCH_pipeline.json``
-(``schema_version`` 2) so CI tracks the perf trajectory across PRs.
+(``schema_version`` 3) so CI tracks the perf trajectory across PRs.
+Interleaved rows step the carried device-major layout (zero
+steady-state permutes); a ``+per-step permute (old)`` row threads
+bind+readout through every step to show the cost the carried-state
+fix removed.
 Host-CPU timings are structural — the pipeline win is
 hardware-dependent; the table proves the compiled programs compose and
 that the interleaved schedule's thinner waves do strictly less masked
@@ -26,7 +30,7 @@ import numpy as np
 
 from repro.pipeline_exec import derive_interleaved, verify_phase_order
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def run(report):
@@ -97,23 +101,46 @@ def run(report):
         """Alternate timing rounds ACROSS the modes (one step of each
         per round) and keep per-mode minima: host-mesh load drifts on
         the shared cores, and alternation spreads the drift over every
-        mode instead of biasing whichever ran last."""
+        mode instead of biasing whichever ran last.
+
+        Steady-state rows step the CARRIED (device-major) layout —
+        ``bind_state`` runs once outside the timed region, exactly as
+        the train loop drives the program between boundaries.  For
+        programs with a real layout converter (interleaved v>1) a
+        second timing threads bind+step+readout through every step:
+        that is the old per-step permute regime, kept as the
+        comparison row."""
         batch = make_batch_stack(n)
         alive = jnp.ones((n,), jnp.float32)
-        losses, mins = {}, {}
+        losses, mins, permuted = {}, {}, {}
+        bound = {}
         for name, prog in progs.items():            # compile + warmup
-            p, o, m = prog.step(params, opt_state, batch, alive)
+            pd, od = prog.bind_state(params, opt_state)
+            bound[name] = (pd, od)
+            p, o, m = prog.step(pd, od, batch, alive)
             jax.block_until_ready(p)
             losses[name] = float(prog.reduce_metrics(m)["loss"])
             mins[name] = float("inf")
+            if getattr(prog, "bind_fn", None) is not None:
+                prog.readout_state(p, o)            # compile converter
+                permuted[name] = float("inf")
         for _ in range(reps):
             for name, prog in progs.items():
+                pd, od = bound[name]
                 t0 = time.perf_counter()
-                p, o, m = prog.step(params, opt_state, batch, alive)
+                p, o, m = prog.step(pd, od, batch, alive)
                 jax.block_until_ready(p)
                 mins[name] = min(mins[name],
                                  time.perf_counter() - t0)
-        return mins, losses
+                if name in permuted:
+                    t0 = time.perf_counter()
+                    pd2, od2 = prog.bind_state(params, opt_state)
+                    p, o, m = prog.step(pd2, od2, batch, alive)
+                    pc_, oc_ = prog.readout_state(p, o)
+                    jax.block_until_ready(pc_)
+                    permuted[name] = min(permuted[name],
+                                         time.perf_counter() - t0)
+        return mins, losses, permuted
 
     rows, results = [], {}
     for M in (4, 8):
@@ -125,7 +152,7 @@ def run(report):
             progs[label] = build_pipeline_program(
                 api, opt, pc(), n_stages=S, interleave=v,
                 microbatches=M, stacked=True)
-        mins, losses = timed_group(progs, n)
+        mins, losses, permuted = timed_group(progs, n)
         rows.append({"mode": f"single-axis dp={n}", "devices": n,
                      "stages": 1, "interleave": 1, "microbatches": M,
                      "bubble_fraction": 0.0,
@@ -141,6 +168,17 @@ def run(report):
                              round(sched.bubble_fraction(), 4),
                          "ms_per_step": round(mins[label] * 1e3, 2)})
             results[f"pipeline_{S}x{n}_v{v}_M{M}"] = mins[label] * 1e3
+            if label in permuted:
+                rows.append({"mode": f"{label} {S}x{n} v={v} "
+                                     "+per-step permute (old)",
+                             "devices": S * n, "stages": S,
+                             "interleave": v, "microbatches": M,
+                             "bubble_fraction":
+                                 round(sched.bubble_fraction(), 4),
+                             "ms_per_step":
+                                 round(permuted[label] * 1e3, 2)})
+                results[f"pipeline_{S}x{n}_v{v}_M{M}_permuted"] = \
+                    permuted[label] * 1e3
         # correctness gate: every mode computes the same loss
         for name, loss in losses.items():
             assert abs(loss - losses["single"]) <= \
@@ -162,6 +200,11 @@ def run(report):
         "model": "smollm-135m.reduced(4L)",
         "stages": S, "interleave": V,
         "ms_per_step": {k: round(vv, 3) for k, vv in results.items()},
+        # carried state is device-major between steps: the steady-state
+        # interleaved rows run ZERO layout permutes, the "_permuted"
+        # rows thread bind+readout through every step (the pre-fix
+        # regime, 6 cross-shard permutes per step across params+moments)
+        "carried_state": "device-major",
         "bubble_fraction": {
             f"S{S}_M{M}_v{v}":
                 round(derive_interleaved(S, M, v).bubble_fraction(), 4)

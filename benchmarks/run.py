@@ -82,6 +82,14 @@ def main(argv=None):
         except Exception as e:  # noqa: BLE001
             print(f"  !! {name} failed: {type(e).__name__}: {e}")
             raise
+    # persist the machine-readable summaries where CI (and the repo
+    # history) can diff them: BENCH_*.json land in the repo root
+    import glob
+    import shutil
+    for src in sorted(glob.glob(os.path.join(rep.outdir, "BENCH_*.json"))):
+        dst = os.path.basename(src)
+        shutil.copyfile(src, dst)
+        print(f"persisted {src} -> ./{dst}")
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s; CSVs in "
           f"{rep.outdir}/")
     return 0

@@ -199,9 +199,16 @@ for step in range(STEPS):
 
     prog = programs.get(rt.collective())
     ref = baseline.get(rt.collective())
-    # baseline runs from the SAME params: the engine must match psum
+    # baseline runs from the SAME params: the engine must match psum.
+    # The interleaved pipeline carries DEVICE-MAJOR state between steps
+    # (zero steady-state layout permutes); this harness binds/reads out
+    # every step only because it proves per-step equality against the
+    # canonical-layout baseline — the round-trip is a pure row gather,
+    # so the comparison is still exact
     p_ref, o_ref, m_ref = ref.step(params, opt_state, batch, alive)
-    params, opt_state, m = prog.step(params, opt_state, batch, alive)
+    p_dev, o_dev = prog.bind_state(params, opt_state)
+    p_dev, o_dev, m = prog.step(p_dev, o_dev, batch, alive)
+    params, opt_state = prog.readout_state(p_dev, o_dev)
     r, rr = prog.reduce_metrics(m), ref.reduce_metrics(m_ref)
     loss, loss_ref = float(r["loss"]), float(rr["loss"])
     np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-6)

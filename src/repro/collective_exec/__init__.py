@@ -14,11 +14,12 @@ the elastic runtime swap compiled programs — eager and overlapped alike
 from .buckets import BucketLayout, make_layout
 from .cache import ProgramCache
 from .executor import execute_flat, execute_flat_pipelined
-from .program import (OVERLAP_MODES, GradSyncProgram,
+from .program import (OVERLAP_MODES, GradSyncProgram, HierSyncProgram,
                       build_allreduce_program, build_gradsync_program,
-                      mesh_for)
+                      build_hier_gradsync_program, mesh_for)
 
 __all__ = ["BucketLayout", "make_layout", "ProgramCache", "execute_flat",
            "execute_flat_pipelined", "OVERLAP_MODES", "GradSyncProgram",
-           "build_allreduce_program", "build_gradsync_program",
+           "HierSyncProgram", "build_allreduce_program",
+           "build_gradsync_program", "build_hier_gradsync_program",
            "mesh_for"]

@@ -115,6 +115,14 @@ class GradSyncProgram:
         opt_state = self._replicated(opt_state)
         return self.jitted(params, opt_state, batch, alive)
 
+    # single-axis programs carry canonical state: the converters exist
+    # so loops drive this and the device-major pipeline program alike
+    def bind_state(self, params, opt_state):
+        return params, opt_state
+
+    def readout_state(self, params, opt_state):
+        return params, opt_state
+
     def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
         return reduce_worker_metrics(pm, self.meta)
 
@@ -236,6 +244,133 @@ def build_gradsync_program(api, opt, pc: PhaserCollective, *,
                            pc=pc, mesh=mesh,
                            layout=layout, jitted=jitted, stacked=stacked,
                            meta=meta)
+
+
+@dataclass
+class HierSyncProgram:
+    """Two-level gradient sync for the multi-host runtime (DESIGN.md
+    §11). Level 0 reduces one process's M local device shards inside a
+    ``shard_map`` (the local collective); level 1 runs the *process-
+    level* schedule — derived from the same skip-list oracle, over the
+    live process keys — as real transport messages between processes.
+    Only the flat bucket buffer crosses the process boundary; the two
+    jitted halves stay device-resident:
+
+      ``local_grads``: (params, opt, batch, alive) -> (flat, pm) — per-
+          device grads, flattened with the alive flag, locally reduced
+          so every local device (hence the host copy) holds the
+          process-partial sum;
+      ``apply``: (params, opt, flat) -> (params, opt, pm) — unflatten
+          the *globally* reduced buffer, masked-mean by the reduced
+          alive count (= live processes x M), optimizer update.
+
+    Identical reduced buffers on every process keep params replicated
+    across hosts with zero parameter traffic. ``key`` is keyed by the
+    process-level collective: the cache entry a surviving host
+    re-commits at each churn epoch boundary."""
+
+    key: tuple
+    pc_proc: PhaserCollective     # process-level collective (epoch id)
+    pc_local: PhaserCollective    # local M-device collective
+    mesh: Mesh
+    layout: BucketLayout
+    local_grads: Callable
+    apply: Callable
+    meta: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def proc_schedule(self):
+        """The round schedule the owning process executes over the
+        transport (add rounds reduce, copy rounds hydrate)."""
+        return self.pc_proc.unified_schedule()
+
+    def _replicated(self, tree):
+        sh = jax.sharding.NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map(
+            lambda x: x if getattr(x, "sharding", None) == sh
+            else jax.device_put(x, sh), tree)
+
+    def bind_state(self, params, opt_state):
+        return params, opt_state
+
+    def readout_state(self, params, opt_state):
+        return params, opt_state
+
+    def reduce_metrics(self, pm, extra=None):
+        return reduce_worker_metrics(pm, {**self.meta, **(extra or {})})
+
+
+def build_hier_gradsync_program(api, opt, pc_proc: PhaserCollective, *,
+                                local_devices: Sequence,
+                                local_kind: str = "phaser_scsl",
+                                remat: bool = False,
+                                fused: bool = True,
+                                interpret: Optional[bool] = None,
+                                bucket_elems: Optional[int] = None
+                                ) -> HierSyncProgram:
+    """Compile one churn epoch's hierarchical sync for one process.
+
+    ``pc_proc`` spans the live *process* keys (the epoch identity);
+    the local level is a fresh collective over ``range(M)`` for this
+    process's ``local_devices`` — identical on every host, so the
+    programs only differ by their slice of the batch. ``pc_proc.kind``
+    must be a whole-buffer round schedule (``phaser_scsl`` or
+    ``recursive_doubling``): the cross-process rounds are executed by
+    the transport, not by XLA."""
+    assert pc_proc.unified_schedule() is not None, \
+        f"process-level kind {pc_proc.kind!r} is not a round schedule"
+    m = len(local_devices)
+    pc_local = PhaserCollective(m, pc_proc.axis_name, kind=local_kind,
+                                seed=pc_proc.seed)
+    mesh = mesh_for(pc_local, local_devices)
+    layout = make_layout(api.param_spec(), bucket_elems=bucket_elems)
+    axis = pc_local.axis_name
+
+    def grads_worker(params, opt_state, batch, alive):
+        batch = jax.tree_util.tree_map(lambda x: x[0], batch)
+        a = alive[0]
+        (_, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch, remat=remat)
+        grads = jax.tree_util.tree_map(
+            lambda g: g * a.astype(g.dtype), grads)
+        flat = execute_flat(layout.flatten(grads, a), pc_local,
+                            fused=fused, interpret=interpret)
+        pm = {"loss": metrics["loss"] * a, "alive": a}
+        pm = {k: jnp.asarray(v, jnp.float32).reshape(1)
+              for k, v in pm.items()}
+        return flat[None], pm
+
+    sm = jax.jit(shard_map(grads_worker, mesh=mesh,
+                           in_specs=(P(), P(), P(axis), P(axis)),
+                           out_specs=(P(axis), P(axis)),
+                           check_rep=False))
+
+    def local_grads(params, opt_state, batch, alive):
+        stacked_flat, pm = sm(params, opt_state, batch, alive)
+        # every local rank holds the same locally-reduced buffer
+        return stacked_flat[0], pm
+
+    def apply_worker(params, opt_state, flat):
+        grads, count = layout.unflatten(flat)
+        inv = 1.0 / jnp.maximum(count, 1.0)
+        grads = jax.tree_util.tree_map(
+            lambda g: g * inv.astype(g.dtype), grads)
+        new_p, new_o, om = opt.update(grads, opt_state, params)
+        om = {k: jnp.asarray(v, jnp.float32) for k, v in om.items()}
+        return new_p, new_o, om
+
+    st = pc_proc.stats()
+    lst = pc_local.stats()
+    meta = {"team": pc_proc.n * m, "processes": pc_proc.n,
+            "local_devices": m,
+            "sync_rounds": st["rounds"] + lst["rounds"],
+            "sync_messages": st["messages"] * m + lst["messages"]}
+    return HierSyncProgram(
+        key=(pc_proc.keys, pc_proc.kind, pc_proc.seed, pc_proc.p,
+             "hier", m, local_kind),
+        pc_proc=pc_proc, pc_local=pc_local, mesh=mesh, layout=layout,
+        local_grads=local_grads, apply=jax.jit(apply_worker),
+        meta=meta)
 
 
 def build_allreduce_program(pc: PhaserCollective, spec, *,

@@ -225,6 +225,58 @@ class SkipList:
             cur = self.nodes[cur].nxt[l]
         return out
 
+    def lanes(self) -> List[List[int]]:
+        """Every lane chain, lane 0 first. Lane 0 is always present (it
+        may be empty); higher lanes stop at the first empty one."""
+        out = []
+        l = 0
+        while True:
+            lane = self.level_chain(l)
+            if not lane and l > 0:
+                break
+            out.append(lane)
+            l += 1
+        return out
+
+    def fingerprint(self) -> str:
+        """Stable digest of the full topology (per-key heights + every
+        lane chain + the demotion set). Two parties that derived the
+        same structure — e.g. every process of the partitioned control
+        plane at an epoch boundary — agree on this string; that is the
+        cross-process agreement check of the multi-host runtime."""
+        payload = repr((sorted((k, self.nodes[k].height)
+                               for k in self.keys()),
+                        self.lanes(),
+                        sorted(self.leaf_keys))).encode()
+        return hashlib.sha256(payload).hexdigest()[:16]
+
+    # -- partitioned (PGAS) view --------------------------------------------
+    def partition(self, owner_of) -> Dict[int, "PartitionView"]:
+        """Split the global structure into per-owner views: one logical
+        skip list over partitioned per-process state (the global-view
+        surface of arXiv:2112.00068). ``owner_of`` maps a key (including
+        HEAD) to its owning process id; each view carries full link
+        state for its own keys and only boundary references to remote
+        ones. The union of the views is exactly the global list."""
+        get = owner_of if callable(owner_of) else owner_of.__getitem__
+        nodes_by_owner: Dict[int, Dict[int, Tuple]] = {}
+        for k in [HEAD] + self.keys():
+            n = self.nodes[k]
+            nodes_by_owner.setdefault(get(k), {})[k] = (
+                n.height, tuple(n.nxt), tuple(n.prv))
+        out = {}
+        for o, nodes in sorted(nodes_by_owner.items()):
+            local = set(nodes)
+            boundary = sorted({r for (_, nx, pv) in nodes.values()
+                               for r in (*nx, *pv)
+                               if r is not None and r not in local})
+            out[o] = PartitionView(owner=o,
+                                   nodes=tuple(sorted(
+                                       (k, h, nx, pv)
+                                       for k, (h, nx, pv) in nodes.items())),
+                                   boundary=tuple(boundary))
+        return out
+
     def check_integrity(self) -> None:
         """Structural invariants (used by tests and the model checker)."""
         keys = self.keys()
@@ -259,3 +311,47 @@ class SkipList:
                 row.append(f"{k:>4}" if self.nodes[k].height > l else "   .")
             lines.append(" ".join(row))
         return "\n".join(lines)
+
+
+def _canon_links(height: int, nxt, prv) -> Tuple[int, Tuple, Tuple]:
+    """Normalize a node's link state to exactly ``height`` levels (link
+    lists from protocol actors may carry trailing lanes after partial
+    unlinks; the comparison is over the lanes the node is on)."""
+    nx = tuple((list(nxt) + [None] * height)[:height])
+    pv = tuple((list(prv) + [None] * height)[:height])
+    return height, nx, pv
+
+
+@dataclass(frozen=True)
+class PartitionView:
+    """One owner's slice of the partitioned skip list.
+
+    ``nodes``: sorted tuple of ``(key, height, nxt, prv)`` for every
+    locally-owned key (HEAD included for its owner); ``boundary``: the
+    remote keys local links point at. ``diff`` checks a process's live
+    actor state against this oracle slice — the per-process half of the
+    epoch-boundary verification."""
+
+    owner: int
+    nodes: Tuple[Tuple[int, int, Tuple, Tuple], ...]
+    boundary: Tuple[int, ...]
+
+    def keys(self) -> List[int]:
+        return [k for k, _, _, _ in self.nodes]
+
+    def diff(self, states: Dict[int, Tuple[int, Tuple, Tuple]]) -> List[str]:
+        """Mismatches between this view and ``states`` (key ->
+        (height, nxt, prv) extracted from the owner's actors). Empty
+        list == the partition agrees with the oracle."""
+        out = []
+        want = {k: _canon_links(h, nx, pv) for k, h, nx, pv in self.nodes}
+        for k in sorted(set(want) | set(states)):
+            if k not in want:
+                out.append(f"key {k}: present locally, absent in oracle")
+            elif k not in states:
+                out.append(f"key {k}: in oracle view, absent locally")
+            else:
+                got = _canon_links(*states[k])
+                if got != want[k]:
+                    out.append(f"key {k}: local {got} != oracle {want[k]}")
+        return out

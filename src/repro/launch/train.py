@@ -36,11 +36,25 @@ collective schedule — churn re-derives both at the same boundary.
 non-contiguous model chunks, cutting the pipeline bubble fraction from
 (S-1)/(M+S-1) to (S-1)/(vM+S-1); requires the scan length to divide by
 S*v and ``--microbatches`` to divide by S.
+
+``--processes N`` (DESIGN.md §11) runs the MULTI-HOST elastic runtime
+instead: N logical host processes, each owning a slice of the visible
+devices, the phaser skip list partitioned over them (coordinator owns
+HEAD), and gradient sync running hierarchically — local shard_map
+reduce inside each process, the process-level phaser schedule between
+them. Elastic events then churn whole hosts:
+
+  ... --host-devices 4 --processes 2 --elastic "join@4,fail:1@8"
+
+(a joining host needs spare devices: leave ``host-devices`` headroom
+or churn down first). Checkpoints record the surviving process set in
+the manifest so ``--resume`` pre-compiles the surviving-host program.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 
 import jax
@@ -73,6 +87,104 @@ def parse_elastic(spec: str):
                              "join | leave | fail")
         events.setdefault(int(step), []).append((kind, wid))
     return events
+
+
+def run_processes(args, ap):
+    """--processes N: the multi-host elastic runtime over device slices
+    of this jax runtime (InprocCluster). Each logical host process owns
+    ndev/N devices; churn happens at whole-host granularity."""
+    from ..runtime_dist import DistCoordinator, InprocCluster
+    n = args.processes
+    ndev = len(jax.devices())
+    if ndev < n:
+        ap.error(f"--processes {n} needs at least {n} devices "
+                 f"(have {ndev}; use --host-devices)")
+    m = ndev // n
+    slots = ndev // m                       # slice headroom for joins
+    per_dev_batch = max(1, args.batch // (n * m))
+    slot_of = {}
+
+    def data_for(pid):
+        if pid not in slot_of:
+            used = set(slot_of.values())
+            free = [i for i in range(slots) if i not in used]
+            if not free:
+                raise ValueError(f"no free device slice for host {pid} "
+                                 f"({slots} slices of {m} devices)")
+            slot_of[pid] = free[0]
+        return {"arch": args.arch, "reduced": args.reduced,
+                "layers": args.layers, "batch": per_dev_batch,
+                "seq": args.seq, "lr": args.lr,
+                "warmup": min(20, args.steps // 5), "steps": args.steps,
+                "devices": ndev,
+                "device_slice": [slot_of[pid] * m, m],
+                "ckpt_dir": args.ckpt_dir,
+                "local_kind": "phaser_scsl"}
+
+    events = {}
+    if args.elastic is not None:
+        try:
+            events = parse_elastic(args.elastic)
+        except ValueError as e:
+            ap.error(str(e))
+    rt = DistCoordinator(InprocCluster(), n, seed=args.seed,
+                         proc_kind=args.sync_kind, data_for=data_for)
+    start = 0
+    if args.resume and args.ckpt_dir:
+        mk = rt.cluster.call(min(rt.live),
+                             {"op": "manifest_key"})["program_key"]
+        if mk is not None:
+            # the manifest records the process set live at save time;
+            # a naive restart boots the original set — shed the rest
+            # so resume pre-compiles the surviving-host program
+            for pid in sorted(set(rt.live) - set(mk["process_set"])):
+                rt.request_leave(pid, step=0)
+                slot_of.pop(pid, None)
+            out = rt.resume()
+            start = out["step"]
+            print(f"# resumed at step {start}; manifest process_set="
+                  f"{mk['process_set']} compiled={out['compiled']}")
+    metrics = []
+    for step in range(start, args.steps):
+        for kind, wid in events.get(step, []):
+            if kind == "join":
+                rt.request_join(step=step)
+            else:
+                victim = wid if wid is not None else max(rt.live)
+                rt.request_leave(victim, fail=(kind == "fail"),
+                                 step=step)
+                slot_of.pop(victim, None)   # slice freed for later joins
+        out = rt.train_step(step)
+        rt.advance(step=step)
+        loss = sum(r["loss"] for r in out.values()) / len(out)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            metrics.append({"step": step, "loss": loss,
+                            "hosts": len(rt.live),
+                            "epoch": rt.epoch.index})
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            rt.save_checkpoint(step + 1)
+    if args.ckpt_dir:
+        rt.save_checkpoint(args.steps)
+    st = rt.control_stats()
+    for mrow in metrics:
+        print(json.dumps(mrow))
+    print(json.dumps({"control_plane": {
+        "live": st["live"], "epochs": rt.epoch.index + 1,
+        "remote_frames": st["remote_frames"],
+        "critical_path": st["critical_path"],
+        "events": [[e.step, e.kind, e.pid] for e in rt.events]}}))
+    rt.close()
+    if not metrics:
+        print("# no steps to run (checkpoint already at --steps)")
+        return 0
+    first, last = metrics[0]["loss"], metrics[-1]["loss"]
+    print(f"# loss {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first else 'NOT DECREASED'})")
+    # a short resume tail (a couple of steps after the checkpoint) is
+    # loss noise on the reduced configs — gate those on finiteness only
+    if len(metrics) < 4:
+        return 0 if math.isfinite(last) else 1
+    return 0 if last < first else 1
 
 
 def main(argv=None):
@@ -117,6 +229,13 @@ def main(argv=None):
                          "needs workers*stages devices and "
                          "--microbatches as the pipeline depth "
                          "(device path only)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="multi-host elastic runtime: N logical host "
+                         "processes, each owning ndev/N devices; the "
+                         "skip-list control plane partitions over them "
+                         "and gradient sync runs hierarchically (local "
+                         "shard_map reduce, then the process-level "
+                         "schedule). Elastic events churn whole hosts.")
     ap.add_argument("--interleave", type=int, default=1,
                     help="virtual stages per device: run the "
                          "interleaved 1F1B schedule (v non-contiguous "
@@ -135,6 +254,9 @@ def main(argv=None):
             print(f"# --host-devices {args.host_devices}: backend already "
                   f"initialized with {len(jax.devices())} devices; set "
                   "XLA_FLAGS before launch instead")
+
+    if args.processes > 1:
+        return run_processes(args, ap)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -35,16 +35,19 @@ predecessor — into one ``shard_map`` train step over a 2-D mesh:
   ``xla_psum`` baseline program in ``examples/elastic_train.py``
   through grow/shrink churn, for any interleave).
 
-Parameters stay in the CANONICAL layer order at the program surface:
-with v > 1 the step permutes the stacked-blocks rows to the
-device-major chunk layout inside the jitted function (one static
-gather) and un-permutes the updated params on the way out, so
-checkpoints, the optimizer state and the single-axis equality checks
-never see the interleaved placement. That buys surface simplicity at
-the cost of re-permuting blocks + both Adam moments each step — trivial
-on the host mesh, but on real hardware a persistent device-major
-carried state (permuting only at program bind / checkpoint / readout
-boundaries) would remove the per-step reshuffle; see ROADMAP.
+Carried state is DEVICE-MAJOR: with v > 1 the step takes and returns
+the stacked-blocks rows (params and both Adam moments) in the chunk
+layout the stage shards actually hold — device s's contiguous shard is
+its v chunks in group order. Steady-state training therefore performs
+ZERO cross-shard layout permutes: the old design re-gathered params,
+mu and nu to the canonical layer order inside every step (6 permutes
+per step); now the canonical view exists only at the explicit
+``bind_state`` / ``readout_state`` boundaries (program bind,
+checkpoint save/restore, final readout). The permutation is a pure
+row gather — arithmetic-free — so a device-major run read out at any
+step is bitwise identical to the old canonical-surface step, and the
+layout depends only on (S, v, rows-per-chunk): epoch swaps under
+data-axis churn reuse the carried state as-is.
 
 SPMD uniformity: every wave is kind-uniform (all active stages run the
 same instruction), so warmup/cooldown idleness is masked compute — the
@@ -122,6 +125,8 @@ class PipelineProgram:
     stacked: bool
     param_sh: Any
     opt_sh: Any
+    bind_fn: Callable = None          # canonical -> device-major (jitted)
+    readout_fn: Callable = None       # device-major -> canonical (jitted)
     meta: Dict[str, int] = field(default_factory=dict)
 
     @property
@@ -141,11 +146,31 @@ class PipelineProgram:
             else jax.device_put(x, sh), tree, shardings)
 
     def step(self, params, opt_state, batch, alive=None):
+        """One step over DEVICE-MAJOR carried state (see module doc);
+        ``bind_state`` converts canonical state once, the return value
+        feeds the next step directly, and ``readout_state`` recovers
+        the canonical order at checkpoint/readout boundaries."""
         if alive is None:
             alive = jnp.ones((self.pc.n,), jnp.float32)
         params = self._commit(params, self.param_sh)
         opt_state = self._commit(opt_state, self.opt_sh)
         return self.jitted(params, opt_state, batch, alive)
+
+    def bind_state(self, params, opt_state):
+        """Canonical layer order -> this program's device-major chunk
+        layout (identity at v == 1). Pay once at program bind/restore;
+        every subsequent step carries the returned layout."""
+        if self.bind_fn is None:
+            return params, opt_state
+        return self.bind_fn(params, opt_state)
+
+    def readout_state(self, params, opt_state):
+        """Device-major carried state -> canonical layer order, for
+        checkpoints, equality checks and final readout. A pure row
+        gather: the round-trip is bitwise exact."""
+        if self.readout_fn is None:
+            return params, opt_state
+        return self.readout_fn(params, opt_state)
 
     def reduce_metrics(self, pm: Dict[str, jax.Array]) -> Dict[str, Any]:
         return reduce_worker_metrics(pm, self.meta)
@@ -382,12 +407,15 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                    out_specs=(param_ps, opt_ps, P(axis)),
                    check_rep=False)
 
+    # the step is compiled over the device-major layout directly —
+    # carried state stays put between steps, so the interleaved program
+    # has NO per-step layout permutes (the old canonical-surface design
+    # re-gathered params + both Adam moments in and out every step).
+    # The canonical view moves behind explicit jitted converters, paid
+    # only at bind / checkpoint / readout boundaries.
+    jitted = jax.jit(sm)
+    bind_fn = readout_fn = None
     if v > 1:
-        # the program surface keeps the CANONICAL layer order: permute
-        # the stacked rows to the device-major chunk layout going in,
-        # un-permute the updated params coming out (static gathers
-        # inside the same jit — checkpoints/optimizer state/equality
-        # checks never see the interleaved placement)
         to_dev = jnp.asarray(chunk_perm)
         to_can = jnp.asarray(chunk_inv)
 
@@ -396,19 +424,14 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                 lambda p: jnp.take(p, idx, axis=0), tree["blocks"])
             return {**tree, "blocks": blk}
 
-        def permute_opt(o, idx):
-            return OptState(step=o.step, mu=permute_blocks(o.mu, idx),
-                            nu=permute_blocks(o.nu, idx))
+        def permute_state(params, opt_state, idx):
+            return (permute_blocks(params, idx),
+                    OptState(step=opt_state.step,
+                             mu=permute_blocks(opt_state.mu, idx),
+                             nu=permute_blocks(opt_state.nu, idx)))
 
-        def step_fn(params, opt_state, batch, alive):
-            new_p, new_o, pm = sm(permute_blocks(params, to_dev),
-                                  permute_opt(opt_state, to_dev),
-                                  batch, alive)
-            return (permute_blocks(new_p, to_can),
-                    permute_opt(new_o, to_can), pm)
-    else:
-        step_fn = sm
-    jitted = jax.jit(step_fn)
+        bind_fn = jax.jit(lambda p, o: permute_state(p, o, to_dev))
+        readout_fn = jax.jit(lambda p, o: permute_state(p, o, to_can))
     named = lambda ps: NamedSharding(mesh, ps)
     is_p = lambda x: isinstance(x, P)
     param_sh = jax.tree_util.tree_map(named, param_ps, is_leaf=is_p)
@@ -427,4 +450,6 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
     return PipelineProgram(key=key, pc=pc, mesh=mesh, sched=sched,
                            stage_map=stage_map, interleave=v,
                            layout=layout, jitted=jitted, stacked=stacked,
-                           param_sh=param_sh, opt_sh=opt_sh, meta=meta)
+                           param_sh=param_sh, opt_sh=opt_sh,
+                           bind_fn=bind_fn, readout_fn=readout_fn,
+                           meta=meta)

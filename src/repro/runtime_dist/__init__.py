@@ -1,0 +1,36 @@
+"""Multi-host elastic phaser runtime (DESIGN.md §11).
+
+The skip-list control plane partitioned across N processes: each host
+owns its own protocol actor, the coordinator owns the HEAD sentinel, and
+envelopes whose destination lives elsewhere ride a message transport
+(in-process fabric or AF_UNIX sockets) that preserves the per-(src, dst)
+FIFO the protocol assumes. Membership churn happens at whole-host
+granularity through the same two-phase structural ops; every epoch
+boundary re-derives the oracle on every survivor, checks each local
+partition against it, and re-commits the per-process program cache.
+
+Import note: everything here except ``coordinator`` is jax-free, so
+control-plane-only worker processes never pay the jax import. The
+coordinator (which can drive data-plane steps and the strike policy)
+loads lazily on attribute access.
+"""
+from .agent import HostAgent
+from .exchange import exchange_schedule, run_schedule_rounds
+from .plane import COORD, PartitionedNetwork, ShardPhaser, default_owner
+from .transport import (Endpoint, InprocEndpoint, InprocFabric,
+                        SocketEndpoint, fabric_dir)
+
+_LAZY = ("DistCoordinator", "DistEpoch", "HostEvent", "InprocCluster",
+         "SocketCluster")
+
+__all__ = ["HostAgent", "exchange_schedule", "run_schedule_rounds",
+           "COORD", "PartitionedNetwork", "ShardPhaser", "default_owner",
+           "Endpoint", "InprocEndpoint", "InprocFabric", "SocketEndpoint",
+           "fabric_dir"] + list(_LAZY)
+
+
+def __getattr__(name):   # PEP 562: keep worker imports jax-free
+    if name in _LAZY:
+        from . import coordinator
+        return getattr(coordinator, name)
+    raise AttributeError(name)

@@ -1,0 +1,345 @@
+"""HostAgent: one process's slice of the multi-host elastic runtime.
+
+Owns the process's ``ShardPhaser`` (control plane) and, when a data
+plane is configured, the process's hierarchical sync programs: an
+epoch-aware ``ProgramCache`` keyed by the *process-level* collective,
+re-committed at every churn epoch boundary so each surviving host
+re-lowers its slice of the composed program.
+
+The agent is driven entirely through ``handle(cmd) -> reply`` — the
+same dict-command surface whether the coordinator calls it directly
+(in-process cluster) or ships frames over sockets (``worker.py``). jax
+and the model stack import lazily inside the data-plane handlers, so a
+control-plane-only agent (the latency benchmark's workers) never pays
+the jax import.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.phaser import SCSL, SNSL
+from ..core.skiplist import HEAD
+from .plane import COORD, ShardPhaser, default_owner
+from .transport import Endpoint
+
+
+class HostAgent:
+    """``cfg`` (JSON-serializable, identical on every process except
+    ``device_slice``):
+
+      seed, p, max_height   — topology identity
+      live, demoted         — initial membership view
+      proc_kind             — process-level schedule kind
+      data                  — None (control-plane only) or the model
+                              config: {arch, reduced, layers, batch,
+                              seq, lr, steps, local_kind, devices,
+                              device_slice, ckpt_dir}
+    """
+
+    def __init__(self, pid: int, endpoint: Endpoint, cfg: Dict):
+        self.pid = pid
+        self.endpoint = endpoint
+        self.cfg = cfg
+        self.proc_kind = cfg.get("proc_kind", "phaser_scsl")
+        self.axis_name = cfg.get("axis", "data")
+        self.shard = ShardPhaser(
+            pid, endpoint,
+            live=cfg.get("live", ()),
+            p=cfg.get("p", 0.5), seed=cfg.get("seed", 0),
+            max_height=cfg.get("max_height", 32),
+            demoted=cfg.get("demoted", ()))
+        self.data_cfg = cfg.get("data")
+        self._dp = None            # lazily-built data plane dict
+        self._deferred: List = []  # env frames deferred during a step
+
+    # ------------------------------------------------------------ data plane
+    def _data_plane(self) -> Dict[str, Any]:
+        if self._dp is not None:
+            return self._dp
+        assert self.data_cfg is not None, "no data plane configured"
+        import jax
+        from ..collective_exec import (ProgramCache,
+                                       build_hier_gradsync_program)
+        from ..models.registry import get_api, get_config
+        from ..optim import AdamW
+        d = self.data_cfg
+        cfg = get_config(d.get("arch", "smollm-135m"))
+        if d.get("reduced", True):
+            cfg = cfg.reduced(**({"n_layers": d["layers"]}
+                                 if d.get("layers") else {}))
+        api = get_api(cfg)
+        opt = AdamW(lr=d.get("lr", 3e-3),
+                    warmup=d.get("warmup", 10),
+                    total_steps=d.get("steps", 100))
+        devs = jax.devices()
+        sl = d.get("device_slice")
+        if sl is not None:
+            devs = devs[sl[0]:sl[0] + sl[1]]
+        else:
+            devs = devs[:d.get("devices", 1)]
+        m = len(devs)
+        local_kind = d.get("local_kind", "phaser_scsl")
+        cache = ProgramCache(
+            lambda pc: build_hier_gradsync_program(
+                api, opt, pc, local_devices=devs,
+                local_kind=local_kind),
+            extra_key=("hier", m, local_kind))
+        params = api.init_params(jax.random.key(d.get("init_seed", 0)))
+        opt_state = opt.init(params)
+        ckpt = None
+        if d.get("ckpt_dir"):
+            from ..checkpoint import CheckpointManager
+            ckpt = CheckpointManager(d["ckpt_dir"], async_write=False)
+        self._dp = {"api": api, "opt": opt, "cfg": cfg, "devices": devs,
+                    "m": m, "cache": cache, "params": params,
+                    "opt_state": opt_state, "ckpt": ckpt,
+                    "local_kind": local_kind, "pending": None}
+        return self._dp
+
+    def _proc_collective(self):
+        from ..core.collective import PhaserCollective
+        keys = tuple(sorted(self.shard.live))
+        return PhaserCollective(len(keys), self.axis_name,
+                                kind=self.proc_kind,
+                                seed=self.shard.seed, p=self.shard.p,
+                                keys=keys,
+                                leaf_keys=tuple(sorted(
+                                    self.shard.demoted
+                                    & self.shard.live)))
+
+    def program_key(self) -> Dict:
+        """JSON identity of the current epoch's hierarchical program:
+        the elastic ``epoch_key`` (member set = the *local* device
+        ranks) extended with the process set — what checkpoint
+        manifests must record so resume can pre-compile the
+        surviving-host program (not the pre-churn one)."""
+        dp = self._data_plane()
+        return {"process_set": sorted(self.shard.live),
+                "member_set": list(range(dp["m"])),
+                "kind": self.proc_kind,
+                "local_kind": dp["local_kind"],
+                "seed": self.shard.seed, "p": self.shard.p,
+                "axis": self.axis_name,
+                "leaf_keys": sorted(self.shard.demoted
+                                    & self.shard.live)}
+
+    def _local_batch(self, step: int):
+        import numpy as np
+        from ..data.synthetic import make_batch
+        from ..utils import to_device_copy
+        dp = self._data_plane()
+        d = self.data_cfg
+        m = dp["m"]
+        # global worker id of (process key, local device) — a process's
+        # data stream follows its phaser key, like worker streams in the
+        # single-host elastic runtime
+        bs = [make_batch(dp["cfg"].vocab_size, d.get("batch", 4),
+                         d.get("seq", 64),
+                         seed=1000 + self.pid * m + i, step=step)
+              for i in range(m)]
+        return {k: to_device_copy(np.stack([b[k] for b in bs]))
+                for k in bs[0]}
+
+    # ------------------------------------------------------------- commands
+    def handle(self, cmd: Dict) -> Dict:
+        op = cmd["op"]
+        fn = getattr(self, f"_op_{op}", None)
+        assert fn is not None, f"agent {self.pid}: unknown op {op!r}"
+        try:
+            out = fn(cmd) or {}
+        except Exception as e:  # surfaced by the coordinator
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        return {"ok": True, **out}
+
+    def _op_ping(self, c):
+        return {"pid": self.pid}
+
+    def _op_create_member(self, c):
+        self.shard.create_member(c["new"], c["parent"],
+                                 c.get("mode", "SIG_WAIT"))
+
+    def _op_start_insert(self, c):
+        self.shard.start_insert(c["new"], c["parent"])
+
+    def _op_drop(self, c):
+        self.shard.drop(c["key"])
+
+    def _op_demote(self, c):
+        self.shard.demote(c["key"])
+
+    def _op_repromote(self, c):
+        self.shard.repromote(c["key"])
+
+    def _op_signal(self, c):
+        self.shard.signal(c.get("key", self.pid))
+
+    def _op_note_membership(self, c):
+        self.shard.note_membership(c["live"], c["demoted"])
+
+    def _op_status(self, c):
+        self.shard.pump()
+        sent, received = self.shard.flight_counters()
+        return {"idle": self.shard.net.idle(), "sent": sent,
+                "received": received,
+                "released": self.shard.released(),
+                "max_depth": self.shard.net.max_depth,
+                "messages": dict(self.shard.net.sent)}
+
+    def _op_derive_epoch(self, c):
+        """Boundary: install the membership view, verify this shard's
+        partition against the global oracle, fingerprint, and re-commit
+        the process-level program cache."""
+        self.shard.note_membership(c["live"], c["demoted"])
+        sl = self.shard.oracle()
+        views = sl.partition(self.shard.owner_of)
+        view = views.get(self.pid)
+        if view is not None:
+            for lid in (SCSL, SNSL):
+                d = view.diff(self.shard.local_states(lid))
+                assert not d, f"pid {self.pid} lid {lid}: {d}"
+        out = {"fingerprint": sl.fingerprint(), "epoch": c.get("index")}
+        if self.data_cfg is not None and self.pid in self.shard.live:
+            dp = self._data_plane()
+            pc = self._proc_collective()
+            dp["cache"].get(pc)            # re-lower this host's slice
+            out["cache"] = dp["cache"].stats()
+            out["program_key"] = self.program_key()
+        return out
+
+    # ------------------------------------------------------------ stepping
+    def _op_step_local(self, c):
+        """Local half: per-device grads + local reduce -> flat buffer."""
+        import jax.numpy as jnp
+        import numpy as np
+        dp = self._data_plane()
+        t0 = time.perf_counter()
+        prog = dp["cache"].get(self._proc_collective())
+        params = prog._replicated(dp["params"])
+        opt_state = prog._replicated(dp["opt_state"])
+        batch = self._local_batch(c["step"])
+        alive = jnp.ones((dp["m"],), jnp.float32)
+        flat, pm = prog.local_grads(params, opt_state, batch, alive)
+        dp["params"], dp["opt_state"] = params, opt_state
+        dp["pending"] = {"prog": prog, "t0": t0,
+                         "loss": float(np.asarray(pm["loss"]).sum()
+                                       / dp["m"])}
+        return {"buf": np.asarray(flat)}
+
+    def _op_step_apply(self, c):
+        """Global half: apply the fully-reduced buffer."""
+        import jax.numpy as jnp
+        import numpy as np
+        dp = self._data_plane()
+        pend = dp["pending"]
+        assert pend is not None, "step_apply without step_local"
+        dp["pending"] = None
+        prog = pend["prog"]
+        new_p, new_o, om = prog.apply(dp["params"], dp["opt_state"],
+                                      jnp.asarray(c["buf"]))
+        dp["params"], dp["opt_state"] = new_p, new_o
+        if c.get("delay"):
+            time.sleep(c["delay"])   # test hook: straggling process
+        return {"loss": pend["loss"],
+                "dt": time.perf_counter() - pend["t0"],
+                "gnorm": float(np.asarray(om.get("gnorm", 0.0)))}
+
+    def _op_step(self, c):
+        """Whole step with peer-to-peer exchange over the transport
+        (socket mode): local grads, the process-level schedule's rounds
+        as real frames between the live processes, then apply."""
+        import numpy as np
+        from .exchange import exchange_schedule
+        local = self._op_step_local(c)
+        dp = self._data_plane()
+        prog = dp["pending"]["prog"]
+        pids = list(prog.pc_proc.keys)
+        rank = pids.index(self.pid)
+        step = c["step"]
+
+        def send(dst, rnd, arr):
+            self.endpoint.send(dst, "red", (step, rnd, arr))
+
+        def recv(src, rnd):
+            deadline = time.monotonic() + c.get("timeout", 300.0)
+            while True:
+                frame = self.endpoint.recv(timeout=1.0)
+                if frame is None:
+                    assert time.monotonic() < deadline, \
+                        f"pid {self.pid}: no round {rnd} frame from {src}"
+                    continue
+                fsrc, tag, payload = frame
+                if tag == "red" and fsrc == src \
+                        and payload[0] == step and payload[1] == rnd:
+                    return payload[2]
+                # anything else (stray env) waits until the step ends
+                self._deferred.append(frame)
+
+        buf = exchange_schedule(prog.proc_schedule, rank, pids,
+                                local["buf"], send=send, recv=recv)
+        return self._op_step_apply({**c, "buf": buf})
+
+    def drain_deferred(self) -> List:
+        out, self._deferred = self._deferred, []
+        return out
+
+    # --------------------------------------------------------- checkpointing
+    def _op_save(self, c):
+        dp = self._data_plane()
+        assert dp["ckpt"] is not None, "no ckpt_dir configured"
+        dp["ckpt"].save(c["step"], dp["params"], dp["opt_state"],
+                        extra={"process_set": sorted(self.shard.live)},
+                        program_key=self.program_key())
+        return {"step": c["step"]}
+
+    def _op_precompile(self, c):
+        """Resume pre-compile from a manifest program key: build the
+        program for the key's *process set* — the surviving hosts —
+        before the first step touches the cache."""
+        from ..core.collective import PhaserCollective
+        dp = self._data_plane()
+        pk = c["program_key"]
+        pc = PhaserCollective(len(pk["process_set"]), pk["axis"],
+                              kind=pk["kind"], seed=pk["seed"],
+                              p=pk["p"],
+                              keys=tuple(pk["process_set"]),
+                              leaf_keys=tuple(pk.get("leaf_keys", ())))
+        before = dp["cache"].stats()["misses"]
+        prog = dp["cache"].get(pc)
+        return {"compiled": dp["cache"].stats()["misses"] > before,
+                "keys": list(prog.pc_proc.keys)}
+
+    def _op_manifest_key(self, c):
+        """Read the program key recorded in the checkpoint manifest —
+        the process set that was live at save time, i.e. the program a
+        resume must pre-compile (manifest-only, no array reads)."""
+        dp = self._data_plane()
+        assert dp["ckpt"] is not None, "no ckpt_dir configured"
+        return {"program_key": dp["ckpt"].program_key(c.get("step")),
+                "step": c.get("step", dp["ckpt"].latest_step())}
+
+    def _op_restore(self, c):
+        dp = self._data_plane()
+        assert dp["ckpt"] is not None, "no ckpt_dir configured"
+        from ..optim import OptState
+        tpl = {"params": dp["params"], "opt": dp["opt_state"]._asdict()}
+        step, tree, extra = dp["ckpt"].restore(tpl, c.get("step"))
+        dp["params"] = tree["params"]
+        dp["opt_state"] = OptState(**tree["opt"])
+        return {"step": step, "extra": extra}
+
+    def _op_loss_probe(self, c):
+        """Deterministic probe: loss of the current params on a fixed
+        batch — equal across processes iff params stayed replicated."""
+        import numpy as np
+        dp = self._data_plane()
+        from ..data.synthetic import make_batch
+        b = make_batch(dp["cfg"].vocab_size,
+                       self.data_cfg.get("batch", 4),
+                       self.data_cfg.get("seq", 64),
+                       seed=c.get("seed", 7), step=c.get("step", 0))
+        loss, _ = dp["api"].loss_fn(dp["params"], b)
+        return {"loss": float(np.asarray(loss))}
+
+    def _op_shutdown(self, c):
+        return {"bye": True}

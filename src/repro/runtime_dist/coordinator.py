@@ -1,0 +1,524 @@
+"""DistCoordinator: membership epochs over a cluster of host processes.
+
+The single-process ``ElasticPhaserRuntime`` drives churn through one
+``DistPhaser`` holding every actor. Here the same epoch lifecycle runs
+over a *partitioned* control plane: the coordinator owns the HEAD
+sentinel (pid ``COORD``), each host process owns its own participant
+actor, and every structural op is the paper's two-phase dance executed
+with real inter-process messages — eager level-0 splice initiated on the
+parent's owner, lazy multi-link handoff riding the same transport, then
+a quiescence wave before the membership view is re-broadcast.
+
+Epoch boundaries stay the swap point: at ``advance()`` after churn, each
+surviving process re-derives the skip-list oracle over the *replicated*
+membership view, checks its own partition of protocol state against it,
+fingerprints the whole structure, and re-commits its process-level
+program cache. The coordinator asserts all fingerprints (its own
+included) agree — the distributed analogue of ``verify_epoch``.
+
+Two cluster fabrics drive the same coordinator:
+
+* ``InprocCluster``  — N logical processes in one address space over
+  ``InprocFabric``; deterministic, used by tier-1 tests and the
+  ``--processes N`` trainer (device slices of one jax runtime).
+* ``SocketCluster``  — real OS processes (``worker.py``) over AF_UNIX
+  sockets; quiescence needs the Mattern-style double poll; used by the
+  control-plane latency benchmark and the slow churn test.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core.phaser import SCSL, SNSL
+from .agent import HostAgent
+from .exchange import run_schedule_rounds
+from .plane import COORD, ShardPhaser
+from .transport import InprocFabric, SocketEndpoint, fabric_dir
+
+
+@dataclass
+class HostEvent:
+    step: int
+    kind: str    # "join" | "leave" | "fail" | "straggle" | "demote" | "repromote"
+    pid: int
+
+
+@dataclass(frozen=True)
+class DistEpoch:
+    """One membership epoch of the multi-host runtime. No compiled
+    collective rides here (each process compiles its own slice); the
+    epoch's identity is the fingerprint every process agreed on."""
+    index: int
+    phase_start: int
+    live: Tuple[int, ...]
+    demoted: Tuple[int, ...]
+    fingerprint: str
+    program_key: Optional[Dict] = None
+
+    @property
+    def n(self) -> int:
+        return len(self.live)
+
+
+class InprocCluster:
+    """All host agents in this address space, coordinator included."""
+
+    peer_exchange = False   # steps run split (local halves + central rounds)
+
+    def __init__(self):
+        self.fabric = InprocFabric()
+        self.ep = self.fabric.endpoint(COORD)
+        self.agents: Dict[int, HostAgent] = {}
+        self.env_sink: Optional[Callable] = None   # unused (pump is direct)
+
+    def add_host(self, pid: int, cfg: Dict) -> None:
+        self.agents[pid] = HostAgent(pid, self.fabric.endpoint(pid), cfg)
+
+    def call(self, pid: int, cmd: Dict) -> Dict:
+        r = self.agents[pid].handle(cmd)
+        assert r.get("ok"), (pid, cmd.get("op"), r)
+        return r
+
+    def post(self, pid: int, cmd: Dict):
+        return self.call(pid, cmd)
+
+    def collect(self, handle) -> Dict:
+        return handle
+
+    def drop_host(self, pid: int) -> None:
+        del self.agents[pid]
+        self.fabric.drop_endpoint(pid)
+
+    def quiesce(self, coord_shard: ShardPhaser, limit: int = 100_000) -> None:
+        """Synchronous sweeps: pump every shard until a full round moves
+        nothing and no frame sits in any inbox."""
+        for _ in range(limit):
+            moved = coord_shard.pump()
+            for pid in sorted(self.agents):
+                moved += self.agents[pid].shard.pump()
+            if moved == 0 and self.fabric.pending() == 0:
+                return
+        raise AssertionError("in-process cluster did not quiesce")
+
+    def close(self) -> None:
+        self.agents.clear()
+
+
+class SocketCluster:
+    """Host agents as OS processes (``repro.runtime_dist.worker``) over
+    AF_UNIX sockets. The coordinator endpoint shares its inbox between
+    protocol envelopes (routed to ``env_sink``) and command replies."""
+
+    peer_exchange = True    # steps run whole, with peer-to-peer rounds
+
+    def __init__(self, *, control_only: bool = False,
+                 python: Optional[str] = None):
+        self.dir = fabric_dir()
+        self.ep = SocketEndpoint(COORD, self.dir)
+        self.procs: Dict[int, subprocess.Popen] = {}
+        self.env_sink: Optional[Callable] = None
+        self.control_only = control_only
+        self.python = python or sys.executable
+        self._cid = 0
+        self._reps: Dict[int, Dict] = {}
+        # final counters of evicted hosts: their frames stay part of the
+        # global sent/received balance after the process is gone
+        self._ghost_sent = 0
+        self._ghost_recv = 0
+
+    def _spawn(self, pid: int, cfg: Dict) -> None:
+        env = dict(os.environ)
+        root = os.getcwd()
+        src = os.path.join(root, "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        data = cfg.get("data")
+        if data is not None:
+            env["JAX_PLATFORMS"] = "cpu"
+            env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                                f"{data.get('devices', 1)}")
+        self.procs[pid] = subprocess.Popen(
+            [self.python, "-m", "repro.runtime_dist.worker",
+             "--dir", self.dir, "--pid", str(pid)],
+            env=env, cwd=root)
+
+    def add_host(self, pid: int, cfg: Dict) -> None:
+        self._spawn(pid, cfg)
+        r = self.call(pid, {"op": "init", "cfg": cfg}, timeout=600.0)
+        assert r.get("ok"), (pid, r)
+
+    def _drain(self, timeout: float) -> bool:
+        frame = self.ep.recv(timeout=timeout)
+        if frame is None:
+            return False
+        src, tag, payload = frame
+        if tag == "rep":
+            cid, reply = payload
+            self._reps[cid] = reply
+        elif tag == "env":
+            assert self.env_sink is not None
+            self.env_sink(payload)
+        else:
+            raise AssertionError(f"coordinator got {tag} frame from {src}")
+        return True
+
+    def post(self, pid: int, cmd: Dict):
+        self._cid += 1
+        cid = self._cid
+        self.ep.send(pid, "cmd", (cid, cmd))
+        return cid
+
+    def collect(self, cid, timeout: float = 600.0) -> Dict:
+        deadline = time.monotonic() + timeout
+        while cid not in self._reps:
+            self._drain(timeout=0.05)
+            assert time.monotonic() < deadline, f"no reply for cmd {cid}"
+        r = self._reps.pop(cid)
+        assert r.get("ok"), (cid, r)
+        return r
+
+    def call(self, pid: int, cmd: Dict, timeout: float = 600.0) -> Dict:
+        return self.collect(self.post(pid, cmd), timeout=timeout)
+
+    def drop_host(self, pid: int) -> None:
+        try:
+            r = self.call(pid, {"op": "status"}, timeout=30.0)
+            self._ghost_sent += r["sent"]
+            self._ghost_recv += r["received"]
+            self.call(pid, {"op": "shutdown"}, timeout=30.0)
+        finally:
+            p = self.procs.pop(pid)
+            p.wait(timeout=60)
+            self.ep.forget_peer(pid)
+
+    def quiesce(self, coord_shard: ShardPhaser, limit: int = 10_000) -> None:
+        """Mattern-style termination wave: poll every host's (idle, sent,
+        received) plus the coordinator's own; done after two consecutive
+        polls that are stable, all-idle, and globally balanced."""
+        stable = 0
+        prev = None
+        for _ in range(limit):
+            while self._drain(timeout=0.01):
+                pass
+            vec = []
+            for pid in sorted(self.procs):
+                r = self.call(pid, {"op": "status"})
+                vec.append((pid, r["idle"], r["sent"], r["received"]))
+            while self._drain(timeout=0.01):
+                pass
+            ms, mr = coord_shard.flight_counters()
+            vec.append((COORD, coord_shard.net.idle(), ms, mr))
+            idle = all(v[1] for v in vec)
+            balanced = (sum(v[2] for v in vec) + self._ghost_sent
+                        == sum(v[3] for v in vec) + self._ghost_recv)
+            if idle and balanced and vec == prev:
+                stable += 1
+                if stable >= 2:
+                    return
+            else:
+                stable = 0
+            prev = vec
+        raise AssertionError("socket cluster did not quiesce")
+
+    def close(self) -> None:
+        for pid in list(self.procs):
+            try:
+                self.drop_host(pid)
+            except Exception:
+                self.procs.pop(pid, None)
+        self.ep.close()
+
+
+class DistCoordinator:
+    """Epoch lifecycle of ``ElasticPhaserRuntime``, generalized to
+    whole-host churn over a cluster fabric."""
+
+    def __init__(self, cluster, n_hosts: int, *, seed: int = 0,
+                 p: float = 0.5, proc_kind: str = "phaser_scsl",
+                 axis_name: str = "data", data: Optional[Dict] = None,
+                 data_for: Optional[Callable[[int], Dict]] = None):
+        self.cluster = cluster
+        self.seed = seed
+        self.p = p
+        self.proc_kind = proc_kind
+        self.axis_name = axis_name
+        self.data = data
+        self._data_for = data_for or (lambda pid: dict(data)
+                                      if data is not None else None)
+        self.live: Set[int] = set(range(n_hosts))
+        self.demoted: Set[int] = set()
+        self.next_pid = n_hosts
+        self.events: List[HostEvent] = []
+        self.epochs: List[DistEpoch] = []
+        self._dirty = False
+        self._step = 0
+        self._strikes: Dict[int, int] = {}
+        self._on_epoch: List[Callable[[DistEpoch, DistEpoch], None]] = []
+        self.shard = ShardPhaser(COORD, cluster.ep, live=self.live,
+                                 p=p, seed=seed)
+        if cluster.env_sink is None:
+            cluster.env_sink = self._ingest_env
+        for pid in sorted(self.live):
+            cluster.add_host(pid, self._cfg_for(pid))
+        self.epochs.append(self._derive_boundary(0, 0))
+
+    # ------------------------------------------------------------ plumbing
+    def _ingest_env(self, env) -> None:
+        self.shard.net.ingest(env)
+        self.shard.net.deliver_all()
+
+    def _cfg_for(self, pid: int) -> Dict:
+        return {"seed": self.seed, "p": self.p, "axis": self.axis_name,
+                "proc_kind": self.proc_kind,
+                "live": sorted(self.live), "demoted": sorted(self.demoted),
+                "data": self._data_for(pid)}
+
+    def _quiesce(self) -> None:
+        self.cluster.quiesce(self.shard)
+
+    def _broadcast_membership(self) -> None:
+        live, dem = sorted(self.live), sorted(self.demoted)
+        self.shard.note_membership(live, dem)
+        for pid in live:
+            self.cluster.call(pid, {"op": "note_membership",
+                                    "live": live, "demoted": dem})
+
+    # ------------------------------------------------------------- epochs
+    @property
+    def epoch(self) -> DistEpoch:
+        return self.epochs[-1]
+
+    @property
+    def pending_churn(self) -> bool:
+        return self._dirty
+
+    def on_epoch(self, fn: Callable[[DistEpoch, DistEpoch], None]) -> None:
+        self._on_epoch.append(fn)
+
+    def _derive_boundary(self, index: int, phase_start: int) -> DistEpoch:
+        """Every process (coordinator included) re-derives the oracle,
+        checks its partition, fingerprints, re-commits its cache."""
+        live, dem = sorted(self.live), sorted(self.demoted)
+        self.shard.note_membership(live, dem)
+        sl = self.shard.oracle()
+        view = sl.partition(self.shard.owner_of).get(COORD)
+        if view is not None:
+            for lid in (SCSL, SNSL):
+                d = view.diff(self.shard.local_states(lid))
+                assert not d, f"coordinator lid {lid}: {d}"
+        fps = {COORD: sl.fingerprint()}
+        pk = None
+        for pid in live:
+            r = self.cluster.call(pid, {"op": "derive_epoch", "index": index,
+                                        "live": live, "demoted": dem})
+            fps[pid] = r["fingerprint"]
+            pk = r.get("program_key", pk)
+        assert len(set(fps.values())) == 1, f"fingerprint split: {fps}"
+        return DistEpoch(index, phase_start, tuple(live), tuple(dem),
+                         fps[COORD], pk)
+
+    # ------------------------------------------------------------- churn
+    def request_join(self, parent: Optional[int] = None, *,
+                     step: Optional[int] = None) -> int:
+        """Host arrival: spawn/attach the process, materialize its actor
+        on its own shard (fast single-link path starts at the parent's
+        owner), run the splice + lazy promotion to quiescence."""
+        pid = self.next_pid
+        self.next_pid += 1
+        if parent is None:
+            parent = min(self.live)
+        self.cluster.add_host(pid, self._cfg_for(pid))
+        self.cluster.call(pid, {"op": "create_member", "new": pid,
+                                "parent": parent})
+        self.live.add(pid)
+        self.cluster.call(parent, {"op": "start_insert", "new": pid,
+                                   "parent": parent})
+        self._quiesce()
+        self._broadcast_membership()
+        self.events.append(HostEvent(self._at(step), "join", pid))
+        self._dirty = True
+        return pid
+
+    def request_leave(self, pid: int, *, fail: bool = False,
+                      step: Optional[int] = None) -> None:
+        """Host eviction: the existing demote→evict path — DEREG lowers
+        the expectation, level-by-level unlink runs to quiescence, then
+        the process leaves the cluster."""
+        assert pid in self.live, (pid, sorted(self.live))
+        self.cluster.call(pid, {"op": "drop", "key": pid})
+        self._quiesce()
+        self.live.discard(pid)
+        self.demoted.discard(pid)
+        self._strikes.pop(pid, None)
+        self._broadcast_membership()
+        self.cluster.drop_host(pid)
+        self.events.append(HostEvent(self._at(step),
+                                     "fail" if fail else "leave", pid))
+        self._dirty = True
+
+    def request_demote(self, pid: int, *, step: Optional[int] = None) -> None:
+        assert pid in self.live
+        if pid in self.demoted:
+            return
+        self.cluster.call(pid, {"op": "demote", "key": pid})
+        self._quiesce()
+        self.demoted.add(pid)
+        self._broadcast_membership()
+        self.events.append(HostEvent(self._at(step), "demote", pid))
+        self._dirty = True
+
+    def request_repromote(self, pid: int, *,
+                          step: Optional[int] = None) -> None:
+        if pid not in self.live or pid not in self.demoted:
+            return
+        self.cluster.call(pid, {"op": "repromote", "key": pid})
+        self._quiesce()
+        self.demoted.discard(pid)
+        self._broadcast_membership()
+        self.events.append(HostEvent(self._at(step), "repromote", pid))
+        self._dirty = True
+
+    def _at(self, step: Optional[int]) -> int:
+        return self._step if step is None else step
+
+    # ----------------------------------------------------------- stepping
+    def advance(self, *, step: Optional[int] = None) -> int:
+        """One phase: every live host signals its own actor, the
+        protocol quiesces across processes, and a dirty boundary derives
+        (and verifies) the next epoch on every survivor."""
+        for pid in sorted(self.live):
+            self.cluster.call(pid, {"op": "signal"})
+        self._quiesce()
+        released = self.shard.released()
+        if self._dirty:
+            old = self.epoch
+            new = self._derive_boundary(old.index + 1, released + 1)
+            self.epochs.append(new)
+            self._dirty = False
+            for fn in self._on_epoch:
+                fn(old, new)
+        if step is not None:
+            self._step = step
+        self._step += 1
+        return released
+
+    def train_step(self, step: int) -> Dict[int, Dict]:
+        """One data-parallel step across the cluster: local grads + local
+        reduce on every host, the process-level schedule between hosts,
+        jitted apply everywhere. Socket mode exchanges the rounds
+        peer-to-peer; in-process mode mirrors them centrally (bitwise
+        identical — see ``exchange``)."""
+        pids = sorted(self.live)
+        if self.cluster.peer_exchange:
+            handles = [(pid, self.cluster.post(pid, {"op": "step",
+                                                     "step": step}))
+                       for pid in pids]
+            return {pid: self.cluster.collect(h) for pid, h in handles}
+        bufs = {pid: self.cluster.call(pid, {"op": "step_local",
+                                             "step": step})["buf"]
+                for pid in pids}
+        red = run_schedule_rounds(self._proc_schedule(), bufs)
+        return {pid: self.cluster.call(pid, {"op": "step_apply",
+                                             "buf": red[pid]})
+                for pid in pids}
+
+    def _proc_schedule(self):
+        from ..core.collective import PhaserCollective
+        keys = tuple(sorted(self.live))
+        pc = PhaserCollective(len(keys), self.axis_name,
+                              kind=self.proc_kind, seed=self.seed,
+                              p=self.p, keys=keys,
+                              leaf_keys=tuple(sorted(self.demoted)))
+        sched = pc.unified_schedule()
+        assert sched is not None, self.proc_kind
+        return sched
+
+    # --------------------------------------------------------- stragglers
+    def record_step_times(self, step: int, times: Dict[int, float], *,
+                          slack: float = 3.0, demote_after: int = 2,
+                          evict_after: int = 3) -> List[int]:
+        """Whole-host straggler policy — the same ``StrikeEscalation``
+        the single-process runtime applies to workers, applied to
+        processes: straggle, demote to a leaf, then evict."""
+        from ..runtime_elastic.strikes import StrikeAction, StrikeEscalation
+        esc = StrikeEscalation(slack=slack, demote_after=demote_after,
+                               evict_after=evict_after,
+                               strikes=self._strikes)
+        evicted: List[int] = []
+
+        def apply(act: StrikeAction) -> None:
+            if act.action == "straggle":
+                self.events.append(HostEvent(step, "straggle", act.worker))
+            elif act.action == "evict":
+                self.request_leave(act.worker, fail=True, step=step)
+                evicted.append(act.worker)
+            elif act.action == "demote":
+                self.request_demote(act.worker, step=step)
+            elif act.action == "recover":
+                self.request_repromote(act.worker, step=step)
+
+        esc.observe(self.live, times, demoted=self.demoted, on_action=apply)
+        return evicted
+
+    # ------------------------------------------------------- checkpointing
+    def save_checkpoint(self, step: int) -> Dict:
+        """Boundary checkpoint, written by the lowest live host (its
+        manifest records the process set via the agent's program key)."""
+        return self.cluster.call(min(self.live), {"op": "save",
+                                                  "step": step})
+
+    def precompile_all(self, program_key: Dict) -> Dict[int, bool]:
+        """Compile (or cache-hit) the program identified by a manifest
+        key on every live host; returns pid -> freshly-compiled flag."""
+        return {pid: self.cluster.call(
+                    pid, {"op": "precompile",
+                          "program_key": program_key})["compiled"]
+                for pid in sorted(self.live)}
+
+    def restore_all(self, step: Optional[int] = None) -> int:
+        steps = {pid: self.cluster.call(pid, {"op": "restore",
+                                              **({"step": step}
+                                                 if step is not None
+                                                 else {})})["step"]
+                 for pid in sorted(self.live)}
+        assert len(set(steps.values())) == 1, steps
+        return next(iter(steps.values()))
+
+    def resume(self, step: Optional[int] = None) -> Dict:
+        """Resume from the checkpoint manifest: read the recorded
+        program key (the process set live AT SAVE TIME — after an
+        eviction that is the surviving-host set, not the boot set),
+        pre-compile that program on every live host, then restore the
+        arrays. The pre-compile runs BEFORE the restore so the first
+        post-resume step hits an already-built executable."""
+        rep = self.cluster.call(min(self.live),
+                                {"op": "manifest_key",
+                                 **({"step": step} if step is not None
+                                    else {})})
+        pk = rep["program_key"]
+        assert pk is not None, "checkpoint manifest has no program key"
+        compiled = self.precompile_all(pk)
+        restored = self.restore_all(step)
+        return {"step": restored, "program_key": pk,
+                "compiled": compiled}
+
+    # --------------------------------------------------------- inspection
+    def control_stats(self) -> Dict:
+        """Cluster-wide control-plane counters (quiescent state)."""
+        per = {pid: self.cluster.call(pid, {"op": "status"})
+               for pid in sorted(self.live)}
+        ms, mr = self.shard.flight_counters()
+        frames = sum(v["sent"] for v in per.values()) + ms
+        depth = max([v["max_depth"] for v in per.values()]
+                    + [self.shard.net.max_depth])
+        return {"live": sorted(self.live), "epoch": self.epoch.index,
+                "phase": self.shard.released(),
+                "remote_frames": frames, "critical_path": depth,
+                "per_host": per}
+
+    def close(self) -> None:
+        self.cluster.close()

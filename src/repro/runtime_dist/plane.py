@@ -1,0 +1,277 @@
+"""Partitioned phaser control plane: one logical skip list, N processes.
+
+``DistPhaser`` holds every protocol actor in one address space. Here the
+same actors are *sharded by ownership* (the PGAS global-view recipe of
+arXiv:2112.00068): process ``k`` owns the actor for participant key
+``k``; the coordinator (pid ``COORD = -1``) owns the HEAD sentinel —
+conveniently the same id as the HEAD key. ``PhaserActor`` is reused
+unmodified: its only facade needs are ``height_of`` (deterministic hash,
+computable anywhere), ``async_parent`` (populated on the joining key's
+owner), ``lists_done`` (asked only about the local rank) and
+``on_release`` (fires on the HEAD owner). Everything else the actors do
+is messaging, and ``PartitionedNetwork`` routes any envelope whose
+destination is remote through the transport endpoint; per-(src, dst)
+FIFO — the protocol's only ordering assumption — is preserved because
+each ordered pair maps onto one ordered stream.
+
+Quiescence becomes a distributed property: locally ``idle()`` plus
+globally "no frame in flight", which the coordinator establishes from
+the shards' matching remote sent/received counters (two stable polls —
+a Mattern-style termination wave; the in-process fabric needs no wave
+because delivery is synchronous).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
+
+from ..core.phaser import SCSL, SNSL, SIG_MODE, SIG_WAIT, WAIT_MODE, \
+    PhaserActor
+from ..core.runtime import Envelope, Network
+from ..core.skiplist import HEAD, SkipList, det_height
+from .transport import Endpoint
+
+COORD = -1  # coordinator pid == the HEAD sentinel key
+
+
+def default_owner(key: int) -> int:
+    """Participant key k lives on process k; HEAD on the coordinator."""
+    return COORD if key == HEAD else key
+
+
+class PartitionedNetwork(Network):
+    """The local slice of the cluster-wide network: envelopes for local
+    actors use the in-memory FIFO channels; remote ones leave through
+    the endpoint and are re-injected into the owner's channels by
+    ``ingest`` on arrival (same (src, dst) channel key, so delivery
+    order stays per-channel FIFO end to end)."""
+
+    def __init__(self, pid: int, endpoint: Endpoint,
+                 owner_of: Callable[[int], int] = default_owner):
+        super().__init__()
+        self.pid = pid
+        self.endpoint = endpoint
+        self.owner_of = owner_of
+        self.remote_sent = 0
+        self.remote_received = 0
+        # keys that left the membership: envelopes to them are swallowed,
+        # mirroring the monolithic network where a departed actor receives
+        # stale notifications (ADV fan-out books) and ignores them
+        self.dropped: Set[int] = set()
+        self.black_holed = 0
+
+    def post(self, env: Envelope) -> None:
+        if env.msg.dst in self.dropped:
+            self.black_holed += 1
+            return
+        owner = self.owner_of(env.msg.dst)
+        if owner == self.pid:
+            super().post(env)
+            return
+        self.sent[env.msg.kind] += 1
+        self.remote_sent += 1
+        self.endpoint.send(owner, "env", env)
+
+    def ingest(self, env: Envelope) -> None:
+        """Arrival of a remote envelope: enqueue without re-counting the
+        send (the source shard already did)."""
+        self.remote_received += 1
+        self.channels[(env.msg.src, env.msg.dst)].append(env)
+
+    def deliver_all(self, max_steps: int = 1_000_000) -> int:
+        """Round-robin local delivery to local idleness (remote sends
+        triggered along the way just leave through the endpoint)."""
+        n = 0
+        rr = 0
+        while not self.idle():
+            chans = self.nonempty_channels()
+            self.deliver_from(chans[rr % len(chans)])
+            rr += 1
+            n += 1
+            assert n <= max_steps, "local delivery did not quiesce"
+        return n
+
+
+class ShardPhaser:
+    """Per-process facade over the locally-owned protocol actors.
+
+    Mirrors the slice of ``DistPhaser``'s surface the actors and the
+    runtime need; global topology metadata (live keys, demotions, seed)
+    is replicated on every shard so each process can derive the oracle —
+    and therefore its own partition view — without communication."""
+
+    def __init__(self, pid: int, endpoint: Endpoint, *,
+                 live: Iterable[int], p: float = 0.5, seed: int = 0,
+                 max_height: int = 32,
+                 demoted: Iterable[int] = (),
+                 owner_of: Callable[[int], int] = default_owner,
+                 modes: Optional[Dict[int, str]] = None):
+        self.pid = pid
+        self.p = p
+        self.seed = seed
+        self.max_height = max_height
+        self.owner_of = owner_of
+        self.live: Set[int] = set(live)
+        self.demoted: Set[int] = set(demoted)
+        self.net = PartitionedNetwork(pid, endpoint, owner_of)
+        self.modes: Dict[int, str] = {k: SIG_WAIT for k in self.live}
+        if modes:
+            self.modes.update(modes)
+        self.async_parent: Dict[int, int] = {}
+        self.release_log: List[int] = []
+        self.actors: Dict[int, PhaserActor] = {}
+        local = [k for k in sorted(self.live) if owner_of(k) == pid]
+        if owner_of(HEAD) == pid:
+            local = [HEAD] + local
+        for k in local:
+            a = PhaserActor(k, self.net, self.modes.get(k, SIG_WAIT),
+                            phaser=self)
+            self.actors[k] = a
+            self.net.register(a)
+        sig = [k for k in sorted(self.live)
+               if self.modes[k] in (SIG_MODE, SIG_WAIT)]
+        wait = [k for k in sorted(self.live)
+                if self.modes[k] in (WAIT_MODE, SIG_WAIT)]
+        self._init_list(SCSL, sig)
+        self._init_list(SNSL, wait)
+        if HEAD in self.actors:
+            self.actors[HEAD].expected_base = len(sig)
+
+    # ---------------------------------------------------------- facade API
+    def height_of(self, key: int) -> int:
+        if key in self.demoted:
+            return 1
+        return det_height(key, p=self.p, max_height=self.max_height,
+                          seed=self.seed)
+
+    def lists_done(self, rank: int) -> bool:
+        a = self.actors[rank]
+        ok = True
+        if a.sc.member:
+            ok &= a.sc.joined
+        if a.sn.member:
+            ok &= a.sn.joined
+        return ok
+
+    def on_release(self, k: int) -> None:
+        self.release_log.append(k)
+
+    # ---------------------------------------------------------- topology
+    def oracle(self, keys: Optional[Iterable[int]] = None) -> SkipList:
+        return SkipList.build(sorted(keys if keys is not None
+                                     else self.live),
+                              p=self.p, max_height=self.max_height,
+                              seed=self.seed, leaf_keys=self.demoted)
+
+    def _init_list(self, lid: int, keys: List[int]) -> None:
+        """Seed the local actors' list states from the global oracle —
+        every shard computes the same structure, installs its slice."""
+        sl = self.oracle(keys)
+        for k, a in self.actors.items():
+            if k != HEAD and k not in keys:
+                continue
+            node = sl.nodes[k]
+            st = a.st(lid)
+            st.member = True
+            st.joined = True
+            st.height = node.height
+            st.target_height = st.height
+            st.nxt = list(node.nxt)
+            st.prv = list(node.prv)
+            st.books = {c: [[0, None]] for c in sl.children(k)}
+            par = sl.parent(k)
+            if par is not None:
+                st.adv = [[0, None, par]]
+            if lid == SNSL:
+                st.released = -1
+
+    def local_states(self, lid: int) -> Dict[int, Tuple[int, Tuple, Tuple]]:
+        """(height, nxt, prv) for every locally-owned live actor (HEAD
+        included) — matched against ``SkipList.partition``'s view of
+        this owner at epoch boundaries."""
+        out = {}
+        for k, a in self.actors.items():
+            if k != HEAD and k not in self.live:
+                continue
+            st = a.st(lid)
+            if not st.member or (k != HEAD and not st.joined) \
+                    or st.departed:
+                continue
+            out[k] = (st.height, tuple(st.nxt), tuple(st.prv))
+        return out
+
+    # ---------------------------------------------------------- operations
+    def create_member(self, new: int, parent: int,
+                      mode: str = SIG_WAIT) -> None:
+        """Owner-side half of the paper's async add: materialize the new
+        key's actor (it joins via MURS_ACK once the initiator's eager
+        splice reaches it)."""
+        assert self.owner_of(new) == self.pid, (new, self.pid)
+        a = PhaserActor(new, self.net, mode, phaser=self)
+        self.actors[new] = a
+        self.net.register(a)
+        self.modes[new] = mode
+        self.async_parent[new] = parent
+        self.live.add(new)
+
+    def start_insert(self, new: int, parent: int) -> None:
+        """Initiator-side half: the (locally-owned) parent starts the
+        eager level-0 search for both lists. Runs on the parent's owner;
+        ``create_member`` must already have run on ``new``'s owner."""
+        a = self.actors[parent]
+        a.start_insert(new, SCSL)
+        a.start_insert(new, SNSL)
+
+    def signal(self, rank: int) -> None:
+        self.actors[rank].local_signal()
+
+    def drop(self, rank: int) -> None:
+        self.actors[rank].local_drop()
+        self.demoted.discard(rank)
+
+    def demote(self, rank: int) -> None:
+        assert self.lists_done(rank), rank
+        self.demoted.add(rank)
+        self.actors[rank].local_demote()
+
+    def repromote(self, rank: int) -> None:
+        self.demoted.discard(rank)
+        self.actors[rank].local_promote_to(self.height_of(rank))
+
+    def released(self) -> int:
+        if HEAD in self.actors:
+            return self.actors[HEAD].head_released
+        for k in sorted(self.actors):
+            a = self.actors[k]
+            if a.sn.member and not a.sn.departed:
+                return a.sn.released
+        return -1
+
+    # ---------------------------------------------------------- membership
+    def note_membership(self, live: Iterable[int],
+                        demoted: Iterable[int]) -> None:
+        """Install the replicated membership view (broadcast by the
+        coordinator after each structural op reaches quiescence)."""
+        gone = self.live - set(live)
+        self.net.dropped |= gone
+        self.live = set(live)
+        self.demoted = set(demoted)
+        for k in self.live:
+            self.modes.setdefault(k, SIG_WAIT)
+
+    # ---------------------------------------------------------- pumping
+    def pump(self) -> int:
+        """Ingest every queued transport envelope, then deliver local
+        messages to local idleness. Returns deliveries made."""
+        moved = 0
+        while True:
+            frame = self.net.endpoint.recv(timeout=0)
+            if frame is None:
+                break
+            src, tag, payload = frame
+            assert tag == "env", f"unexpected {tag} frame in pump"
+            self.net.ingest(payload)
+        moved += self.net.deliver_all()
+        return moved
+
+    def flight_counters(self) -> Tuple[int, int]:
+        return self.net.remote_sent, self.net.remote_received

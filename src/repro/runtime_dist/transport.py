@@ -1,0 +1,207 @@
+"""Message transports for the multi-process control plane.
+
+The phaser protocol only assumes point-to-point FIFO channels
+(``core/runtime.py``); crossing a process boundary therefore needs just
+one primitive: an ordered, typed frame stream between two process ids.
+Two fabrics provide it:
+
+* ``InprocFabric``  — N *logical* processes inside one OS process, with
+  instant delivery into per-endpoint deques. Deterministic (no threads,
+  no sockets), so tier-1 tests drive real partitioned control-plane
+  code without subprocess machinery.
+* ``SocketFabric``  — real OS processes over ``multiprocessing
+  .connection`` AF_UNIX sockets. Every endpoint owns a listener at a
+  path derived from its pid, so the address book is implicit: any
+  process can reach any other from ``(directory, pid)`` alone —
+  arrivals (elastic joins) need no address gossip. Connections are
+  lazy and unidirectional (one per ordered (src, dst) pair, preserving
+  the per-channel FIFO the protocol assumes); a reader thread per
+  connection feeds one inbound queue.
+
+Frames are ``(src, tag, payload)``; tags in use: ``"env"`` (a protocol
+``Envelope``), ``"cmd"``/``"rep"`` (coordinator RPC), ``"red"``
+(data-plane reduction buffers), ``"hello"`` (stream header).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import tempfile
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, Optional, Tuple
+
+Frame = Tuple[int, str, Any]  # (src pid, tag, payload)
+
+
+class Endpoint:
+    """One process's port on a fabric."""
+
+    def __init__(self, pid: int):
+        self.pid = pid
+        self.frames_sent = 0
+        self.frames_received = 0
+
+    def send(self, dst: int, tag: str, payload: Any) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        """Next inbound frame, or None on timeout (timeout=0: poll)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# In-process fabric (deterministic, single-threaded)
+# ---------------------------------------------------------------------------
+class InprocEndpoint(Endpoint):
+    def __init__(self, pid: int, fabric: "InprocFabric"):
+        super().__init__(pid)
+        self.fabric = fabric
+        self.inbox: deque = deque()
+
+    def send(self, dst: int, tag: str, payload: Any) -> None:
+        ep = self.fabric.endpoints.get(dst)
+        assert ep is not None, f"send to unknown pid {dst}"
+        self.frames_sent += 1
+        ep.inbox.append((self.pid, tag, payload))
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        if not self.inbox:
+            return None  # same thread: nothing can arrive while we wait
+        self.frames_received += 1
+        return self.inbox.popleft()
+
+
+class InprocFabric:
+    """All endpoints share one OS process; delivery is an append."""
+
+    def __init__(self):
+        self.endpoints: Dict[int, InprocEndpoint] = {}
+
+    def endpoint(self, pid: int) -> InprocEndpoint:
+        assert pid not in self.endpoints, pid
+        ep = InprocEndpoint(pid, self)
+        self.endpoints[pid] = ep
+        return ep
+
+    def drop_endpoint(self, pid: int) -> None:
+        self.endpoints.pop(pid, None)
+
+    def pending(self) -> int:
+        return sum(len(ep.inbox) for ep in self.endpoints.values())
+
+
+# ---------------------------------------------------------------------------
+# Socket fabric (real processes)
+# ---------------------------------------------------------------------------
+def fabric_dir() -> str:
+    return tempfile.mkdtemp(prefix="phaser-fabric-")
+
+
+def _sock_path(directory: str, pid: int) -> str:
+    return os.path.join(directory, f"ep{pid}.sock")
+
+
+class SocketEndpoint(Endpoint):
+    """AF_UNIX endpoint: own listener + lazy outbound connections."""
+
+    def __init__(self, pid: int, directory: str):
+        super().__init__(pid)
+        from multiprocessing.connection import Listener
+        self.directory = directory
+        self.path = _sock_path(directory, pid)
+        self._listener = Listener(self.path, "AF_UNIX")
+        self._inbox: "queue.Queue[Frame]" = queue.Queue()
+        self._out: Dict[int, Any] = {}
+        self._closed = False
+        self._accept_thread = threading.Thread(target=self._accept_loop,
+                                               daemon=True)
+        self._accept_thread.start()
+
+    # -- inbound ------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn = self._listener.accept()
+            except (OSError, EOFError):
+                return
+            threading.Thread(target=self._read_loop, args=(conn,),
+                             daemon=True).start()
+
+    def _read_loop(self, conn) -> None:
+        try:
+            tag, payload = conn.recv()
+            assert tag == "hello", tag
+            src = payload
+            while True:
+                tag, payload = conn.recv()
+                self._inbox.put((src, tag, payload))
+        except (EOFError, OSError):
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        try:
+            if timeout == 0:
+                frame = self._inbox.get_nowait()
+            else:
+                frame = self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        self.frames_received += 1
+        return frame
+
+    # -- outbound -----------------------------------------------------------
+    def _connect(self, dst: int, timeout: float = 30.0):
+        from multiprocessing.connection import Client
+        path = _sock_path(self.directory, dst)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                conn = Client(path, "AF_UNIX")
+                break
+            except (FileNotFoundError, ConnectionRefusedError):
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"pid {self.pid}: no listener for "
+                                       f"pid {dst} at {path}")
+                time.sleep(0.01)
+        conn.send(("hello", self.pid))
+        return conn
+
+    def send(self, dst: int, tag: str, payload: Any) -> None:
+        conn = self._out.get(dst)
+        if conn is None:
+            conn = self._connect(dst)
+            self._out[dst] = conn
+        conn.send((tag, payload))
+        self.frames_sent += 1
+
+    def forget_peer(self, dst: int) -> None:
+        """Drop the cached outbound connection (evicted process)."""
+        conn = self._out.pop(dst, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for dst in list(self._out):
+            self.forget_peer(dst)
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass

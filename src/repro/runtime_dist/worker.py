@@ -1,0 +1,78 @@
+"""Host-process entry point: ``python -m repro.runtime_dist.worker``.
+
+One OS process of the multi-host runtime. Joins the socket fabric at the
+well-known path for its pid, waits for the coordinator's ``init`` command
+(which carries the full agent config), then serves the frame loop:
+
+  env  — protocol envelope for a locally-owned actor: ingest + deliver
+         (deliveries may send further envelopes out through the fabric)
+  cmd  — coordinator command: dispatch to ``HostAgent.handle``, reply
+         on the ``rep`` stream
+  red  — a peer's reduction round arriving outside a step (the peer is
+         already inside its step): held for this process's next step
+
+Control-plane-only configs (``data: null``) never import jax — the
+latency benchmark spawns these by the dozen.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .agent import HostAgent
+from .transport import SocketEndpoint
+
+
+def serve(pid: int, directory: str) -> int:
+    ep = SocketEndpoint(pid, directory)
+    agent = None
+    pending = []            # env frames that beat the init command
+    try:
+        while True:
+            frame = ep.recv(timeout=1.0)
+            if frame is None:
+                continue
+            src, tag, payload = frame
+            if tag == "env":
+                if agent is None:
+                    pending.append(payload)
+                    continue
+                agent.shard.net.ingest(payload)
+                agent.shard.net.deliver_all()
+            elif tag == "red":
+                assert agent is not None
+                agent._deferred.append(frame)
+            elif tag == "cmd":
+                cid, cmd = payload
+                if cmd["op"] == "init":
+                    agent = HostAgent(pid, ep, cmd["cfg"])
+                    for env in pending:
+                        agent.shard.net.ingest(env)
+                    pending.clear()
+                    agent.shard.net.deliver_all()
+                    reply = {"ok": True, "pid": pid}
+                elif cmd["op"] == "shutdown":
+                    ep.send(src, "rep", (cid, {"ok": True}))
+                    return 0
+                else:
+                    reply = agent.handle(cmd)
+                    for f in agent.drain_deferred():
+                        agent.shard.net.ingest(f[2])
+                    agent.shard.net.deliver_all()
+                ep.send(src, "rep", (cid, reply))
+            else:
+                raise AssertionError(f"worker {pid}: bad tag {tag!r}")
+    finally:
+        ep.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", required=True)
+    ap.add_argument("--pid", type=int, required=True)
+    args = ap.parse_args(argv)
+    return serve(args.pid, args.dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

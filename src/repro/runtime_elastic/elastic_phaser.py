@@ -38,6 +38,7 @@ from ..core.collective import (ALLREDUCE_KINDS, PhaserCollective,
 from ..core.phaser import SCSL, SNSL, SIG_WAIT, DistPhaser
 from ..core.runtime import FifoScheduler, Scheduler
 from ..core.skiplist import HEAD, SkipList
+from .strikes import StrikeAction, StrikeEscalation
 
 
 @dataclass
@@ -295,10 +296,7 @@ class ElasticPhaserRuntime:
         any divergence."""
         assert self.ph.net.idle(), "verify_epoch requires quiescence"
         sl = self.oracle()
-        want = [sl.level_chain(l)
-                for l in range(max((sl.nodes[k].height
-                                    for k in sl.keys()), default=1))]
-        want = [lane for lane in want if lane] or [[]]
+        want = [lane for lane in sl.lanes() if lane] or [[]]
         for lid in (SCSL, SNSL):
             got = self.protocol_topology(lid)
             got = [lane for lane in got if lane] or [[]]
@@ -320,34 +318,36 @@ class ElasticPhaserRuntime:
                           slack: float = 3.0,
                           demote_after: int = 2,
                           evict_after: int = 3) -> List[int]:
-        """Straggler policy on the split-phase slack: a worker slower
-        than ``slack``x the live median accumulates a strike. The
-        response escalates — at ``demote_after`` consecutive strikes the
-        worker is **demoted** to a leaf of the SCSL reduce tree (fewest
-        dependents: its slowness stops gating anyone else's combining
-        subtree) while it keeps contributing; only at ``evict_after``
-        strikes is it evicted (the fail path). A worker that recovers
-        (strike reset) is re-promoted to its drawn height. Returns
-        workers evicted this step."""
-        live_times = [times[w] for w in self.live if w in times]
-        if not live_times:
-            return []
-        med = sorted(live_times)[len(live_times) // 2]
-        evicted = []
-        for w in sorted(self.live):
-            t = times.get(w)
-            if t is not None and t > slack * med:
-                self._strikes[w] = self._strikes.get(w, 0) + 1
-                self.events.append(WorkerEvent(step, "straggle", w))
-                if self._strikes[w] >= evict_after and len(self.live) > 1:
-                    self.request_leave(w, fail=True, step=step)
-                    evicted.append(w)
-                elif self._strikes[w] >= demote_after:
-                    self.request_demote(w, step=step)
-            else:
-                if self._strikes.get(w, 0) and w in self.ph.demoted:
-                    self.request_repromote(w, step=step)
-                self._strikes[w] = 0
+        """Straggler policy on the split-phase slack (the shared
+        ``StrikeEscalation``, which the multi-process runtime applies to
+        whole hosts): a worker slower than ``slack``x the live median
+        accumulates a strike. The response escalates — at
+        ``demote_after`` consecutive strikes the worker is **demoted**
+        to a leaf of the SCSL reduce tree (fewest dependents: its
+        slowness stops gating anyone else's combining subtree) while it
+        keeps contributing; only at ``evict_after`` strikes is it
+        evicted (the fail path). A worker that recovers (strike reset)
+        is re-promoted to its drawn height. Returns workers evicted
+        this step."""
+        esc = StrikeEscalation(slack=slack, demote_after=demote_after,
+                               evict_after=evict_after,
+                               strikes=self._strikes)
+        evicted: List[int] = []
+
+        def apply(act: StrikeAction) -> None:
+            if act.action == "straggle":
+                self.events.append(WorkerEvent(step, "straggle",
+                                               act.worker))
+            elif act.action == "evict":
+                self.request_leave(act.worker, fail=True, step=step)
+                evicted.append(act.worker)
+            elif act.action == "demote":
+                self.request_demote(act.worker, step=step)
+            elif act.action == "recover":
+                self.request_repromote(act.worker, step=step)
+
+        esc.observe(self.live, times, demoted=self.ph.demoted,
+                    on_action=apply)
         return evicted
 
     # --------------------------------------------------------- inspection

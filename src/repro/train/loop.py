@@ -175,7 +175,9 @@ class TrainLoop:
         key = self.runtime.epoch_key()
         if key is None:
             return None
-        return {**key, "overlap": self._overlap_mode,
+        # single-process run: manifest schema matches the multi-host
+        # agents, which record the surviving process set (runtime_dist)
+        return {"process_set": [0], **key, "overlap": self._overlap_mode,
                 "microbatches": self.microbatches,
                 "pipeline_stages": self.pipeline_stages,
                 "interleave": self.interleave}
@@ -205,6 +207,25 @@ class TrainLoop:
         if self._collective_devices(pc) is not None:
             self._ensure_progs().get(pc)
 
+    def _to_canonical(self, ts, params, opt_state):
+        """Carried state -> canonical layer order (identity except for
+        the interleaved pipeline program's device-major layout)."""
+        prog = getattr(ts, "program", None)
+        if prog is not None:
+            return prog.readout_state(params, opt_state)
+        return params, opt_state
+
+    def _to_carried(self, ts, params, opt_state):
+        """Canonical state -> the program's carried layout. For the
+        interleaved pipeline this is the one permute paid at bind /
+        restore; the layout depends only on (stages, interleave, rows
+        per chunk), so epoch swaps under data-axis churn reuse the
+        carried state without conversion."""
+        prog = getattr(ts, "program", None)
+        if prog is not None:
+            return prog.bind_state(params, opt_state)
+        return params, opt_state
+
     def run(self, steps: int, *, params=None, opt_state=None,
             resume: bool = False, on_step: Optional[Callable] = None):
         ts = self._build_step()
@@ -229,6 +250,11 @@ class TrainLoop:
             if self.runtime is not None:
                 self._replay_elastic_events(start)
                 ts = self._build_step()     # re-lower for the epoch
+
+        # carried state: the program's own layout (device-major for the
+        # interleaved pipeline) — converted once here, carried verbatim
+        # through steps and epoch swaps, read out at save/return
+        params, opt_state = self._to_carried(ts, params, opt_state)
 
         for step in range(start, steps):
             if self.runtime is not None:
@@ -258,7 +284,8 @@ class TrainLoop:
                 if ep.index != before:
                     # checkpoint-consistent swap: persist, then re-lower
                     if self.ckpt is not None:
-                        self.ckpt.save(step + 1, params, opt_state,
+                        cp, co = self._to_canonical(ts, params, opt_state)
+                        self.ckpt.save(step + 1, cp, co,
                                        extra={"data":
                                               self.data.state_dict()},
                                        program_key=self._program_key())
@@ -285,11 +312,16 @@ class TrainLoop:
                     m["live"] = len(self.runtime.live)
                 self.metrics_log.append(m)
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save(step + 1, params, opt_state,
+                cp, co = self._to_canonical(ts, params, opt_state)
+                self.ckpt.save(step + 1, cp, co,
                                extra={"data": self.data.state_dict()},
                                program_key=self._program_key())
             if on_step is not None:
                 on_step(step, params, metrics)
+        # read the carried state out to the canonical layer order — the
+        # loop's return contract (and the final checkpoint) never see
+        # the device-major placement
+        params, opt_state = self._to_canonical(ts, params, opt_state)
         if self.ckpt is not None:
             self.ckpt.save(steps, params, opt_state,
                            extra={"data": self.data.state_dict()},

@@ -526,7 +526,9 @@ for step in range(8):
           for w in team]
     batch = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
     alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team])
-    params, opt_state, pm = prog.step(params, opt_state, batch, alive)
+    p_dev, o_dev = prog.bind_state(params, opt_state)
+    p_dev, o_dev, pm = prog.step(p_dev, o_dev, batch, alive)
+    params, opt_state = prog.readout_state(p_dev, o_dev)
     p2, o2, pm2 = ref.step(p2, o2, batch, alive)
     r, r2 = prog.reduce_metrics(pm), ref.reduce_metrics(pm2)
     np.testing.assert_allclose(float(r["loss"]), float(r2["loss"]),
@@ -596,7 +598,9 @@ for step in range(8):
           for w in team]
     batch = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
     alive = jnp.asarray([1.0 if w in rt.live else 0.0 for w in team])
-    params, opt_state, pm = prog.step(params, opt_state, batch, alive)
+    p_dev, o_dev = prog.bind_state(params, opt_state)
+    p_dev, o_dev, pm = prog.step(p_dev, o_dev, batch, alive)
+    params, opt_state = prog.readout_state(p_dev, o_dev)
     p2, o2, pm2 = ref.step(p2, o2, batch, alive)
     r, r2 = prog.reduce_metrics(pm), ref.reduce_metrics(pm2)
     np.testing.assert_allclose(float(r["loss"]), float(r2["loss"]),

@@ -1,0 +1,261 @@
+"""Multi-host elastic runtime: the skip-list control plane partitioned
+over processes (``runtime_dist``).
+
+Tier-1 tests drive the ``InprocCluster`` fabric — every host agent in
+this address space, frames through ``InprocFabric`` — which is enough
+to prove the partitioned protocol itself: two-phase joins landing as
+epochs, the demote→evict path, stale-notification black-holing, and
+fingerprint agreement between every process's partition and the
+replicated oracle at every boundary.
+
+The slow tier crosses real process boundaries: ``SocketCluster``
+spawns ``repro.runtime_dist.worker`` OS processes over AF_UNIX
+sockets (a host joins mid-epoch, a straggler is struck out through
+demote→evict), and a 3-process × 2-device cluster proves the
+checkpoint-resume contract — the manifest's program key records the
+process set live at save time, so a resume pre-compiles the
+surviving-host program, not the boot-set one.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime_dist import COORD, DistCoordinator, InprocCluster
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def coordinator(n, **kw):
+    return DistCoordinator(InprocCluster(), n, seed=kw.pop("seed", 0), **kw)
+
+
+# ------------------------------------------------------------ tier-1 inproc
+def test_boot_derives_agreed_epoch():
+    rt = coordinator(4)
+    ep = rt.epoch
+    assert ep.index == 0 and ep.n == 4 and ep.live == (0, 1, 2, 3)
+    assert ep.fingerprint            # every partition agreed (asserted
+    st = rt.control_stats()          # inside _derive_boundary)
+    assert st["live"] == [0, 1, 2, 3]
+    # boot is oracle-seeded (no protocol frames yet); the first phase
+    # crosses processes — every SIG targets the coordinator's HEAD
+    rt.advance(step=0)
+    assert rt.shard.released() == 0          # phase 0 released
+    st = rt.control_stats()
+    assert st["remote_frames"] > 0 and st["critical_path"] > 0
+    rt.close()
+
+
+def test_churn_lifecycle_epochs_and_fingerprints():
+    """join -> demote -> repromote -> evict, each landing lazily as an
+    epoch at the next phase boundary, fingerprint-verified on every
+    surviving process."""
+    rt = coordinator(3)
+    fps = [rt.epoch.fingerprint]
+
+    pid = rt.request_join(step=0)          # eager splice, lazy promote
+    assert pid == 3 and rt.pending_churn
+    rt.advance(step=0)
+    assert rt.epoch.index == 1 and rt.epoch.n == 4
+    fps.append(rt.epoch.fingerprint)
+
+    rt.request_demote(pid, step=1)
+    rt.advance(step=1)
+    assert rt.epoch.demoted == (pid,)
+    fps.append(rt.epoch.fingerprint)
+
+    rt.request_repromote(pid, step=2)
+    rt.advance(step=2)
+    assert rt.epoch.demoted == ()
+    fps.append(rt.epoch.fingerprint)
+
+    rt.request_leave(1, fail=True, step=3)
+    rt.advance(step=3)
+    assert rt.epoch.live == (0, 2, 3)
+    fps.append(rt.epoch.fingerprint)
+
+    # a structural change must change the agreed structure identity
+    assert fps[0] != fps[1] and fps[1] != fps[2] and fps[3] != fps[4]
+    assert [e.kind for e in rt.events] == ["join", "demote", "repromote",
+                                           "fail"]
+    # clean steady state: further phases advance with no churn
+    before = rt.epoch.index
+    rt.advance(step=4)
+    assert rt.epoch.index == before
+    rt.close()
+
+
+def test_eviction_black_holes_stale_notifications():
+    """After a host leaves, in-flight/late notifications addressed to
+    its actor must be dropped at the network edge (the monolithic
+    runtime delivers them to a departed actor that ignores them) — the
+    eviction plus the next boundary must not try to route to the gone
+    process."""
+    rt = coordinator(4)
+    rt.request_leave(1, step=0)
+    rt.advance(step=0)                     # boundary over the survivors
+    nets = [rt.shard.net] + [a.shard.net
+                             for a in rt.cluster.agents.values()]
+    for net in nets:
+        assert 1 in net.dropped, sorted(net.dropped)
+    # the counter only ticks when a stale frame actually arrives; the
+    # invariant is bookkeeping + liveness, so churn again on top
+    rt.request_join(step=1)
+    rt.advance(step=1)
+    assert rt.epoch.live == (0, 2, 3, 4)
+    assert all(b >= 0 for b in (n.black_holed for n in nets))
+    rt.close()
+
+
+def test_strike_escalation_evicts_straggling_host():
+    """The single-runtime straggler policy applied at host granularity:
+    straggle, demote to an SCSL leaf, then evict via the deletion
+    path."""
+    rt = coordinator(3)
+    evicted = []
+    for step in range(4):
+        times = {0: 1.0, 1: 1.0, 2: 10.0}       # host 2 always slow
+        evicted += rt.record_step_times(step, times, slack=3.0,
+                                        demote_after=2, evict_after=3)
+        rt.advance(step=step)
+        if evicted:
+            break
+    assert evicted == [2]
+    assert rt.epoch.live == (0, 1)
+    kinds = [e.kind for e in rt.events]
+    assert "straggle" in kinds and "demote" in kinds and "fail" in kinds
+    assert kinds.index("demote") < kinds.index("fail")
+    rt.close()
+
+
+def test_coordinator_owns_head_processes_own_their_actors():
+    rt = coordinator(3)
+    from repro.core.skiplist import HEAD
+    assert rt.shard.owner_of(HEAD) == COORD
+    for pid, agent in rt.cluster.agents.items():
+        assert agent.shard.owner_of(pid) == pid
+        assert agent.shard.owner_of(HEAD) == COORD
+    rt.close()
+
+
+# ------------------------------------------------- slow: real OS processes
+@pytest.mark.slow
+def test_socket_cluster_join_and_strike_eviction_subprocess():
+    """Satellite churn test over real processes: boot 3 workers, a 4th
+    joins mid-epoch, one is struck out through the straggler path —
+    with oracle/fingerprint agreement across all surviving processes
+    at every boundary (asserted inside every ``_derive_boundary``)."""
+    code = """
+import os
+os.chdir({root!r})
+from repro.runtime_dist import DistCoordinator, SocketCluster
+
+rt = DistCoordinator(SocketCluster(control_only=True), 3, seed=0)
+assert rt.epoch.n == 3
+rt.advance(step=0)                       # a clean phase first
+rt.request_join(step=1)                  # host 3 joins mid-epoch
+rt.advance(step=1)
+assert rt.epoch.index == 1 and rt.epoch.live == (0, 1, 2, 3)
+evicted = []
+for step in range(2, 6):
+    times = {{p: (10.0 if p == 1 else 1.0) for p in rt.live}}
+    evicted += rt.record_step_times(step, times, slack=3.0,
+                                    demote_after=2, evict_after=3)
+    rt.advance(step=step)
+    if evicted:
+        break
+assert evicted == [1], evicted
+assert rt.epoch.live == (0, 2, 3)
+kinds = [e.kind for e in rt.events]
+assert kinds.index("demote") < kinds.index("fail")
+st = rt.control_stats()
+assert st["remote_frames"] > 0 and st["critical_path"] > 0
+assert len({{e.fingerprint for e in rt.epochs}}) == len(rt.epochs)
+rt.close()
+print("OK")
+""".format(root=REPO)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_resume_after_eviction_precompiles_surviving_host_program(tmp_path):
+    """Satellite regression: the checkpoint manifest's program key
+    records the PROCESS SET live at save time. A naive restart boots
+    the original host set; resume must read the manifest, shed the
+    evicted host, and pre-compile the surviving-host program — so the
+    first boundary after restore is a pure cache hit."""
+    ckpt = str(tmp_path / "ckpt")
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import numpy as np
+from repro.runtime_dist import DistCoordinator, InprocCluster
+
+CKPT = {ckpt!r}
+def data_for(pid):
+    return dict(arch="smollm-135m", layers=2, batch=2, seq=16,
+                lr=1e-3, steps=50, devices=6,
+                device_slice=[pid * 2, 2], ckpt_dir=CKPT,
+                local_kind="phaser_scsl")
+
+# ---- run 1: 3 hosts x 2 devices, evict host 2, checkpoint, crash
+rt = DistCoordinator(InprocCluster(), 3, seed=0, data_for=data_for)
+for s in range(2):
+    rt.train_step(s)
+    rt.advance(step=s)
+rt.request_leave(2, fail=True, step=2)
+rt.advance(step=2)                       # epoch over survivors {{0, 1}}
+assert rt.epoch.live == (0, 1)
+rt.train_step(3)
+rt.save_checkpoint(4)
+pk = rt.cluster.call(0, {{"op": "manifest_key"}})["program_key"]
+assert pk["process_set"] == [0, 1], pk   # survivors, not the boot set
+probe = {{p: rt.cluster.call(p, {{"op": "loss_probe"}})["loss"]
+         for p in sorted(rt.live)}}
+rt.close()
+
+# ---- run 2: naive restart with the BOOT host set
+rt2 = DistCoordinator(InprocCluster(), 3, seed=0, data_for=data_for)
+mk = rt2.cluster.call(0, {{"op": "manifest_key"}})["program_key"]
+for pid in sorted(set(rt2.live) - set(mk["process_set"])):
+    rt2.request_leave(pid, step=0)       # shed hosts not in the manifest
+out = rt2.resume()
+assert out["step"] == 4, out
+assert out["program_key"]["process_set"] == [0, 1]
+# the survivor program was NOT in the restarted caches (they only hold
+# the 3-host boot program) — resume had to compile it, per host
+assert out["compiled"] == {{0: True, 1: True}}, out
+# restored params are the checkpointed ones, replicated
+probe2 = {{p: rt2.cluster.call(p, {{"op": "loss_probe"}})["loss"]
+          for p in sorted(rt2.live)}}
+assert probe2[0] == probe2[1], probe2
+for p in (0, 1):
+    np.testing.assert_allclose(probe2[p], probe[p], rtol=0, atol=0)
+stats = {{p: rt2.cluster.agents[p]._dp["cache"].stats()
+         for p in (0, 1)}}
+rt2.advance(step=4)                      # first boundary after resume
+for p in (0, 1):
+    after = rt2.cluster.agents[p]._dp["cache"].stats()
+    assert after["misses"] == stats[p]["misses"], (p, stats[p], after)
+    assert after["hits"] > stats[p]["hits"], (p, stats[p], after)
+rt2.train_step(4)                        # and stepping still works
+rt2.close()
+print("OK")
+""".format(ckpt=ckpt)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
