@@ -49,19 +49,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: complexity,modelcheck,collective,"
-                         "pipeline,kernel,roofline")
+                         "pipeline,kernel,roofline,obs")
     ap.add_argument("--quick", action="store_true",
                     help="smoke path: schedule-derivation benches only "
-                         "(complexity + collective + pipeline tables; "
-                         "skips the model-check sweep, kernel timing "
-                         "and roofline)")
+                         "(complexity + collective + pipeline + obs "
+                         "tables; skips the model-check sweep, kernel "
+                         "timing and roofline)")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
     if args.quick and want is None:
-        want = {"complexity", "collective", "pipeline"}
+        want = {"complexity", "collective", "pipeline", "obs"}
 
     from benchmarks import (collective_bench, complexity_bench,
-                            kernel_bench, modelcheck_bench,
+                            kernel_bench, modelcheck_bench, obs_bench,
                             pipeline_bench, roofline_bench)
     benches = {
         "complexity": complexity_bench,
@@ -70,6 +70,7 @@ def main(argv=None):
         "pipeline": pipeline_bench,
         "kernel": kernel_bench,
         "roofline": roofline_bench,
+        "obs": obs_bench,
     }
     rep = Report()
     t0 = time.time()
@@ -90,6 +91,20 @@ def main(argv=None):
         dst = os.path.basename(src)
         shutil.copyfile(src, dst)
         print(f"persisted {src} -> ./{dst}")
+    if args.quick:
+        # everything the benches routed through the process-default
+        # metrics registry (strike policy, serve engines, ...) plus the
+        # obs bench's exported per-case shards, in one merged table —
+        # the smoke path's obs summary
+        from repro.obs.metrics import MetricsRegistry, default_registry
+        snaps = [default_registry().snapshot()]
+        obs_json = os.path.join(rep.outdir, "BENCH_obs.json")
+        if os.path.exists(obs_json):
+            with open(obs_json) as f:
+                snaps.append(json.load(f).get("metrics", {}))
+        mrows = MetricsRegistry.summary_rows(MetricsRegistry.merge(snaps))
+        if mrows:
+            rep.table("metrics summary (process shards, merged)", mrows)
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s; CSVs in "
           f"{rep.outdir}/")
     return 0

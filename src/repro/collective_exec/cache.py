@@ -30,11 +30,13 @@ from ..core.collective import PhaserCollective
 class ProgramCache:
     def __init__(self, builder: Callable[[PhaserCollective], Any], *,
                  capacity: Optional[int] = 8,
-                 extra_key: Tuple = ()):
+                 extra_key: Tuple = (),
+                 metrics: Any = None):
         self._builder = builder
         self._programs: "OrderedDict[Tuple, Any]" = OrderedDict()
         self.capacity = capacity
         self.extra_key = tuple(extra_key)
+        self.metrics = metrics   # obs.MetricsRegistry shard, optional
         self.hits = 0
         self.misses = 0
 
@@ -58,9 +60,13 @@ class ProgramCache:
         prog = self._programs.get(key)
         if prog is not None:
             self.hits += 1
+            if self.metrics is not None:
+                self.metrics.inc("program_cache.hits")
             self._programs.move_to_end(key)
             return prog
         self.misses += 1
+        if self.metrics is not None:
+            self.metrics.inc("program_cache.misses")
         prog = self._builder(pc)
         self._programs[key] = prog
         if self.capacity and len(self._programs) > self.capacity:

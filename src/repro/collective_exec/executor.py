@@ -34,6 +34,7 @@ from ..core.collective import (PhaserCollective, _dst_mask,
                                halving_doubling_allreduce,
                                schedule_allreduce)
 from ..kernels.ops import bucket_combine_op
+from ..obs import timeline as obs_timeline
 
 
 def _make_combine(fused: bool, interpret: Optional[bool]):
@@ -55,7 +56,13 @@ def execute_flat(flat: jax.Array, pc: PhaserCollective, *,
         return lax.psum(flat, pc.axis_name)
     if pc.kind == "halving_doubling":
         return halving_doubling_allreduce(flat, pc.axis_name, pc.n)
-    return schedule_allreduce(flat, pc.axis_name, pc.unified_schedule(),
+    sched = pc.unified_schedule()
+    tl = obs_timeline.current()
+    if tl is not None:
+        # trace-time: the schedule's round grid lands on the timeline
+        # exactly once per lowering of this program
+        tl.extend(obs_timeline.gradsync_round_events(sched))
+    return schedule_allreduce(flat, pc.axis_name, sched,
                               combine=_make_combine(fused, interpret))
 
 
@@ -90,6 +97,13 @@ def execute_flat_pipelined(bufs: Sequence[jax.Array],
     gates = [jnp.asarray(_dst_mask(sched.n, pairs))[idx]
              for pairs in sched.rounds]
     R, G = sched.depth, len(bufs)
+    tl = obs_timeline.current()
+    if tl is not None:
+        # overlapped groups skew by their readiness tick: group g's
+        # round r executes at pipeline tick t = g + r
+        for g in range(G):
+            tl.extend(obs_timeline.gradsync_round_events(sched, group=g,
+                                                         offset=g))
     for t in range(R + G - 1):
         active = [g for g in range(G) if 0 <= t - g < R]
         # double buffering: issue every active group's ppermute first …

@@ -27,6 +27,9 @@ from .messages import Msg
 class Envelope:
     msg: Msg
     depth: int  # critical-path hops accumulated when this message departs
+    # span context (trace id, span id, tree depth) when the network has a
+    # tracer attached — a plain tuple so it pickles across transports
+    trace: Optional[tuple] = None
 
 
 class Actor:
@@ -39,7 +42,11 @@ class Actor:
 
     def send(self, dst: int, msg: Msg) -> None:
         assert msg.src == self.rank and msg.dst == dst, (msg, self.rank, dst)
-        self.net.post(Envelope(msg, self.clock + 1))
+        env = Envelope(msg, self.clock + 1)
+        tr = self.net.tracer
+        if tr is not None:
+            env.trace = tr.on_send(self.rank, msg, env.depth)
+        self.net.post(env)
 
     def handle(self, msg: Msg) -> None:  # pragma: no cover - abstract
         raise NotImplementedError
@@ -57,6 +64,7 @@ class Network:
         self.delivered: Dict[str, int] = defaultdict(int)
         self.max_depth = 0
         self.trace: Optional[List[Msg]] = None  # set to [] to record
+        self.tracer = None  # obs.trace.Tracer: per-envelope span contexts
 
     # -- wiring -------------------------------------------------------------
     def register(self, actor: Actor) -> None:
@@ -78,6 +86,10 @@ class Network:
         self.delivered[env.msg.kind] += 1
         if self.trace is not None:
             self.trace.append(env.msg)
+        if self.tracer is not None and env.trace is not None:
+            # closes the span AND makes it the handler's current context
+            # (sends inside handle() become its children)
+            self.tracer.on_deliver(env.trace, env.msg.dst)
         actor.handle(env.msg)
         return env.msg
 

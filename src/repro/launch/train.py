@@ -127,8 +127,10 @@ def run_processes(args, ap):
             events = parse_elastic(args.elastic)
         except ValueError as e:
             ap.error(str(e))
+    obs = bool(args.trace or args.metrics_out)
     rt = DistCoordinator(InprocCluster(), n, seed=args.seed,
-                         proc_kind=args.sync_kind, data_for=data_for)
+                         proc_kind=args.sync_kind, data_for=data_for,
+                         obs=obs)
     start = 0
     if args.resume and args.ckpt_dir:
         mk = rt.cluster.call(min(rt.live),
@@ -154,8 +156,13 @@ def run_processes(args, ap):
                 rt.request_leave(victim, fail=(kind == "fail"),
                                  step=step)
                 slot_of.pop(victim, None)   # slice freed for later joins
+        t0 = rt.obs.timeline.now() if obs else 0.0
         out = rt.train_step(step)
         rt.advance(step=step)
+        if obs:
+            rt.obs.timeline.complete("train.step", t0,
+                                     args={"step": step,
+                                           "hosts": len(rt.live)})
         loss = sum(r["loss"] for r in out.values()) / len(out)
         if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
             metrics.append({"step": step, "loss": loss,
@@ -173,7 +180,10 @@ def run_processes(args, ap):
         "remote_frames": st["remote_frames"],
         "critical_path": st["critical_path"],
         "events": [[e.step, e.kind, e.pid] for e in rt.events]}}))
-    rt.close()
+    rt.close()                       # final obs collection rides close()
+    if obs:
+        rt.export_obs(args.trace, args.metrics_out)
+        print(json.dumps({"obs": rt.obs.summary()}))
     if not metrics:
         print("# no steps to run (checkpoint already at --steps)")
         return 0
@@ -236,6 +246,15 @@ def main(argv=None):
                          "and gradient sync runs hierarchically (local "
                          "shard_map reduce, then the process-level "
                          "schedule). Elastic events churn whole hosts.")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(wall-clock step/boundary spans + the compiled "
+                         "programs' logical schedule grids); with "
+                         "--processes the control plane's span log lands "
+                         "in a sibling .spans.jsonl")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the merged metrics-registry JSON "
+                         "(counters/gauges/histograms across shards)")
     ap.add_argument("--interleave", type=int, default=1,
                     help="virtual stages per device: run the "
                          "interleaved 1F1B schedule (v non-contiguous "
@@ -285,9 +304,15 @@ def main(argv=None):
             events = parse_elastic(args.elastic)
         except ValueError as e:
             ap.error(str(e))
+    timeline = metrics_reg = None
+    if args.trace or args.metrics_out:
+        from ..obs import MetricsRegistry, Timeline
+        timeline = Timeline()
+        metrics_reg = MetricsRegistry()
     loop = TrainLoop(api=api, opt=opt, data=data, ckpt=ckpt,
                      ckpt_every=args.ckpt_every,
                      microbatches=args.microbatches,
+                     timeline=timeline, metrics=metrics_reg,
                      runtime=runtime,
                      elastic_events=events or {},
                      device_collective=(True if args.device_collective
@@ -303,6 +328,13 @@ def main(argv=None):
     except ValueError as e:
         print(f"# elastic schedule error: {e}")
         return 2
+    if args.trace:
+        timeline.save(args.trace)
+    if args.metrics_out:
+        from ..obs import MetricsRegistry
+        with open(args.metrics_out, "w") as f:
+            json.dump({"metrics": MetricsRegistry.merge(
+                [metrics_reg.snapshot()])}, f, indent=2)
     for m in loop.metrics_log:
         print(json.dumps(m))
     for e in loop.epoch_log:

@@ -5,7 +5,7 @@ mLSTM is linear-attention-like: C_t = f_t C_{t-1} + i_t v_t k_t^T with
 exponential gating stabilized in log space (m_t running max). The chunkwise
 form (intra-chunk dense matmuls + inter-chunk carry) matches the Mamba2 SSD
 structure and is MXU-friendly; the GPU reference's warp-parallel scan does
-not transfer (DESIGN.md §2).
+not transfer (DESIGN.md §7).
 
 sLSTM has a true sequential recurrence (hidden-to-hidden); it is evaluated
 with lax.scan over time — the paper's design point (used in 1-in-k layers).

@@ -1,0 +1,31 @@
+"""Observability plane: causal traces, metrics shards, step timelines.
+
+Three layers (DESIGN.md §12), all importable without jax so the
+control-plane-only worker processes stay light:
+
+* ``trace``    — per-envelope span contexts carried through the
+  partitioned control plane; ``TraceStore`` reconstructs causal span
+  trees; ``check_signal_hops`` is the runtime O(log P) invariant.
+* ``metrics``  — typed counters/gauges/histograms in per-process
+  ``MetricsRegistry`` shards, merged at the coordinator.
+* ``timeline`` — wall-clock spans + logical schedule grids exported as
+  Chrome-trace/Perfetto JSON and JSONL.
+
+``hub.ObsHub`` glues the three together on the coordinator;
+``python -m repro.obs.check`` asserts the invariants over an exported
+span log (CI).
+"""
+from .hub import ObsHub, spans_path
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, \
+    default_registry
+from .timeline import Timeline, activate, current, deactivate, \
+    gradsync_round_events, pipeline_wave_events
+from .trace import SpanCtx, SpanId, Tracer, TraceStore, check_signal_hops
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "ObsHub", "spans_path", "SpanCtx", "SpanId",
+    "Timeline", "Tracer", "TraceStore", "activate", "check_signal_hops",
+    "current", "deactivate", "gradsync_round_events",
+    "pipeline_wave_events",
+]

@@ -71,6 +71,7 @@ from ..collective_exec.buckets import make_layout
 from ..collective_exec.executor import execute_flat, execute_flat_pipelined
 from ..collective_exec.program import OVERLAP_MODES, reduce_worker_metrics
 from ..core.collective import PhaserCollective
+from ..obs import timeline as obs_timeline
 from ..optim import OptState
 from ..sharding.policies import stage_data_mesh
 from .schedule import PipelineSchedule, derive_interleaved
@@ -203,6 +204,12 @@ def build_pipeline_program(api, opt, pc: PhaserCollective, *,
                            stage_axis=STAGE_AXIS, devices=devices)
     stage_map = stage_partition(api, S, v)
     sched = derive_interleaved(S, M, v)
+    tl = obs_timeline.current()
+    if tl is not None:
+        # build-time: the schedule's wave/stage occupancy grid (one
+        # event per filled slot, gaps = bubble) for the Chrome trace
+        tl.extend(obs_timeline.pipeline_wave_events(
+            sched, label=f":S{S}M{M}v{v}"))
     axis = pc.axis_name
     per = stage_map[0][1] - stage_map[0][0]
     Vc = S * v

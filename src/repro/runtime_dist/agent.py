@@ -20,6 +20,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from ..core.phaser import SCSL, SNSL
 from ..core.skiplist import HEAD
+from ..obs.metrics import MetricsRegistry
 from .plane import COORD, ShardPhaser, default_owner
 from .transport import Endpoint
 
@@ -48,7 +49,11 @@ class HostAgent:
             live=cfg.get("live", ()),
             p=cfg.get("p", 0.5), seed=cfg.get("seed", 0),
             max_height=cfg.get("max_height", 32),
-            demoted=cfg.get("demoted", ()))
+            demoted=cfg.get("demoted", ()),
+            obs=cfg.get("obs", False))
+        # this process's metrics shard (one per agent, so in-process
+        # logical hosts stay isolated); merged at the coordinator
+        self.metrics = MetricsRegistry()
         self.data_cfg = cfg.get("data")
         self._dp = None            # lazily-built data plane dict
         self._deferred: List = []  # env frames deferred during a step
@@ -84,7 +89,8 @@ class HostAgent:
             lambda pc: build_hier_gradsync_program(
                 api, opt, pc, local_devices=devs,
                 local_kind=local_kind),
-            extra_key=("hier", m, local_kind))
+            extra_key=("hier", m, local_kind),
+            metrics=self.metrics)
         params = api.init_params(jax.random.key(d.get("init_seed", 0)))
         opt_state = opt.init(params)
         ckpt = None
@@ -186,6 +192,14 @@ class HostAgent:
                 "max_depth": self.shard.net.max_depth,
                 "messages": dict(self.shard.net.sent)}
 
+    def _op_obs(self, c):
+        """Drain this shard's span records + metrics snapshot (the
+        coordinator collects after every quiescent advance)."""
+        return {"spans": self.shard.drain_obs(),
+                "metrics": self.metrics.snapshot(),
+                "frames": {"sent": self.endpoint.frames_sent,
+                           "received": self.endpoint.frames_received}}
+
     def _op_derive_epoch(self, c):
         """Boundary: install the membership view, verify this shard's
         partition against the global oracle, fingerprint, and re-commit
@@ -240,8 +254,9 @@ class HostAgent:
         dp["params"], dp["opt_state"] = new_p, new_o
         if c.get("delay"):
             time.sleep(c["delay"])   # test hook: straggling process
-        return {"loss": pend["loss"],
-                "dt": time.perf_counter() - pend["t0"],
+        dt = time.perf_counter() - pend["t0"]
+        self.metrics.observe("agent.step_seconds", dt)
+        return {"loss": pend["loss"], "dt": dt,
                 "gnorm": float(np.asarray(om.get("gnorm", 0.0)))}
 
     def _op_step(self, c):
@@ -276,7 +291,8 @@ class HostAgent:
                 self._deferred.append(frame)
 
         buf = exchange_schedule(prog.proc_schedule, rank, pids,
-                                local["buf"], send=send, recv=recv)
+                                local["buf"], send=send, recv=recv,
+                                metrics=self.metrics)
         return self._op_step_apply({**c, "buf": buf})
 
     def drain_deferred(self) -> List:

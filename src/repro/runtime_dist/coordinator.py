@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.phaser import SCSL, SNSL
+from ..obs.hub import ObsHub
 from .agent import HostAgent
 from .exchange import run_schedule_rounds
 from .plane import COORD, ShardPhaser
@@ -240,7 +241,8 @@ class DistCoordinator:
     def __init__(self, cluster, n_hosts: int, *, seed: int = 0,
                  p: float = 0.5, proc_kind: str = "phaser_scsl",
                  axis_name: str = "data", data: Optional[Dict] = None,
-                 data_for: Optional[Callable[[int], Dict]] = None):
+                 data_for: Optional[Callable[[int], Dict]] = None,
+                 obs: bool = False):
         self.cluster = cluster
         self.seed = seed
         self.p = p
@@ -258,8 +260,18 @@ class DistCoordinator:
         self._step = 0
         self._strikes: Dict[int, int] = {}
         self._on_epoch: List[Callable[[DistEpoch, DistEpoch], None]] = []
+        # obs plane: per-frame span traces collected at every quiescent
+        # advance, the O(log P) hop invariant checked per phase, shard
+        # metrics merged here (DESIGN.md §12)
+        self.obs = ObsHub(p=p) if obs else None
+        # the first step after any (re)compile boundary is warmup: tag
+        # it so step-time strike accounting never counts compile time.
+        # Only hosts with a data plane ever compile; control-only
+        # clusters keep the untagged strike accounting.
+        self._has_data = data is not None or data_for is not None
+        self._compile_pending = self._has_data
         self.shard = ShardPhaser(COORD, cluster.ep, live=self.live,
-                                 p=p, seed=seed)
+                                 p=p, seed=seed, obs=obs)
         if cluster.env_sink is None:
             cluster.env_sink = self._ingest_env
         for pid in sorted(self.live):
@@ -275,7 +287,33 @@ class DistCoordinator:
         return {"seed": self.seed, "p": self.p, "axis": self.axis_name,
                 "proc_kind": self.proc_kind,
                 "live": sorted(self.live), "demoted": sorted(self.demoted),
+                "obs": self.obs is not None,
                 "data": self._data_for(pid)}
+
+    def _call(self, pid: int, cmd: Dict, **kw) -> Dict:
+        """RPC to a host agent; with obs on, the round-trip latency lands
+        in the coordinator's metrics shard keyed by the op name."""
+        if self.obs is None:
+            return self.cluster.call(pid, cmd, **kw)
+        t0 = time.perf_counter()
+        r = self.cluster.call(pid, cmd, **kw)
+        self.obs.metrics.observe(f"rpc.{cmd['op']}.seconds",
+                                 time.perf_counter() - t0)
+        return r
+
+    def _collect_obs(self) -> None:
+        """Pull every shard's span records + metrics snapshot into the
+        hub (the coordinator's own shard included)."""
+        assert self.obs is not None
+        self.obs.ingest(COORD, self.shard.drain_obs())
+        for pid in sorted(self.live):
+            r = self._call(pid, {"op": "obs"})
+            self.obs.ingest(pid, r["spans"], r["metrics"])
+
+    def export_obs(self, trace_path: Optional[str] = None,
+                   metrics_path: Optional[str] = None) -> None:
+        assert self.obs is not None, "coordinator built without obs=True"
+        self.obs.export(trace_path, metrics_path)
 
     def _quiesce(self) -> None:
         self.cluster.quiesce(self.shard)
@@ -284,7 +322,7 @@ class DistCoordinator:
         live, dem = sorted(self.live), sorted(self.demoted)
         self.shard.note_membership(live, dem)
         for pid in live:
-            self.cluster.call(pid, {"op": "note_membership",
+            self._call(pid, {"op": "note_membership",
                                     "live": live, "demoted": dem})
 
     # ------------------------------------------------------------- epochs
@@ -304,6 +342,12 @@ class DistCoordinator:
         checks its partition, fingerprints, re-commits its cache."""
         live, dem = sorted(self.live), sorted(self.demoted)
         self.shard.note_membership(live, dem)
+        t0 = self.obs.timeline.now() if self.obs is not None else 0.0
+        tr = self.shard.tracer
+        if tr is not None:
+            # the fingerprint round is a causal tree too: one epoch root,
+            # one child span per host the coordinator polls
+            tr.root("epoch", index)
         sl = self.shard.oracle()
         view = sl.partition(self.shard.owner_of).get(COORD)
         if view is not None:
@@ -313,11 +357,21 @@ class DistCoordinator:
         fps = {COORD: sl.fingerprint()}
         pk = None
         for pid in live:
-            r = self.cluster.call(pid, {"op": "derive_epoch", "index": index,
+            if tr is not None:
+                tr.span_under(index, "derive_epoch", pid)
+            r = self._call(pid, {"op": "derive_epoch", "index": index,
                                         "live": live, "demoted": dem})
             fps[pid] = r["fingerprint"]
             pk = r.get("program_key", pk)
         assert len(set(fps.values())) == 1, f"fingerprint split: {fps}"
+        # boundary re-commits every process's program cache: the next
+        # observed step pays compile/warmup and must not strike anyone
+        if self._has_data:
+            self._compile_pending = True
+        if self.obs is not None:
+            self.obs.timeline.complete("epoch.derive", t0, cat="control",
+                                       args={"index": index,
+                                             "n": len(live)})
         return DistEpoch(index, phase_start, tuple(live), tuple(dem),
                          fps[COORD], pk)
 
@@ -332,10 +386,10 @@ class DistCoordinator:
         if parent is None:
             parent = min(self.live)
         self.cluster.add_host(pid, self._cfg_for(pid))
-        self.cluster.call(pid, {"op": "create_member", "new": pid,
+        self._call(pid, {"op": "create_member", "new": pid,
                                 "parent": parent})
         self.live.add(pid)
-        self.cluster.call(parent, {"op": "start_insert", "new": pid,
+        self._call(parent, {"op": "start_insert", "new": pid,
                                    "parent": parent})
         self._quiesce()
         self._broadcast_membership()
@@ -349,12 +403,17 @@ class DistCoordinator:
         the expectation, level-by-level unlink runs to quiescence, then
         the process leaves the cluster."""
         assert pid in self.live, (pid, sorted(self.live))
-        self.cluster.call(pid, {"op": "drop", "key": pid})
+        self._call(pid, {"op": "drop", "key": pid})
         self._quiesce()
         self.live.discard(pid)
         self.demoted.discard(pid)
         self._strikes.pop(pid, None)
         self._broadcast_membership()
+        if self.obs is not None:
+            # the departing host's half of the eviction tree (its root
+            # span + deliveries) must be salvaged before the process goes
+            r = self._call(pid, {"op": "obs"})
+            self.obs.ingest(pid, r["spans"], r["metrics"])
         self.cluster.drop_host(pid)
         self.events.append(HostEvent(self._at(step),
                                      "fail" if fail else "leave", pid))
@@ -364,7 +423,7 @@ class DistCoordinator:
         assert pid in self.live
         if pid in self.demoted:
             return
-        self.cluster.call(pid, {"op": "demote", "key": pid})
+        self._call(pid, {"op": "demote", "key": pid})
         self._quiesce()
         self.demoted.add(pid)
         self._broadcast_membership()
@@ -375,7 +434,7 @@ class DistCoordinator:
                           step: Optional[int] = None) -> None:
         if pid not in self.live or pid not in self.demoted:
             return
-        self.cluster.call(pid, {"op": "repromote", "key": pid})
+        self._call(pid, {"op": "repromote", "key": pid})
         self._quiesce()
         self.demoted.discard(pid)
         self._broadcast_membership()
@@ -391,9 +450,15 @@ class DistCoordinator:
         protocol quiesces across processes, and a dirty boundary derives
         (and verifies) the next epoch on every survivor."""
         for pid in sorted(self.live):
-            self.cluster.call(pid, {"op": "signal"})
+            self._call(pid, {"op": "signal"})
         self._quiesce()
         released = self.shard.released()
+        if self.obs is not None:
+            # drain one phase's spans from every shard, then assert the
+            # per-signal critical path stays within the O(log P) bound —
+            # this runs at EVERY quiescent advance, churn included
+            self._collect_obs()
+            self.obs.check_window(len(self.live), phase=released)
         if self._dirty:
             old = self.epoch
             new = self._derive_boundary(old.index + 1, released + 1)
@@ -418,11 +483,11 @@ class DistCoordinator:
                                                      "step": step}))
                        for pid in pids]
             return {pid: self.cluster.collect(h) for pid, h in handles}
-        bufs = {pid: self.cluster.call(pid, {"op": "step_local",
+        bufs = {pid: self._call(pid, {"op": "step_local",
                                              "step": step})["buf"]
                 for pid in pids}
         red = run_schedule_rounds(self._proc_schedule(), bufs)
-        return {pid: self.cluster.call(pid, {"op": "step_apply",
+        return {pid: self._call(pid, {"op": "step_apply",
                                              "buf": red[pid]})
                 for pid in pids}
 
@@ -447,7 +512,9 @@ class DistCoordinator:
         from ..runtime_elastic.strikes import StrikeAction, StrikeEscalation
         esc = StrikeEscalation(slack=slack, demote_after=demote_after,
                                evict_after=evict_after,
-                               strikes=self._strikes)
+                               strikes=self._strikes,
+                               metrics=self.obs.metrics if self.obs
+                               else None)
         evicted: List[int] = []
 
         def apply(act: StrikeAction) -> None:
@@ -461,26 +528,29 @@ class DistCoordinator:
             elif act.action == "recover":
                 self.request_repromote(act.worker, step=step)
 
-        esc.observe(self.live, times, demoted=self.demoted, on_action=apply)
+        compile_step = self._compile_pending
+        self._compile_pending = False
+        esc.observe(self.live, times, demoted=self.demoted,
+                    on_action=apply, compile_step=compile_step)
         return evicted
 
     # ------------------------------------------------------- checkpointing
     def save_checkpoint(self, step: int) -> Dict:
         """Boundary checkpoint, written by the lowest live host (its
         manifest records the process set via the agent's program key)."""
-        return self.cluster.call(min(self.live), {"op": "save",
+        return self._call(min(self.live), {"op": "save",
                                                   "step": step})
 
     def precompile_all(self, program_key: Dict) -> Dict[int, bool]:
         """Compile (or cache-hit) the program identified by a manifest
         key on every live host; returns pid -> freshly-compiled flag."""
-        return {pid: self.cluster.call(
+        return {pid: self._call(
                     pid, {"op": "precompile",
                           "program_key": program_key})["compiled"]
                 for pid in sorted(self.live)}
 
     def restore_all(self, step: Optional[int] = None) -> int:
-        steps = {pid: self.cluster.call(pid, {"op": "restore",
+        steps = {pid: self._call(pid, {"op": "restore",
                                               **({"step": step}
                                                  if step is not None
                                                  else {})})["step"]
@@ -495,7 +565,7 @@ class DistCoordinator:
         pre-compile that program on every live host, then restore the
         arrays. The pre-compile runs BEFORE the restore so the first
         post-resume step hits an already-built executable."""
-        rep = self.cluster.call(min(self.live),
+        rep = self._call(min(self.live),
                                 {"op": "manifest_key",
                                  **({"step": step} if step is not None
                                     else {})})
@@ -509,16 +579,24 @@ class DistCoordinator:
     # --------------------------------------------------------- inspection
     def control_stats(self) -> Dict:
         """Cluster-wide control-plane counters (quiescent state)."""
-        per = {pid: self.cluster.call(pid, {"op": "status"})
+        per = {pid: self._call(pid, {"op": "status"})
                for pid in sorted(self.live)}
         ms, mr = self.shard.flight_counters()
         frames = sum(v["sent"] for v in per.values()) + ms
         depth = max([v["max_depth"] for v in per.values()]
                     + [self.shard.net.max_depth])
-        return {"live": sorted(self.live), "epoch": self.epoch.index,
-                "phase": self.shard.released(),
-                "remote_frames": frames, "critical_path": depth,
-                "per_host": per}
+        out = {"live": sorted(self.live), "epoch": self.epoch.index,
+               "phase": self.shard.released(),
+               "remote_frames": frames, "critical_path": depth,
+               "per_host": per}
+        if self.obs is not None:
+            out["obs"] = self.obs.summary()
+        return out
 
     def close(self) -> None:
+        if self.obs is not None and self.live:
+            try:
+                self._collect_obs()   # epoch spans since the last advance
+            except Exception:
+                pass                  # never let teardown fail on obs
         self.cluster.close()

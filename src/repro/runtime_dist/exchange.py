@@ -27,10 +27,12 @@ if TYPE_CHECKING:  # core.collective imports jax; control-plane-only
 
 
 def run_schedule_rounds(sched: "Schedule",
-                        bufs: Dict[int, np.ndarray]) -> Dict[int, np.ndarray]:
+                        bufs: Dict[int, np.ndarray], *,
+                        metrics=None) -> Dict[int, np.ndarray]:
     """Execute ``sched`` centrally over per-rank f32 buffers (rank i of
     the schedule = sorted key i of ``bufs``). Returns the final buffers
-    keyed like the input."""
+    keyed like the input. ``metrics`` (an ``obs.MetricsRegistry``)
+    accounts rounds and mirrored bytes."""
     keys = sorted(bufs)
     assert len(keys) == sched.n, (keys, sched.n)
     vals = [np.asarray(bufs[k], dtype=np.float32) for k in keys]
@@ -39,23 +41,34 @@ def run_schedule_rounds(sched: "Schedule",
         op = sched.op(r)
         for d, v in incoming.items():
             vals[d] = vals[d] + v if op == "add" else v
+        if metrics is not None:
+            metrics.inc("exchange.rounds")
+            metrics.inc("exchange.bytes_moved",
+                        sum(v.nbytes for v in incoming.values()))
     return {k: vals[i] for i, k in enumerate(keys)}
 
 
 def exchange_schedule(sched: "Schedule", rank: int, pids: Sequence[int],
                       buf: np.ndarray, *,
                       send: Callable[[int, int, np.ndarray], None],
-                      recv: Callable[[int, int], np.ndarray]) -> np.ndarray:
+                      recv: Callable[[int, int], np.ndarray],
+                      metrics=None) -> np.ndarray:
     """One participant's walk through ``sched``. ``pids[i]`` is the
     process id executing schedule rank ``i``; ``send(dst_pid, round,
     arr)`` / ``recv(src_pid, round)`` are the transport hooks (recv
-    blocks until the peer's frame for that round arrives)."""
+    blocks until the peer's frame for that round arrives). ``metrics``
+    accounts this participant's rounds and bytes sent."""
     buf = np.asarray(buf, dtype=np.float32)
     for r, pairs in enumerate(sched.rounds):
         out = [d for s, d in pairs if s == rank]
         inc = [s for s, d in pairs if d == rank]
         for d in out:
             send(pids[d], r, buf.copy())
+        if metrics is not None:
+            metrics.inc("exchange.rounds")
+            if out:
+                metrics.inc("exchange.bytes_sent",
+                            buf.nbytes * len(out))
         if inc:
             (s,) = inc  # partial permutation: at most one per round
             v = recv(pids[s], r)

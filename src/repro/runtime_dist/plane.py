@@ -28,6 +28,7 @@ from ..core.phaser import SCSL, SNSL, SIG_MODE, SIG_WAIT, WAIT_MODE, \
     PhaserActor
 from ..core.runtime import Envelope, Network
 from ..core.skiplist import HEAD, SkipList, det_height
+from ..obs.trace import Tracer
 from .transport import Endpoint
 
 COORD = -1  # coordinator pid == the HEAD sentinel key
@@ -62,6 +63,10 @@ class PartitionedNetwork(Network):
     def post(self, env: Envelope) -> None:
         if env.msg.dst in self.dropped:
             self.black_holed += 1
+            if self.tracer is not None and env.trace is not None:
+                # the span still closes: eviction fan-out must not
+                # leave dangling spans in the causal tree
+                self.tracer.on_blackhole(env.trace)
             return
         owner = self.owner_of(env.msg.dst)
         if owner == self.pid:
@@ -104,7 +109,8 @@ class ShardPhaser:
                  max_height: int = 32,
                  demoted: Iterable[int] = (),
                  owner_of: Callable[[int], int] = default_owner,
-                 modes: Optional[Dict[int, str]] = None):
+                 modes: Optional[Dict[int, str]] = None,
+                 obs: bool = False):
         self.pid = pid
         self.p = p
         self.seed = seed
@@ -113,6 +119,8 @@ class ShardPhaser:
         self.live: Set[int] = set(live)
         self.demoted: Set[int] = set(demoted)
         self.net = PartitionedNetwork(pid, endpoint, owner_of)
+        if obs:
+            self.net.tracer = Tracer(pid)
         self.modes: Dict[int, str] = {k: SIG_WAIT for k in self.live}
         if modes:
             self.modes.update(modes)
@@ -199,6 +207,22 @@ class ShardPhaser:
             out[k] = (st.height, tuple(st.nxt), tuple(st.prv))
         return out
 
+    # ---------------------------------------------------------- tracing
+    @property
+    def tracer(self) -> Optional[Tracer]:
+        return self.net.tracer
+
+    def _root(self, op: str, key: int) -> None:
+        """Open a root span before a facade op: the actor's resulting
+        sends (and their remote descendants) form one causal tree."""
+        if self.net.tracer is not None:
+            self.net.tracer.root(op, key)
+
+    def drain_obs(self) -> List[Dict]:
+        """Hand the shard's span records to the coordinator (empty when
+        tracing is off)."""
+        return self.net.tracer.drain() if self.net.tracer else []
+
     # ---------------------------------------------------------- operations
     def create_member(self, new: int, parent: int,
                       mode: str = SIG_WAIT) -> None:
@@ -217,23 +241,28 @@ class ShardPhaser:
         """Initiator-side half: the (locally-owned) parent starts the
         eager level-0 search for both lists. Runs on the parent's owner;
         ``create_member`` must already have run on ``new``'s owner."""
+        self._root("join", parent)
         a = self.actors[parent]
         a.start_insert(new, SCSL)
         a.start_insert(new, SNSL)
 
     def signal(self, rank: int) -> None:
+        self._root("signal", rank)
         self.actors[rank].local_signal()
 
     def drop(self, rank: int) -> None:
+        self._root("evict", rank)
         self.actors[rank].local_drop()
         self.demoted.discard(rank)
 
     def demote(self, rank: int) -> None:
         assert self.lists_done(rank), rank
+        self._root("demote", rank)
         self.demoted.add(rank)
         self.actors[rank].local_demote()
 
     def repromote(self, rank: int) -> None:
+        self._root("repromote", rank)
         self.demoted.discard(rank)
         self.actors[rank].local_promote_to(self.height_of(rank))
 

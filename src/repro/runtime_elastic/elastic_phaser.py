@@ -97,6 +97,11 @@ class ElasticPhaserRuntime:
         self.epochs: List[Epoch] = [self._derive_epoch(0, 0)]
         self._on_epoch: List[Callable[[Epoch, Epoch], None]] = []
         self._strikes: Dict[int, int] = {}
+        # first observed step after a program (re)compile pays
+        # compile+warmup: record_step_times exempts it from strikes.
+        # Armed by bind_program_cache and at boundaries with re-lower
+        # hooks; a control-only runtime never compiles, so never tags.
+        self._compile_pending = False
 
     # ------------------------------------------------------------- epochs
     @property
@@ -134,6 +139,7 @@ class ElasticPhaserRuntime:
         self.on_epoch(hook)
         if self.epoch.collective is not None:
             cache.get(self.epoch.collective)
+        self._compile_pending = True
 
     def _kind_for(self, n: int, kind: Optional[str] = None) -> str:
         """The schedule kind an epoch of ``n`` members compiles. Since
@@ -233,6 +239,8 @@ class ElasticPhaserRuntime:
             new = self._derive_epoch(old.index + 1, released + 1)
             self.epochs.append(new)
             self._dirty = False
+            if self._on_epoch:
+                self._compile_pending = True   # boundary hooks re-lower
             for fn in self._on_epoch:
                 fn(old, new)
         if step is not None:
@@ -346,8 +354,10 @@ class ElasticPhaserRuntime:
             elif act.action == "recover":
                 self.request_repromote(act.worker, step=step)
 
+        compile_step = self._compile_pending
+        self._compile_pending = False
         esc.observe(self.live, times, demoted=self.ph.demoted,
-                    on_action=apply)
+                    on_action=apply, compile_step=compile_step)
         return evicted
 
     # --------------------------------------------------------- inspection

@@ -38,11 +38,16 @@ class StrikeEscalation:
 
     def __init__(self, *, slack: float = 3.0, demote_after: int = 2,
                  evict_after: int = 3,
-                 strikes: Optional[Dict[int, int]] = None):
+                 strikes: Optional[Dict[int, int]] = None,
+                 metrics=None):
         self.slack = slack
         self.demote_after = demote_after
         self.evict_after = evict_after
         self.strikes: Dict[int, int] = strikes if strikes is not None else {}
+        if metrics is None:
+            from ..obs.metrics import default_registry
+            metrics = default_registry()
+        self.metrics = metrics
 
     def forget(self, worker: int) -> None:
         self.strikes.pop(worker, None)
@@ -50,19 +55,28 @@ class StrikeEscalation:
     def observe(self, live, times: Dict[int, float], *,
                 demoted: Iterable[int] = (),
                 on_action: Optional[Callable[[StrikeAction], None]] = None,
-                ) -> List[StrikeAction]:
+                compile_step: bool = False) -> List[StrikeAction]:
         """One step's observation. ``live`` and ``demoted`` are read
         live (the callback may mutate them); returns every action
-        emitted, in order."""
+        emitted, in order. A ``compile_step`` (the first step after a
+        boundary re-lower) is recorded in the metrics but exempt from
+        strike accounting: compile/warmup skew is not straggling."""
         live_times = [times[w] for w in live if w in times]
         if not live_times:
             return []
         med = sorted(live_times)[len(live_times) // 2]
+        for t in live_times:
+            self.metrics.observe("strikes.step_seconds", t)
+        self.metrics.set("strikes.step_median_s", med)
+        if compile_step:
+            self.metrics.inc("strikes.compile_steps")
+            return []
         out: List[StrikeAction] = []
 
         def emit(worker: int, action: str) -> None:
             act = StrikeAction(worker, action)
             out.append(act)
+            self.metrics.inc(f"strikes.{action}")
             if on_action is not None:
                 on_action(act)
 

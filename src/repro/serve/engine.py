@@ -58,6 +58,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.registry import ModelAPI
+from ..obs.metrics import MetricsRegistry
 from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
 from ..utils import to_device_copy
 
@@ -91,16 +92,19 @@ class ServeEngine:
         self.finished: List[Request] = []
         # no donation: _admit snapshots the pre-prefill state for splicing
         self._decode = jax.jit(api.decode_fn)
+        # per-engine metrics shard (obs plane): trace counters,
+        # admission kinds, retire counts, decode occupancy. The legacy
+        # ``prefill_traces``/``prefill_state_traces`` attributes are
+        # read-only views over these counters.
+        self.metrics = MetricsRegistry()
         # full-logits prefill: length-bucketed groups read each
         # request's next token at its true len-1, not the padded tail.
         # The trace counters tick ONCE per lowering (the wrapped python
         # body only runs at trace time): regression tests assert a new
         # admission group size re-uses the cached executable.
-        self.prefill_traces = 0
-        self.prefill_state_traces = 0
 
         def _pf(p, b):
-            self.prefill_traces += 1
+            self.metrics.inc("serve.prefill.traces")
             return api.prefill_full_fn(p, b)
 
         self._prefill = jax.jit(_pf)
@@ -123,10 +127,20 @@ class ServeEngine:
         # one compiled scan per (group bucket, length bucket) — the
         # window is static and the group dim pads to pow2 rows
         def _ps(p, toks, lens):
-            self.prefill_state_traces += 1
+            self.metrics.inc("serve.prefill_state.traces")
             return api.prefill_state_fn(p, toks, lens, window=window)
 
         self._prefill_state = jax.jit(_ps)
+
+    @property
+    def prefill_traces(self) -> int:
+        """Compat view: lowerings of the full-logits prefill."""
+        return self.metrics.counter("serve.prefill.traces").value
+
+    @property
+    def prefill_state_traces(self) -> int:
+        """Compat view: lowerings of the recurrent prefill scan."""
+        return self.metrics.counter("serve.prefill_state.traces").value
 
     @property
     def epoch(self) -> int:
@@ -200,8 +214,11 @@ class ServeEngine:
                 bucket = min(self._bucket_len(L), self.window)
                 groups.setdefault(("rec", bucket), []).append((slot, req))
             else:
+                self.metrics.inc("serve.admit.sequential")
                 self._admit_sequential(slot, req)
         for (kind, bucket), group in sorted(groups.items()):
+            self.metrics.inc(f"serve.admit.{kind}", len(group))
+            self.metrics.observe("serve.admit.group_size", len(group))
             if kind == "kv":
                 self._admit_bulk(group, bucket)
             else:
@@ -341,6 +358,7 @@ class ServeEngine:
         """LEAVE: the finished request's participant deregisters; the
         slot is reclaimed for the next boundary's refill."""
         self.finished.append(self.slot_req[slot])
+        self.metrics.inc("serve.retired")
         self.gate.request_leave(self.slot_key[slot])
         self.slot_key[slot] = None
         self.slot_req[slot] = None
@@ -357,6 +375,8 @@ class ServeEngine:
         boundary, retires at the trailing one) land as gate epochs."""
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        self.metrics.set("serve.occupancy", len(active))
+        self.metrics.observe("serve.active_slots", len(active))
         if not active:
             if self.gate.pending_churn:
                 # a request was admitted AND retired inside _admit (e.g.
@@ -368,6 +388,7 @@ class ServeEngine:
         for i in active:
             r = self.slot_req[i]
             token_b[i] = r.out[-1] if r.out else r.prompt[-1]
+        self.metrics.inc("serve.decode.steps")
         logits, self.state = self._dispatch(token_b, self.slot_pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:

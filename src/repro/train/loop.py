@@ -36,6 +36,8 @@ import numpy as np
 from ..checkpoint import CheckpointManager
 from ..data import SyntheticLM
 from ..models.registry import ModelAPI
+from ..obs import timeline as obs_timeline
+from ..obs.metrics import MetricsRegistry
 from ..optim import AdamW
 from ..runtime_elastic.elastic_phaser import ElasticPhaserRuntime
 from ..utils import to_device_copy
@@ -73,6 +75,11 @@ class TrainLoop:
     # bubble fraction (S-1)/(vM+S-1) instead of (S-1)/(M+S-1); needs
     # microbatches % pipeline_stages == 0 (DESIGN.md §6)
     interleave: int = 1
+    # obs plane (optional): an active ``timeline`` receives wall-clock
+    # step/relower spans plus the logical schedule grids the executors
+    # emit at trace time; ``metrics`` shards step timings and cache hits
+    timeline: Optional[obs_timeline.Timeline] = None
+    metrics: Optional[MetricsRegistry] = None
     _progs: Any = field(default=None, init=False, repr=False)
 
     @property
@@ -150,7 +157,8 @@ class TrainLoop:
                     pipeline_stages=self.pipeline_stages,
                     interleave=self.interleave),
                 extra_key=(self._overlap_mode, self.microbatches,
-                           self.pipeline_stages, self.interleave))
+                           self.pipeline_stages, self.interleave),
+                metrics=self.metrics)
         return self._progs
 
     def _build_step(self):
@@ -228,6 +236,10 @@ class TrainLoop:
 
     def run(self, steps: int, *, params=None, opt_state=None,
             resume: bool = False, on_step: Optional[Callable] = None):
+        if self.timeline is not None:
+            # active for the whole run: build-time/trace-time emitters
+            # in the executors reach it via the module hook
+            obs_timeline.activate(self.timeline)
         ts = self._build_step()
         start = 0
         if params is None:
@@ -264,6 +276,8 @@ class TrainLoop:
             # buffer may alias it and read asynchronously (see utils)
             batch = {k: to_device_copy(v) for k, v in batch.items()}
             t0 = time.time()
+            tp0 = (self.timeline.now() if self.timeline is not None
+                   else 0.0)
             if ts.program is not None:
                 # per-worker alive mask: a worker that left mid-epoch
                 # contributes zeros; the program's masked mean re-scales
@@ -275,6 +289,12 @@ class TrainLoop:
             else:
                 params, opt_state, metrics = ts.jitted(params, opt_state,
                                                        batch)
+            if self.timeline is not None:
+                self.timeline.complete("train.step", tp0,
+                                       args={"step": step})
+            if self.metrics is not None:
+                self.metrics.observe("train.step_seconds",
+                                     time.time() - t0)
             if self.runtime is not None:
                 # the step is one phaser phase; churn requested above
                 # lands as a new epoch exactly at this boundary
@@ -289,7 +309,14 @@ class TrainLoop:
                                        extra={"data":
                                               self.data.state_dict()},
                                        program_key=self._program_key())
+                    tb = (self.timeline.now()
+                          if self.timeline is not None else 0.0)
                     ts = self._build_step()
+                    if self.timeline is not None:
+                        self.timeline.complete("epoch.relower", tb,
+                                               args={"epoch": ep.index})
+                    if self.metrics is not None:
+                        self.metrics.inc("train.relower")
                     self.runtime.verify_epoch()
                     if self.pipeline_stages > 1 or self.interleave > 1:
                         # the stage axis's own proof: the (interleaved)
@@ -327,4 +354,6 @@ class TrainLoop:
                            extra={"data": self.data.state_dict()},
                            program_key=self._program_key())
             self.ckpt.wait()
+        if self.timeline is not None:
+            obs_timeline.deactivate()
         return params, opt_state
