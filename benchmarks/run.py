@@ -49,7 +49,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: complexity,modelcheck,collective,"
-                         "pipeline,kernel,roofline,obs")
+                         "pipeline,kernel,roofline,obs,chaos")
     ap.add_argument("--quick", action="store_true",
                     help="smoke path: schedule-derivation benches only "
                          "(complexity + collective + pipeline + obs "
@@ -58,11 +58,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
     if args.quick and want is None:
-        want = {"complexity", "collective", "pipeline", "obs"}
+        want = {"complexity", "collective", "pipeline", "obs", "chaos"}
 
-    from benchmarks import (collective_bench, complexity_bench,
-                            kernel_bench, modelcheck_bench, obs_bench,
-                            pipeline_bench, roofline_bench)
+    from benchmarks import (chaos_bench, collective_bench,
+                            complexity_bench, kernel_bench,
+                            modelcheck_bench, obs_bench, pipeline_bench,
+                            roofline_bench)
     benches = {
         "complexity": complexity_bench,
         "modelcheck": modelcheck_bench,
@@ -71,6 +72,7 @@ def main(argv=None):
         "kernel": kernel_bench,
         "roofline": roofline_bench,
         "obs": obs_bench,
+        "chaos": chaos_bench,
     }
     rep = Report()
     t0 = time.time()

@@ -30,6 +30,11 @@ class Envelope:
     # span context (trace id, span id, tree depth) when the network has a
     # tracer attached — a plain tuple so it pickles across transports
     trace: Optional[tuple] = None
+    # membership generation (incarnation) stamped by the partitioned
+    # network at post time: after a non-cooperative eviction rebuilds the
+    # survivors, in-flight frames of the old incarnation are fenced at
+    # ingest instead of corrupting the fresh phase state
+    gen: int = 0
 
 
 class Actor:

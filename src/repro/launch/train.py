@@ -68,7 +68,12 @@ from ..train.loop import TrainLoop
 
 
 def parse_elastic(spec: str):
-    """'join@30,fail@60,leave:2@80' -> {30: [("join", None)], ...}."""
+    """'join@30,fail@60,leave:2@80' -> {30: [("join", None)], ...}.
+
+    ``kill`` (``--processes`` mode only) is a hard crash: the host is
+    SIGKILLed (socket fabric) or dropped without protocol (in-process),
+    and the coordinator must *detect* and recover non-cooperatively —
+    unlike ``fail``, which still runs the cooperative eviction."""
     events = {}
     for item in spec.split(","):
         item = item.strip()
@@ -82,44 +87,73 @@ def parse_elastic(spec: str):
         if ":" in kind:
             kind, w = kind.split(":", 1)
             wid = int(w)
-        if kind not in ("join", "leave", "fail"):
+        if kind not in ("join", "leave", "fail", "kill"):
             raise ValueError(f"elastic event kind {kind!r}: expected "
-                             "join | leave | fail")
+                             "join | leave | fail | kill")
         events.setdefault(int(step), []).append((kind, wid))
     return events
 
 
 def run_processes(args, ap):
-    """--processes N: the multi-host elastic runtime over device slices
-    of this jax runtime (InprocCluster). Each logical host process owns
-    ndev/N devices; churn happens at whole-host granularity."""
-    from ..runtime_dist import DistCoordinator, InprocCluster
+    """--processes N: the multi-host elastic runtime. With the default
+    in-process fabric each logical host owns ndev/N device slices of
+    this jax runtime; with ``--fabric socket`` each host is a real OS
+    process with its own jax runtime (and the coordinator runs the
+    heartbeat failure detector). Churn happens at whole-host
+    granularity; ``kill`` events crash hosts non-cooperatively."""
+    from ..runtime_dist import (DistCoordinator, InprocCluster,
+                                SocketCluster, StepInconsistent)
     n = args.processes
-    ndev = len(jax.devices())
-    if ndev < n:
-        ap.error(f"--processes {n} needs at least {n} devices "
-                 f"(have {ndev}; use --host-devices)")
-    m = ndev // n
-    slots = ndev // m                       # slice headroom for joins
-    per_dev_batch = max(1, args.batch // (n * m))
+    chaos = None
+    if args.chaos is not None:
+        from ..runtime_dist import ChaosConfig
+        chaos = ChaosConfig(seed=args.chaos)
     slot_of = {}
+    if args.fabric == "socket":
+        m = max(1, args.host_devices or 1)   # devices per host process
+        per_dev_batch = max(1, args.batch // (n * m))
 
-    def data_for(pid):
-        if pid not in slot_of:
-            used = set(slot_of.values())
-            free = [i for i in range(slots) if i not in used]
-            if not free:
-                raise ValueError(f"no free device slice for host {pid} "
-                                 f"({slots} slices of {m} devices)")
-            slot_of[pid] = free[0]
-        return {"arch": args.arch, "reduced": args.reduced,
-                "layers": args.layers, "batch": per_dev_batch,
-                "seq": args.seq, "lr": args.lr,
-                "warmup": min(20, args.steps // 5), "steps": args.steps,
-                "devices": ndev,
-                "device_slice": [slot_of[pid] * m, m],
-                "ckpt_dir": args.ckpt_dir,
-                "local_kind": "phaser_scsl"}
+        def data_for(pid):
+            return {"arch": args.arch, "reduced": args.reduced,
+                    "layers": args.layers, "batch": per_dev_batch,
+                    "seq": args.seq, "lr": args.lr,
+                    "warmup": min(20, args.steps // 5),
+                    "steps": args.steps, "devices": m,
+                    "ckpt_dir": args.ckpt_dir,
+                    "local_kind": "phaser_scsl"}
+
+        cluster = SocketCluster(hb_interval=args.heartbeat_interval,
+                                failure_timeout=args.failure_timeout,
+                                chaos=chaos)
+    else:
+        ndev = len(jax.devices())
+        if ndev < n:
+            ap.error(f"--processes {n} needs at least {n} devices "
+                     f"(have {ndev}; use --host-devices)")
+        m = ndev // n
+        slots = ndev // m                   # slice headroom for joins
+        per_dev_batch = max(1, args.batch // (n * m))
+
+        def data_for(pid):
+            if pid not in slot_of:
+                used = set(slot_of.values())
+                free = [i for i in range(slots) if i not in used]
+                if not free:
+                    raise ValueError(f"no free device slice for host "
+                                     f"{pid} ({slots} slices of {m} "
+                                     "devices)")
+                slot_of[pid] = free[0]
+            return {"arch": args.arch, "reduced": args.reduced,
+                    "layers": args.layers, "batch": per_dev_batch,
+                    "seq": args.seq, "lr": args.lr,
+                    "warmup": min(20, args.steps // 5),
+                    "steps": args.steps,
+                    "devices": ndev,
+                    "device_slice": [slot_of[pid] * m, m],
+                    "ckpt_dir": args.ckpt_dir,
+                    "local_kind": "phaser_scsl"}
+
+        cluster = InprocCluster(chaos=chaos)
 
     events = {}
     if args.elastic is not None:
@@ -128,7 +162,7 @@ def run_processes(args, ap):
         except ValueError as e:
             ap.error(str(e))
     obs = bool(args.trace or args.metrics_out)
-    rt = DistCoordinator(InprocCluster(), n, seed=args.seed,
+    rt = DistCoordinator(cluster, n, seed=args.seed,
                          proc_kind=args.sync_kind, data_for=data_for,
                          obs=obs)
     start = 0
@@ -151,13 +185,32 @@ def run_processes(args, ap):
         for kind, wid in events.get(step, []):
             if kind == "join":
                 rt.request_join(step=step)
+            elif kind == "kill":
+                # hard crash: no protocol, no goodbye — the coordinator
+                # must detect the silence and evict non-cooperatively
+                victim = wid if wid is not None else max(rt.live)
+                if hasattr(rt.cluster, "kill_pid"):
+                    rt.cluster.kill_pid(victim)
+                else:
+                    rt.cluster.kill_host(victim)
+                slot_of.pop(victim, None)
             else:
                 victim = wid if wid is not None else max(rt.live)
                 rt.request_leave(victim, fail=(kind == "fail"),
                                  step=step)
                 slot_of.pop(victim, None)   # slice freed for later joins
         t0 = rt.obs.timeline.now() if obs else 0.0
-        out = rt.train_step(step)
+        try:
+            out = rt.train_step(step)
+        except StepInconsistent as e:
+            # params diverged across survivors: only a checkpoint-
+            # consistent resume restores the replicated invariant
+            if not args.ckpt_dir:
+                raise
+            rep = rt.resume()
+            print(f"# step {step}: {e}; resumed from checkpoint at "
+                  f"step {rep['step']}")
+            out = rt.train_step(step)
         rt.advance(step=step)
         if obs:
             rt.obs.timeline.complete("train.step", t0,
@@ -246,6 +299,21 @@ def main(argv=None):
                          "and gradient sync runs hierarchically (local "
                          "shard_map reduce, then the process-level "
                          "schedule). Elastic events churn whole hosts.")
+    ap.add_argument("--fabric", default="inproc",
+                    choices=["inproc", "socket"],
+                    help="--processes transport: in-process logical "
+                         "hosts (deterministic) or real OS processes "
+                         "over AF_UNIX sockets (heartbeat failure "
+                         "detection, kill events are SIGKILL)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject seeded transport faults (RPC drop/dup "
+                         "+ bounded env delay/reorder; DESIGN.md §13)")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5,
+                    help="socket fabric: coordinator heartbeat period "
+                         "(seconds)")
+    ap.add_argument("--failure-timeout", type=float, default=10.0,
+                    help="socket fabric: hard silence floor before a "
+                         "host is declared dead")
     ap.add_argument("--trace", default=None,
                     help="write a Chrome-trace/Perfetto JSON of the run "
                          "(wall-clock step/boundary spans + the compiled "
@@ -276,6 +344,14 @@ def main(argv=None):
 
     if args.processes > 1:
         return run_processes(args, ap)
+    if args.elastic is not None and "kill" in args.elastic:
+        try:
+            ev = parse_elastic(args.elastic)
+        except ValueError as e:
+            ap.error(str(e))
+        if any(k == "kill" for evs in ev.values() for k, _ in evs):
+            ap.error("kill events need --processes > 1 (hard host "
+                     "crashes only exist in the multi-host runtime)")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -46,6 +46,16 @@ class ObsHub:
         if metrics is not None:
             self.shards[pid] = metrics
 
+    def note_lost(self, pid: int) -> None:
+        """A host died without draining its span shard: its records are
+        gone. The store (and the exported span log, so offline checks
+        agree) tolerates the resulting dangling parents / missing
+        closes instead of reporting an incomplete causal tree."""
+        rec = {"ev": "lost", "pid": pid}
+        self.store.mark_lost(pid)
+        self._window.append(rec)
+        self._all_records.append(rec)
+
     # --------------------------------------------------------- invariants
     def check_window(self, n_live: int, *, phase: Optional[int] = None
                      ) -> Dict:

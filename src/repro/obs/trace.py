@@ -43,7 +43,8 @@ SpanId = Tuple[int, int]          # (shard pid, per-shard sequence)
 SpanCtx = Tuple[str, SpanId, int]  # (trace id, span id, tree depth)
 
 # facade ops that open root spans (name -> op recorded on the root)
-ROOT_OPS = ("signal", "join", "evict", "demote", "repromote", "epoch")
+ROOT_OPS = ("signal", "join", "evict", "demote", "repromote", "epoch",
+            "failure")
 
 _MAX_RECORDS = 200_000  # backstop for a shard nobody drains
 
@@ -147,6 +148,13 @@ class TraceStore:
     def __init__(self):
         self.spans: Dict[SpanId, Dict] = {}
         self.status: Dict[SpanId, str] = {}
+        # shards declared dead before their records could be drained
+        # (non-cooperative eviction): their spans are tolerated as
+        # incomplete instead of failing the causal-tree check
+        self.lost: set = set()
+
+    def mark_lost(self, pid: int) -> None:
+        self.lost.add(pid)
 
     def add(self, records: Iterable[Dict]) -> None:
         for r in records:
@@ -154,6 +162,8 @@ class TraceStore:
                 self.spans[tuple(r["span"])] = r
             elif r["ev"] == "close":
                 self.status[tuple(r["span"])] = r["status"]
+            elif r["ev"] == "lost":
+                self.lost.add(r["pid"])
 
     # ------------------------------------------------------------ queries
     def traces(self) -> Dict[str, List[Dict]]:
@@ -198,7 +208,10 @@ class TraceStore:
     def problems(self, trace: str) -> List[str]:
         """Completeness check: every non-root span's parent must exist
         and every non-root span must be closed (delivered or
-        blackholed). Empty list == the causal tree is complete."""
+        blackholed). Empty list == the causal tree is complete. Spans
+        whose parent or close record died with a ``lost`` shard (a
+        crashed host whose records could never be drained) are
+        tolerated — a crash must not fail the survivors' trees."""
         out = []
         recs = [r for r in self.spans.values() if r["trace"] == trace]
         if not any(r["parent"] is None for r in recs):
@@ -206,10 +219,13 @@ class TraceStore:
         for r in recs:
             sid = tuple(r["span"])
             if r["parent"] is not None \
-                    and tuple(r["parent"]) not in self.spans:
+                    and tuple(r["parent"]) not in self.spans \
+                    and r["parent"][0] not in self.lost:
                 out.append(f"{trace}: span {sid} has unknown parent "
                            f"{tuple(r['parent'])}")
-            if r["parent"] is not None and sid not in self.status:
+            if r["parent"] is not None and sid not in self.status \
+                    and r["pid"] not in self.lost \
+                    and r["dst"] not in self.lost:
                 out.append(f"{trace}: span {sid} ({r['name']}) never "
                            "closed")
         return out

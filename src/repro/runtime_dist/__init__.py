@@ -16,17 +16,23 @@ loads lazily on attribute access.
 """
 from .agent import HostAgent
 from .exchange import exchange_schedule, run_schedule_rounds
+from .failure import (HostDead, PeerUnreachable, PhiDetector, RpcTimeout,
+                      StepInconsistent, backoff)
 from .plane import COORD, PartitionedNetwork, ShardPhaser, default_owner
-from .transport import (Endpoint, InprocEndpoint, InprocFabric,
+from .transport import (ChaosConfig, Endpoint, FaultyEndpoint,
+                        FaultyInprocFabric, InprocEndpoint, InprocFabric,
                         SocketEndpoint, fabric_dir)
 
 _LAZY = ("DistCoordinator", "DistEpoch", "HostEvent", "InprocCluster",
          "SocketCluster")
 
 __all__ = ["HostAgent", "exchange_schedule", "run_schedule_rounds",
+           "HostDead", "PeerUnreachable", "PhiDetector", "RpcTimeout",
+           "StepInconsistent", "backoff",
            "COORD", "PartitionedNetwork", "ShardPhaser", "default_owner",
-           "Endpoint", "InprocEndpoint", "InprocFabric", "SocketEndpoint",
-           "fabric_dir"] + list(_LAZY)
+           "ChaosConfig", "Endpoint", "FaultyEndpoint",
+           "FaultyInprocFabric", "InprocEndpoint", "InprocFabric",
+           "SocketEndpoint", "fabric_dir"] + list(_LAZY)
 
 
 def __getattr__(name):   # PEP 562: keep worker imports jax-free

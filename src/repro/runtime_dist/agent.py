@@ -57,6 +57,11 @@ class HostAgent:
         self.data_cfg = cfg.get("data")
         self._dp = None            # lazily-built data plane dict
         self._deferred: List = []  # env frames deferred during a step
+        self._red_held: List = []  # red frames that beat our step cmd
+        self.gen = cfg.get("gen", 0)   # membership incarnation (recovery)
+        self.shard.gen = self.gen
+        self.shard.net.gen = self.gen
+        self._applied: Dict = {"step": -1}   # last applied train step
 
     # ------------------------------------------------------------ data plane
     def _data_plane(self) -> Dict[str, Any]:
@@ -183,8 +188,42 @@ class HostAgent:
     def _op_note_membership(self, c):
         self.shard.note_membership(c["live"], c["demoted"])
 
+    def _op_force_evict(self, c):
+        """Non-cooperative eviction, survivor side: re-seed this shard
+        from the surviving membership's oracle at the coordinator's
+        released phase, adopt the new generation (fencing the old
+        incarnation's in-flight frames), and drop any held step rounds
+        from the dead generation."""
+        self.shard.rebuild(c["live"], c["demoted"], c["phase"], c["gen"])
+        self.gen = c["gen"]
+        self._red_held = [f for f in self._red_held
+                          if f[2][0] == self.gen]
+        self._deferred.clear()   # old-gen envs would be fenced anyway
+        self.metrics.inc("failure.force_evict")
+        return {"gen": self.gen, "phase": c["phase"],
+                "live": sorted(self.shard.live)}
+
+    def _op_step_status(self, c):
+        """Post-crash consistency probe: which train step this host
+        last applied (and its metrics) — the coordinator uses this to
+        decide between retrying the step and falling back to a
+        checkpoint-consistent resume."""
+        return dict(self._applied)
+
+    def hold_red(self, frame) -> None:
+        """A peer's reduction round arriving outside our step (worker
+        main loop or a status pump): held for the next step's recv."""
+        self._red_held.append(frame)
+
     def _op_status(self, c):
         self.shard.pump()
+        for f in self.shard.drain_stray():
+            if f[1] == "cmd":
+                # raced-in (possibly retransmitted) command: defer to the
+                # worker main loop, which dedupes by command id.
+                self._deferred.append(f)
+            else:
+                self.hold_red(f)
         sent, received = self.shard.flight_counters()
         return {"idle": self.shard.net.idle(), "sent": sent,
                 "received": received,
@@ -256,13 +295,19 @@ class HostAgent:
             time.sleep(c["delay"])   # test hook: straggling process
         dt = time.perf_counter() - pend["t0"]
         self.metrics.observe("agent.step_seconds", dt)
-        return {"loss": pend["loss"], "dt": dt,
-                "gnorm": float(np.asarray(om.get("gnorm", 0.0)))}
+        out = {"loss": pend["loss"], "dt": dt,
+               "gnorm": float(np.asarray(om.get("gnorm", 0.0)))}
+        self._applied = {"step": int(c.get("step", -1)), **out}
+        return out
 
     def _op_step(self, c):
         """Whole step with peer-to-peer exchange over the transport
         (socket mode): local grads, the process-level schedule's rounds
-        as real frames between the live processes, then apply."""
+        as real frames between the live processes, then apply. Round
+        frames carry the membership generation so a step retried after
+        crash recovery can never consume a dead incarnation's rounds;
+        a coordinator ``ctl`` abort (or the recv deadline) unwinds the
+        exchange into an ``aborted`` reply instead of a 300 s hang."""
         import numpy as np
         from .exchange import exchange_schedule
         local = self._op_step_local(c)
@@ -271,28 +316,64 @@ class HostAgent:
         pids = list(prog.pc_proc.keys)
         rank = pids.index(self.pid)
         step = c["step"]
+        gen = self.gen
+
+        class _StepAbort(Exception):
+            pass
 
         def send(dst, rnd, arr):
-            self.endpoint.send(dst, "red", (step, rnd, arr))
+            try:
+                self.endpoint.send(dst, "red", (gen, step, rnd, arr))
+            except (OSError, ConnectionError):
+                # peer died mid-step: unwind; the coordinator resolves
+                self.metrics.inc("step.send_failed")
+                raise _StepAbort("peer send failed")
+
+        def match(payload, src, rnd):
+            return (payload[0] == gen and payload[1] == step
+                    and payload[2] == rnd)
 
         def recv(src, rnd):
+            for i, f in enumerate(self._red_held):
+                if f[0] == src and match(f[2], src, rnd):
+                    return self._red_held.pop(i)[2][3]
             deadline = time.monotonic() + c.get("timeout", 300.0)
             while True:
-                frame = self.endpoint.recv(timeout=1.0)
+                frame = self.endpoint.recv(timeout=0.2)
                 if frame is None:
-                    assert time.monotonic() < deadline, \
-                        f"pid {self.pid}: no round {rnd} frame from {src}"
+                    if time.monotonic() >= deadline:
+                        raise _StepAbort(f"no round {rnd} from {src}")
                     continue
                 fsrc, tag, payload = frame
-                if tag == "red" and fsrc == src \
-                        and payload[0] == step and payload[1] == rnd:
-                    return payload[2]
-                # anything else (stray env) waits until the step ends
-                self._deferred.append(frame)
+                if tag == "red":
+                    if payload[0] != gen or payload[1] < step:
+                        self.metrics.inc("step.stale_red")   # fenced
+                    elif fsrc == src and match(payload, src, rnd):
+                        return payload[3]
+                    else:
+                        self._red_held.append(frame)
+                elif tag == "ctl":
+                    kind = payload[0]
+                    if kind == "abort_step" and payload[1] >= step:
+                        raise _StepAbort("coordinator abort")
+                    # stale abort for an older step: ignore
+                elif tag == "env":
+                    # stray protocol frame waits until the step ends
+                    self._deferred.append(frame)
+                elif tag == "cmd":
+                    # a retried command while we're mid-step: the reply
+                    # the main loop already sent was dropped; park the
+                    # frame so the main loop's dedupe cache replays it
+                    self._deferred.append(frame)
 
-        buf = exchange_schedule(prog.proc_schedule, rank, pids,
-                                local["buf"], send=send, recv=recv,
-                                metrics=self.metrics)
+        try:
+            buf = exchange_schedule(prog.proc_schedule, rank, pids,
+                                    local["buf"], send=send, recv=recv,
+                                    metrics=self.metrics)
+        except _StepAbort as e:
+            dp["pending"] = None
+            self.metrics.inc("step.aborted")
+            return {"aborted": True, "step": step, "reason": str(e)}
         return self._op_step_apply({**c, "buf": buf})
 
     def drain_deferred(self) -> List:

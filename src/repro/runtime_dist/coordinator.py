@@ -16,36 +16,65 @@ fingerprints the whole structure, and re-commits its process-level
 program cache. The coordinator asserts all fingerprints (its own
 included) agree — the distributed analogue of ``verify_epoch``.
 
+Fault tolerance (DESIGN.md §13). The cooperative demote→evict path
+needs the departing host to answer unlink handshakes; a crashed host
+never will. So the coordinator layers:
+
+* detection — a heartbeat thread + ``PhiDetector`` over the echo times
+  (socket clusters); suspect → confirm → declare-dead, with a hard
+  silence floor so one slow poll can't kill anyone;
+* at-least-once RPC — ``collect`` retransmits commands with bounded
+  exponential backoff; workers dedupe by command id and replay cached
+  replies, making every op exactly-once end to end;
+* non-cooperative eviction — ``recover_failure`` removes the dead host
+  from membership, bumps the generation, re-seeds every survivor's
+  shard from the surviving oracle (``ShardPhaser.rebuild``), and
+  continues; ``advance``/``train_step`` retry around it. A mid-step
+  crash resolves via ``step_status``: all-applied → done, none →
+  retry, mixed → ``StepInconsistent`` (checkpoint resume is the only
+  way back to replicated params).
+
 Two cluster fabrics drive the same coordinator:
 
 * ``InprocCluster``  — N logical processes in one address space over
   ``InprocFabric``; deterministic, used by tier-1 tests and the
-  ``--processes N`` trainer (device slices of one jax runtime).
+  ``--processes N`` trainer (device slices of one jax runtime). Pass
+  ``chaos=ChaosConfig(...)`` for seeded delay/reorder injection;
+  ``kill_host`` simulates crash-stop.
 * ``SocketCluster``  — real OS processes (``worker.py``) over AF_UNIX
   sockets; quiescence needs the Mattern-style double poll; used by the
-  control-plane latency benchmark and the slow churn test.
+  control-plane latency benchmark and the slow churn test. Pass
+  ``chaos=`` for RPC drop/dup + env delay; ``kill_pid`` SIGKILLs a
+  worker with no cleanup.
 """
 from __future__ import annotations
 
 import os
+import random
+import signal as _signal
 import subprocess
 import sys
+import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.phaser import SCSL, SNSL
 from ..obs.hub import ObsHub
 from .agent import HostAgent
 from .exchange import run_schedule_rounds
+from .failure import (HostDead, PeerUnreachable, PhiDetector, RpcTimeout,
+                      StepInconsistent, backoff)
 from .plane import COORD, ShardPhaser
-from .transport import InprocFabric, SocketEndpoint, fabric_dir
+from .transport import (ChaosConfig, FaultyEndpoint, FaultyInprocFabric,
+                        InprocFabric, SocketEndpoint, fabric_dir)
 
 
 @dataclass
 class HostEvent:
     step: int
-    kind: str    # "join" | "leave" | "fail" | "straggle" | "demote" | "repromote"
+    kind: str    # "join" | "leave" | "fail" | "straggle" | "demote"
+                 # | "repromote" | "dead" (non-cooperative eviction)
     pid: int
 
 
@@ -66,21 +95,34 @@ class DistEpoch:
         return len(self.live)
 
 
+class _StepAborted(Exception):
+    """Internal: one or more hosts unwound a peer-exchange step."""
+
+    def __init__(self, step: int, pids: Sequence[int]):
+        self.step = step
+        self.pids = list(pids)
+        super().__init__(f"step {step} aborted on {self.pids}")
+
+
 class InprocCluster:
     """All host agents in this address space, coordinator included."""
 
     peer_exchange = False   # steps run split (local halves + central rounds)
 
-    def __init__(self):
-        self.fabric = InprocFabric()
+    def __init__(self, *, chaos: Optional[ChaosConfig] = None):
+        self.fabric = (FaultyInprocFabric(chaos) if chaos is not None
+                       else InprocFabric())
         self.ep = self.fabric.endpoint(COORD)
         self.agents: Dict[int, HostAgent] = {}
         self.env_sink: Optional[Callable] = None   # unused (pump is direct)
+        self.dead: Set[int] = set()
 
     def add_host(self, pid: int, cfg: Dict) -> None:
         self.agents[pid] = HostAgent(pid, self.fabric.endpoint(pid), cfg)
 
-    def call(self, pid: int, cmd: Dict) -> Dict:
+    def call(self, pid: int, cmd: Dict, **kw) -> Dict:
+        if pid in self.dead:
+            raise HostDead(pid)
         r = self.agents[pid].handle(cmd)
         assert r.get("ok"), (pid, cmd.get("op"), r)
         return r
@@ -88,8 +130,27 @@ class InprocCluster:
     def post(self, pid: int, cmd: Dict):
         return self.call(pid, cmd)
 
-    def collect(self, handle) -> Dict:
+    def collect(self, handle, timeout: float = 0.0, watch=None) -> Dict:
         return handle
+
+    def kill_host(self, pid: int) -> None:
+        """Simulated crash-stop: the agent vanishes without running any
+        protocol; frames already addressed to it are reaped by the
+        fabric, future sends to it vanish (counted)."""
+        self.dead.add(pid)
+        self.agents.pop(pid, None)
+        self.fabric.drop_endpoint(pid)
+
+    def mark_dead(self, pid: int) -> None:
+        self.kill_host(pid)
+
+    def poll_failures(self) -> List[int]:
+        """No detector in-process — deaths are explicit ``kill_host``
+        calls; report them so the coordinator can recover proactively."""
+        return sorted(self.dead)
+
+    def fault_counters(self) -> Dict[str, int]:
+        return dict(self.fabric.faults)
 
     def drop_host(self, pid: int) -> None:
         del self.agents[pid]
@@ -97,13 +158,17 @@ class InprocCluster:
 
     def quiesce(self, coord_shard: ShardPhaser, limit: int = 100_000) -> None:
         """Synchronous sweeps: pump every shard until a full round moves
-        nothing and no frame sits in any inbox."""
+        nothing and no frame sits in any inbox. Under a chaos fabric a
+        stalled sweep advances fabric time instead, so limbo frames
+        come due and the sweep resumes."""
         for _ in range(limit):
             moved = coord_shard.pump()
             for pid in sorted(self.agents):
                 moved += self.agents[pid].shard.pump()
-            if moved == 0 and self.fabric.pending() == 0:
-                return
+            if moved == 0:
+                if self.fabric.pending() == 0:
+                    return
+                self.fabric.tick()
         raise AssertionError("in-process cluster did not quiesce")
 
     def close(self) -> None:
@@ -113,30 +178,85 @@ class InprocCluster:
 class SocketCluster:
     """Host agents as OS processes (``repro.runtime_dist.worker``) over
     AF_UNIX sockets. The coordinator endpoint shares its inbox between
-    protocol envelopes (routed to ``env_sink``) and command replies."""
+    protocol envelopes (routed to ``env_sink``), command replies, and
+    heartbeat echoes (fed to the failure detector)."""
 
     peer_exchange = True    # steps run whole, with peer-to-peer rounds
 
     def __init__(self, *, control_only: bool = False,
-                 python: Optional[str] = None):
+                 python: Optional[str] = None,
+                 hb_interval: float = 0.5,
+                 failure_timeout: float = 10.0,
+                 chaos: Optional[ChaosConfig] = None,
+                 orphan_timeout: Optional[float] = None):
+        from ..obs.metrics import MetricsRegistry
         self.dir = fabric_dir()
-        self.ep = SocketEndpoint(COORD, self.dir)
+        self.metrics = MetricsRegistry()
+        ep = SocketEndpoint(COORD, self.dir, metrics=self.metrics)
+        self.ep = (FaultyEndpoint(ep, chaos, metrics=self.metrics)
+                   if chaos is not None else ep)
         self.procs: Dict[int, subprocess.Popen] = {}
         self.env_sink: Optional[Callable] = None
         self.control_only = control_only
         self.python = python or sys.executable
+        self.hb_interval = hb_interval
+        self.failure_timeout = failure_timeout
+        self.orphan_timeout = (orphan_timeout if orphan_timeout is not None
+                               else max(10.0, 3.0 * failure_timeout))
         self._cid = 0
         self._reps: Dict[int, Dict] = {}
+        self._pending: Dict[int, Dict] = {}   # cid -> retransmit state
+        self._retry_rng = random.Random(0xC0FFEE)
+        self.detector = PhiDetector(interval=hb_interval,
+                                    timeout=failure_timeout,
+                                    metrics=self.metrics)
+        self.dead: Set[int] = set()
         # final counters of evicted hosts: their frames stay part of the
         # global sent/received balance after the process is gone
         self._ghost_sent = 0
         self._ghost_recv = 0
+        self._hb_stop = threading.Event()
+        self._hb_thread = threading.Thread(target=self._hb_loop,
+                                           daemon=True)
+        self._hb_thread.start()
 
+    # ------------------------------------------------------------ liveness
+    def _hb_loop(self) -> None:
+        seq = 0
+        while not self._hb_stop.wait(self.hb_interval):
+            seq += 1
+            for pid in list(self.procs):
+                if pid in self.dead:
+                    continue
+                try:
+                    self.ep.send(pid, "hb", (seq, time.monotonic()))
+                except (PeerUnreachable, OSError, ValueError):
+                    pass    # detector accounts the missing echo
+
+    def _is_dead(self, pid: int) -> bool:
+        return pid in self.dead or pid in self.detector.declared
+
+    def poll_failures(self) -> List[int]:
+        # drain queued heartbeat echoes first: between RPCs nothing else
+        # empties the inbox, and acks the detector never saw would read
+        # as silence from every host at once
+        while self._drain(0.0):
+            pass
+        self.detector.poll()
+        return sorted(set(self.detector.declared) - self.dead)
+
+    def fault_counters(self) -> Dict[str, int]:
+        snap = self.metrics.snapshot()["counters"]
+        return {k.split("chaos.", 1)[1]: v for k, v in snap.items()
+                if k.startswith("chaos.")}
+
+    # ------------------------------------------------------------ lifecycle
     def _spawn(self, pid: int, cfg: Dict) -> None:
         env = dict(os.environ)
         root = os.getcwd()
         src = os.path.join(root, "src")
         env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["PHASER_ORPHAN_TIMEOUT"] = str(self.orphan_timeout)
         data = cfg.get("data")
         if data is not None:
             env["JAX_PLATFORMS"] = "cpu"
@@ -146,12 +266,40 @@ class SocketCluster:
             [self.python, "-m", "repro.runtime_dist.worker",
              "--dir", self.dir, "--pid", str(pid)],
             env=env, cwd=root)
+        self.detector.touch(pid)
 
     def add_host(self, pid: int, cfg: Dict) -> None:
         self._spawn(pid, cfg)
         r = self.call(pid, {"op": "init", "cfg": cfg}, timeout=600.0)
         assert r.get("ok"), (pid, r)
 
+    def kill_pid(self, pid: int) -> None:
+        """Hard crash for tests/chaos: SIGKILL, no cleanup whatsoever —
+        detection must come from the heartbeat timeout."""
+        os.kill(self.procs[pid].pid, _signal.SIGKILL)
+
+    def mark_dead(self, pid: int) -> None:
+        """Non-cooperative removal after a declare-dead: reap the OS
+        process, drop cached connections and in-flight commands."""
+        self.dead.add(pid)
+        self.detector.remove(pid)
+        p = self.procs.pop(pid, None)
+        if p is not None:
+            try:
+                p.kill()
+            except OSError:
+                pass
+            try:
+                p.wait(timeout=30)
+            except Exception:
+                pass
+        self.ep.forget_peer(pid)
+        for cid in [c for c, e in self._pending.items()
+                    if e["pid"] == pid]:
+            self._pending.pop(cid, None)
+        self.metrics.inc("cluster.marked_dead")
+
+    # ------------------------------------------------------------------ rpc
     def _drain(self, timeout: float) -> bool:
         frame = self.ep.recv(timeout=timeout)
         if frame is None:
@@ -159,31 +307,87 @@ class SocketCluster:
         src, tag, payload = frame
         if tag == "rep":
             cid, reply = payload
-            self._reps[cid] = reply
+            if cid in self._pending:
+                self._pending.pop(cid)
+                self._reps[cid] = reply
+            else:
+                # duplicated or abandoned reply (chaos / late worker)
+                self.metrics.inc("rpc.stale_reps")
+        elif tag == "hb":
+            seq, t_sent = payload
+            self.detector.on_ack(src)
+            self.metrics.observe("hb.rtt_seconds",
+                                 time.monotonic() - t_sent)
         elif tag == "env":
             assert self.env_sink is not None
             self.env_sink(payload)
         else:
-            raise AssertionError(f"coordinator got {tag} frame from {src}")
+            self.metrics.inc(f"transport.unexpected_{tag}")
         return True
 
     def post(self, pid: int, cmd: Dict):
         self._cid += 1
         cid = self._cid
-        self.ep.send(pid, "cmd", (cid, cmd))
+        now = time.monotonic()
+        self._pending[cid] = {
+            "pid": pid, "cmd": cmd, "attempts": 1, "t0": now,
+            "retry_at": now + backoff(1, 0.25, 2.0, self._retry_rng)}
+        try:
+            self.ep.send(pid, "cmd", (cid, cmd))
+        except (PeerUnreachable, OSError):
+            self.metrics.inc("rpc.post_send_failures")
         return cid
 
-    def collect(self, cid, timeout: float = 600.0) -> Dict:
-        deadline = time.monotonic() + timeout
+    def collect(self, cid, timeout: float = 600.0, watch=None) -> Dict:
+        """Await the reply for ``cid`` with at-least-once delivery:
+        retransmit on a backoff schedule (the worker's cid dedupe makes
+        that safe), raise ``HostDead`` the moment the detector declares
+        the target — or any ``watch``-ed pid — dead, and ``RpcTimeout``
+        only if the full deadline passes with the peer still alive."""
+        t0 = time.monotonic()
+        deadline = t0 + timeout
         while cid not in self._reps:
-            self._drain(timeout=0.05)
-            assert time.monotonic() < deadline, f"no reply for cmd {cid}"
+            self._drain(0.05)
+            while self._drain(0):
+                pass
+            self.detector.poll()
+            ent = self._pending.get(cid)
+            pid = ent["pid"] if ent is not None else None
+            if pid is not None and self._is_dead(pid):
+                self._pending.pop(cid, None)
+                raise HostDead(pid)
+            for w in (watch or ()):
+                if self._is_dead(w):
+                    self._pending.pop(cid, None)
+                    raise HostDead(w)
+            now = time.monotonic()
+            if ent is not None and now >= ent["retry_at"]:
+                ent["attempts"] += 1
+                self.metrics.inc("rpc.retries")
+                try:
+                    self.ep.send(pid, "cmd", (cid, ent["cmd"]))
+                except (PeerUnreachable, OSError):
+                    self.metrics.inc("rpc.retry_send_failures")
+                ent["retry_at"] = now + backoff(ent["attempts"], 0.25,
+                                                2.0, self._retry_rng)
+            if now >= deadline:
+                self._pending.pop(cid, None)
+                raise RpcTimeout(pid if pid is not None else -1, cid,
+                                 now - t0,
+                                 ent["attempts"] if ent else 0)
         r = self._reps.pop(cid)
         assert r.get("ok"), (cid, r)
         return r
 
     def call(self, pid: int, cmd: Dict, timeout: float = 600.0) -> Dict:
         return self.collect(self.post(pid, cmd), timeout=timeout)
+
+    def abandon(self, cids) -> None:
+        """Stop retransmitting (and drop any cached reply for) commands
+        the caller no longer awaits — a step unwound by recovery."""
+        for cid in cids:
+            self._pending.pop(cid, None)
+            self._reps.pop(cid, None)
 
     def drop_host(self, pid: int) -> None:
         try:
@@ -192,6 +396,7 @@ class SocketCluster:
             self._ghost_recv += r["received"]
             self.call(pid, {"op": "shutdown"}, timeout=30.0)
         finally:
+            self.detector.remove(pid)
             p = self.procs.pop(pid)
             p.wait(timeout=60)
             self.ep.forget_peer(pid)
@@ -226,11 +431,20 @@ class SocketCluster:
         raise AssertionError("socket cluster did not quiesce")
 
     def close(self) -> None:
+        self._hb_stop.set()
+        if self._hb_thread.is_alive():
+            self._hb_thread.join(timeout=5)
         for pid in list(self.procs):
             try:
                 self.drop_host(pid)
             except Exception:
-                self.procs.pop(pid, None)
+                p = self.procs.pop(pid, None)
+                if p is not None:
+                    try:
+                        p.kill()
+                        p.wait(timeout=10)
+                    except Exception:
+                        pass
         self.ep.close()
 
 
@@ -258,6 +472,7 @@ class DistCoordinator:
         self.epochs: List[DistEpoch] = []
         self._dirty = False
         self._step = 0
+        self._gen = 0            # membership incarnation (bumped per death)
         self._strikes: Dict[int, int] = {}
         self._on_epoch: List[Callable[[DistEpoch, DistEpoch], None]] = []
         # obs plane: per-frame span traces collected at every quiescent
@@ -272,6 +487,12 @@ class DistCoordinator:
         self._compile_pending = self._has_data
         self.shard = ShardPhaser(COORD, cluster.ep, live=self.live,
                                  p=p, seed=seed, obs=obs)
+        # frames swallowed at the fabric (dead destination) still close
+        # their spans: wire the fabric's reaper to the coordinator's
+        # blackhole edge so the causal trees stay complete
+        fab = getattr(cluster, "fabric", None)
+        if fab is not None:
+            fab.reaper = self._reap_frame
         if cluster.env_sink is None:
             cluster.env_sink = self._ingest_env
         for pid in sorted(self.live):
@@ -283,11 +504,20 @@ class DistCoordinator:
         self.shard.net.ingest(env)
         self.shard.net.deliver_all()
 
+    def _reap_frame(self, payload, tag: str) -> None:
+        if tag == "env":
+            self.shard.net._blackhole(payload)
+
     def _cfg_for(self, pid: int) -> Dict:
         return {"seed": self.seed, "p": self.p, "axis": self.axis_name,
                 "proc_kind": self.proc_kind,
                 "live": sorted(self.live), "demoted": sorted(self.demoted),
                 "obs": self.obs is not None,
+                # a host joining after a non-cooperative eviction must be
+                # born into the CURRENT incarnation, or the survivors'
+                # gen-stamped frames (its own MURS_ACK included) get
+                # fenced at its ingest and the splice never completes
+                "gen": self._gen,
                 "data": self._data_for(pid)}
 
     def _call(self, pid: int, cmd: Dict, **kw) -> Dict:
@@ -303,12 +533,20 @@ class DistCoordinator:
 
     def _collect_obs(self) -> None:
         """Pull every shard's span records + metrics snapshot into the
-        hub (the coordinator's own shard included)."""
+        hub (the coordinator's own shard and the cluster's transport
+        shard included)."""
         assert self.obs is not None
         self.obs.ingest(COORD, self.shard.drain_obs())
         for pid in sorted(self.live):
             r = self._call(pid, {"op": "obs"})
             self.obs.ingest(pid, r["spans"], r["metrics"])
+        cm = getattr(self.cluster, "metrics", None)
+        if cm is not None:
+            self.obs.ingest(-2, [], cm.snapshot())
+        fc = getattr(self.cluster, "fault_counters", None)
+        if fc is not None:
+            for k, v in fc().items():
+                self.obs.metrics.set(f"fault.{k}", v)
 
     def export_obs(self, trace_path: Optional[str] = None,
                    metrics_path: Optional[str] = None) -> None:
@@ -329,6 +567,10 @@ class DistCoordinator:
     @property
     def epoch(self) -> DistEpoch:
         return self.epochs[-1]
+
+    @property
+    def gen(self) -> int:
+        return self._gen
 
     @property
     def pending_churn(self) -> bool:
@@ -380,7 +622,14 @@ class DistCoordinator:
                      step: Optional[int] = None) -> int:
         """Host arrival: spawn/attach the process, materialize its actor
         on its own shard (fast single-link path starts at the parent's
-        owner), run the splice + lazy promotion to quiescence."""
+        owner), run the splice + lazy promotion to quiescence.
+
+        Any host already declared dead is evicted FIRST: the cooperative
+        splice assumes every participant answers, so running it against
+        a membership that still contains a corpse would leave the
+        structure partially linked (frames to the dead host are reaped
+        at the fabric, never acked)."""
+        self._check_cluster_failures(step=step)
         pid = self.next_pid
         self.next_pid += 1
         if parent is None:
@@ -402,7 +651,9 @@ class DistCoordinator:
         """Host eviction: the existing demote→evict path — DEREG lowers
         the expectation, level-by-level unlink runs to quiescence, then
         the process leaves the cluster."""
-        assert pid in self.live, (pid, sorted(self.live))
+        self._check_cluster_failures(step=step)
+        if pid not in self.live:
+            return                    # already evicted non-cooperatively
         self._call(pid, {"op": "drop", "key": pid})
         self._quiesce()
         self.live.discard(pid)
@@ -420,8 +671,8 @@ class DistCoordinator:
         self._dirty = True
 
     def request_demote(self, pid: int, *, step: Optional[int] = None) -> None:
-        assert pid in self.live
-        if pid in self.demoted:
+        self._check_cluster_failures(step=step)
+        if pid not in self.live or pid in self.demoted:
             return
         self._call(pid, {"op": "demote", "key": pid})
         self._quiesce()
@@ -432,6 +683,7 @@ class DistCoordinator:
 
     def request_repromote(self, pid: int, *,
                           step: Optional[int] = None) -> None:
+        self._check_cluster_failures(step=step)
         if pid not in self.live or pid not in self.demoted:
             return
         self._call(pid, {"op": "repromote", "key": pid})
@@ -444,8 +696,99 @@ class DistCoordinator:
     def _at(self, step: Optional[int]) -> int:
         return self._step if step is None else step
 
+    # ----------------------------------------------------------- recovery
+    def _check_cluster_failures(self, *, step: Optional[int] = None
+                                ) -> List[int]:
+        """Proactively recover any host the cluster's detector has
+        declared dead; returns the pids recovered this call."""
+        poll = getattr(self.cluster, "poll_failures", None)
+        if poll is None:
+            return []
+        recovered = []
+        for pid in poll():
+            if pid in self.live:
+                self.recover_failure(pid, step=step)
+                recovered.append(pid)
+        return recovered
+
+    def recover_failure(self, pid: int, *,
+                        step: Optional[int] = None) -> None:
+        """Non-cooperative eviction of a crashed host (DESIGN.md §13).
+
+        The dead host cannot answer unlink handshakes, so instead of the
+        cooperative two-phase dance every survivor re-seeds its shard
+        from the surviving membership's oracle at the coordinator's
+        released phase (``ShardPhaser.rebuild``), under a bumped
+        generation that fences the dead incarnation's in-flight frames.
+        A survivor dying *during* recovery just extends the cascade."""
+        pending = [pid]
+        while pending:
+            d = pending.pop(0)
+            if d not in self.live:
+                continue
+            t0 = time.perf_counter()
+            det = getattr(self.cluster, "detector", None)
+            decl = (dict(det.declared[d])
+                    if det is not None and d in det.declared else None)
+            tr = self.shard.tracer
+            if tr is not None:
+                tr.root("failure", d)
+            self.live.discard(d)
+            self.demoted.discard(d)
+            self._strikes.pop(d, None)
+            self.cluster.mark_dead(d)
+            self._gen += 1
+            phase = self.shard.released()
+            live, dem = sorted(self.live), sorted(self.demoted)
+            self.shard.rebuild(live, dem, phase, self._gen)
+            # the Mattern balance restarts for the new incarnation: the
+            # dead host's final counters are unknowable, and rebuild
+            # zeroed every survivor's flight counters
+            if hasattr(self.cluster, "_ghost_sent"):
+                self.cluster._ghost_sent = 0
+                self.cluster._ghost_recv = 0
+            for s in live:
+                if tr is not None:
+                    tr.span_under(d, "force_evict", s)
+                try:
+                    self._call(s, {"op": "force_evict", "live": live,
+                                   "demoted": dem, "phase": phase,
+                                   "gen": self._gen})
+                except HostDead as e:
+                    if e.pid not in pending:
+                        pending.append(e.pid)
+            self.events.append(HostEvent(self._at(step), "dead", d))
+            self._dirty = True
+            if self.obs is not None:
+                self.obs.note_lost(d)
+                self.obs.metrics.inc("failure.declared_dead")
+                self.obs.metrics.observe("failure.recover_seconds",
+                                         time.perf_counter() - t0)
+                if decl is not None:
+                    self.obs.metrics.observe("failure.detection_seconds",
+                                             decl["silence"])
+
     # ----------------------------------------------------------- stepping
     def advance(self, *, step: Optional[int] = None) -> int:
+        """One phase, fault-tolerant: any ``HostDead`` surfaced while
+        signalling/quiescing triggers non-cooperative recovery, after
+        which the whole phase is retried against the survivors (the
+        rebuild reset every survivor's signal cursor, and generation
+        fencing discards the aborted attempt's frames)."""
+        last: Optional[HostDead] = None
+        for _ in range(2 + len(self.live)):
+            self._check_cluster_failures(step=step)
+            if not self.live:
+                raise RuntimeError("advance: no live hosts left")
+            try:
+                return self._advance_once(step=step)
+            except HostDead as e:
+                last = e
+                self.recover_failure(e.pid, step=step)
+        raise RuntimeError(f"advance: unrecoverable failure cascade "
+                           f"({last})")
+
+    def _advance_once(self, *, step: Optional[int] = None) -> int:
         """One phase: every live host signals its own actor, the
         protocol quiesces across processes, and a dirty boundary derives
         (and verifies) the next epoch on every survivor."""
@@ -471,7 +814,44 @@ class DistCoordinator:
         self._step += 1
         return released
 
+    def _abort_step(self, step: int) -> None:
+        """Best-effort out-of-band unwind: survivors blocked inside a
+        peer-exchange step can't serve commands, so the abort rides the
+        raw ``ctl`` stream their in-step recv loop does watch."""
+        if not getattr(self.cluster, "peer_exchange", False):
+            return
+        for pid in sorted(self.live):
+            try:
+                self.cluster.ep.send(pid, "ctl", ("abort_step", step))
+            except Exception:
+                pass
+
     def train_step(self, step: int) -> Dict[int, Dict]:
+        """One data-parallel step across the cluster, fault-tolerant:
+        a crash mid-step aborts the survivors' exchanges (``ctl``),
+        recovers the membership, then resolves via ``step_status`` —
+        every survivor already applied → the step is done; none →
+        retry it against the shrunk cluster; a strict subset →
+        ``StepInconsistent`` (params diverged; the caller falls back to
+        a checkpoint-consistent ``resume``)."""
+        for attempt in range(4):
+            self._check_cluster_failures(step=step)
+            if not self.live:
+                raise RuntimeError("train_step: no live hosts left")
+            try:
+                return self._train_step_once(step)
+            except HostDead as e:
+                self._abort_step(step)
+                self.recover_failure(e.pid, step=step)
+            except _StepAborted:
+                self._abort_step(step)
+                self._check_cluster_failures(step=step)
+            res = self._resolve_step(step)
+            if res is not None:
+                return res
+        raise RuntimeError(f"train_step {step}: retries exhausted")
+
+    def _train_step_once(self, step: int) -> Dict[int, Dict]:
         """One data-parallel step across the cluster: local grads + local
         reduce on every host, the process-level schedule between hosts,
         jitted apply everywhere. Socket mode exchanges the rounds
@@ -480,16 +860,57 @@ class DistCoordinator:
         pids = sorted(self.live)
         if self.cluster.peer_exchange:
             handles = [(pid, self.cluster.post(pid, {"op": "step",
-                                                     "step": step}))
+                                                     "step": step,
+                                                     "gen": self._gen}))
                        for pid in pids]
-            return {pid: self.cluster.collect(h) for pid, h in handles}
+            out = {}
+            try:
+                for pid, h in handles:
+                    out[pid] = self.cluster.collect(h, watch=pids)
+            except BaseException:
+                ab = getattr(self.cluster, "abandon", None)
+                if ab is not None:
+                    ab([h for _, h in handles])
+                raise
+            aborted = [p for p, r in out.items() if r.get("aborted")]
+            if aborted:
+                raise _StepAborted(step, aborted)
+            return out
         bufs = {pid: self._call(pid, {"op": "step_local",
                                              "step": step})["buf"]
                 for pid in pids}
         red = run_schedule_rounds(self._proc_schedule(), bufs)
         return {pid: self._call(pid, {"op": "step_apply",
-                                             "buf": red[pid]})
+                                             "buf": red[pid],
+                                             "step": step})
                 for pid in pids}
+
+    def _resolve_step(self, step: int) -> Optional[Dict[int, Dict]]:
+        """Post-crash consistency probe: ask every survivor which step
+        it last applied. All applied ``step`` → return their recorded
+        results; none → None (the caller retries the step); a strict
+        subset → ``StepInconsistent``."""
+        while True:
+            stat: Dict[int, Dict] = {}
+            try:
+                for pid in sorted(self.live):
+                    stat[pid] = self._call(pid, {"op": "step_status"})
+            except HostDead as e:
+                self.recover_failure(e.pid, step=step)
+                continue
+            if not stat:
+                return None
+            applied = {p for p, s in stat.items()
+                       if s.get("step") == step}
+            if not applied:
+                return None
+            if applied == set(stat):
+                if self.obs is not None:
+                    self.obs.metrics.inc("failure.step_resolved_applied")
+                return {p: {k: v for k, v in stat[p].items()
+                            if k != "ok"} for p in stat}
+            raise StepInconsistent(step, {p: s.get("step", -1)
+                                          for p, s in stat.items()})
 
     def _proc_schedule(self):
         from ..core.collective import PhaserCollective

@@ -59,26 +59,54 @@ class PartitionedNetwork(Network):
         # stale notifications (ADV fan-out books) and ignores them
         self.dropped: Set[int] = set()
         self.black_holed = 0
+        # membership generation: bumped by the coordinator's
+        # non-cooperative recovery; stamped on every outgoing envelope
+        # and checked at ingest so frames from the pre-crash incarnation
+        # can never reach the rebuilt actors
+        self.gen = 0
+        self.stale_gen = 0
+        self.send_failed = 0    # remote sends to a crashed peer
+
+    def _blackhole(self, env: Envelope) -> None:
+        if self.tracer is not None and env.trace is not None:
+            # the span still closes: eviction fan-out must not
+            # leave dangling spans in the causal tree
+            self.tracer.on_blackhole(env.trace)
 
     def post(self, env: Envelope) -> None:
+        env.gen = self.gen
         if env.msg.dst in self.dropped:
             self.black_holed += 1
-            if self.tracer is not None and env.trace is not None:
-                # the span still closes: eviction fan-out must not
-                # leave dangling spans in the causal tree
-                self.tracer.on_blackhole(env.trace)
+            self._blackhole(env)
             return
         owner = self.owner_of(env.msg.dst)
         if owner == self.pid:
             super().post(env)
             return
         self.sent[env.msg.kind] += 1
+        try:
+            self.endpoint.send(owner, "env", env)
+        except (OSError, ConnectionError):
+            # crash-stop peer: the frame is gone; count it and close
+            # the span — detection/recovery is the coordinator's job
+            self.send_failed += 1
+            self._blackhole(env)
+            return
         self.remote_sent += 1
-        self.endpoint.send(owner, "env", env)
 
     def ingest(self, env: Envelope) -> None:
         """Arrival of a remote envelope: enqueue without re-counting the
-        send (the source shard already did)."""
+        send (the source shard already did). Frames from an older
+        membership generation are fenced here (their senders were
+        rebuilt or died); their spans close as blackholed."""
+        if getattr(env, "gen", 0) != self.gen:
+            self.stale_gen += 1
+            self._blackhole(env)
+            return
+        if env.msg.dst in self.dropped:
+            self.black_holed += 1
+            self._blackhole(env)
+            return
         self.remote_received += 1
         self.channels[(env.msg.src, env.msg.dst)].append(env)
 
@@ -126,6 +154,8 @@ class ShardPhaser:
             self.modes.update(modes)
         self.async_parent: Dict[int, int] = {}
         self.release_log: List[int] = []
+        self.gen = 0                 # membership incarnation (recovery)
+        self.stray: List = []        # non-env frames surfaced by pump()
         self.actors: Dict[int, PhaserActor] = {}
         local = [k for k in sorted(self.live) if owner_of(k) == pid]
         if owner_of(HEAD) == pid:
@@ -170,9 +200,14 @@ class ShardPhaser:
                               p=self.p, max_height=self.max_height,
                               seed=self.seed, leaf_keys=self.demoted)
 
-    def _init_list(self, lid: int, keys: List[int]) -> None:
+    def _init_list(self, lid: int, keys: List[int],
+                   phase_start: int = 0) -> None:
         """Seed the local actors' list states from the global oracle —
-        every shard computes the same structure, installs its slice."""
+        every shard computes the same structure, installs its slice.
+        ``phase_start`` > 0 is the crash-recovery path: the rebuilt
+        incarnation opens its books at the first un-released phase, so
+        the fresh state is exactly boot state shifted by the phases the
+        previous incarnation already closed."""
         sl = self.oracle(keys)
         for k, a in self.actors.items():
             if k != HEAD and k not in keys:
@@ -185,12 +220,14 @@ class ShardPhaser:
             st.target_height = st.height
             st.nxt = list(node.nxt)
             st.prv = list(node.prv)
-            st.books = {c: [[0, None]] for c in sl.children(k)}
+            st.books = {c: [[phase_start, None]] for c in sl.children(k)}
             par = sl.parent(k)
             if par is not None:
-                st.adv = [[0, None, par]]
+                st.adv = [[phase_start, None, par]]
+            st.first_phase = phase_start
+            st.closed = phase_start - 1
             if lid == SNSL:
-                st.released = -1
+                st.released = phase_start - 1
 
     def local_states(self, lid: int) -> Dict[int, Tuple[int, Tuple, Tuple]]:
         """(height, nxt, prv) for every locally-owned live actor (HEAD
@@ -287,6 +324,62 @@ class ShardPhaser:
         for k in self.live:
             self.modes.setdefault(k, SIG_WAIT)
 
+    # ---------------------------------------------------------- recovery
+    def rebuild(self, live: Iterable[int], demoted: Iterable[int],
+                phase: int, gen: int) -> None:
+        """Non-cooperative eviction (DESIGN.md §13): a host died without
+        running the demote→evict protocol, so its actors can never
+        answer the unlink handshakes. Instead of forging the dead
+        owner's messages, every survivor re-seeds its shard from the
+        oracle of the surviving membership — the same ``_init_list``
+        path boot uses, fast-forwarded to open at ``phase + 1`` (the
+        first phase HEAD has not released). In-flight envelopes of the
+        old incarnation are discarded here (their spans close as
+        blackholed) and fenced at ingest by the ``gen`` stamp."""
+        gone = self.live - set(live)
+        self.net.dropped |= gone
+        self.live = set(live)
+        self.demoted = set(demoted)
+        for k in self.live:
+            self.modes.setdefault(k, SIG_WAIT)
+        # drop the old incarnation's in-flight frames, closing spans so
+        # the causal trees stay complete
+        for q in self.net.channels.values():
+            for env in q:
+                self.net._blackhole(env)
+        self.net.channels.clear()
+        self.net.gen = gen
+        self.gen = gen
+        # flight counters restart at zero on every survivor at the same
+        # recovery point: the Mattern balance is re-founded for the new
+        # incarnation (the dead host's counters are unknowable)
+        self.net.remote_sent = 0
+        self.net.remote_received = 0
+        self.net.actors.clear()
+        self.actors.clear()
+        self.async_parent.clear()
+        start = phase + 1
+        local = [k for k in sorted(self.live) if self.owner_of(k) == self.pid]
+        if self.owner_of(HEAD) == self.pid:
+            local = [HEAD] + local
+        for k in local:
+            a = PhaserActor(k, self.net, self.modes.get(k, SIG_WAIT),
+                            phaser=self)
+            a.sig_next = start
+            a.wait_next = start
+            self.actors[k] = a
+            self.net.register(a)
+        sig = [k for k in sorted(self.live)
+               if self.modes[k] in (SIG_MODE, SIG_WAIT)]
+        wait = [k for k in sorted(self.live)
+                if self.modes[k] in (WAIT_MODE, SIG_WAIT)]
+        self._init_list(SCSL, sig, phase_start=start)
+        self._init_list(SNSL, wait, phase_start=start)
+        if HEAD in self.actors:
+            head = self.actors[HEAD]
+            head.expected_base = len(sig)
+            head.head_released = phase
+
     # ---------------------------------------------------------- pumping
     def pump(self) -> int:
         """Ingest every queued transport envelope, then deliver local
@@ -297,10 +390,25 @@ class ShardPhaser:
             if frame is None:
                 break
             src, tag, payload = frame
+            if tag == "red":
+                self.stray.append(frame)   # a peer's step round: held
+                continue
+            if tag in ("ctl", "hb"):
+                continue                   # stale control frames
+            if tag == "cmd":
+                # A retransmitted/duplicated command raced into the inbox
+                # while we were servicing another op: park it for the
+                # worker main loop (which dedupes by command id).
+                self.stray.append(frame)
+                continue
             assert tag == "env", f"unexpected {tag} frame in pump"
             self.net.ingest(payload)
         moved += self.net.deliver_all()
         return moved
+
+    def drain_stray(self) -> List:
+        out, self.stray = self.stray, []
+        return out
 
     def flight_counters(self) -> Tuple[int, int]:
         return self.net.remote_sent, self.net.remote_received

@@ -20,21 +20,71 @@ Two fabrics provide it:
 
 Frames are ``(src, tag, payload)``; tags in use: ``"env"`` (a protocol
 ``Envelope``), ``"cmd"``/``"rep"`` (coordinator RPC), ``"red"``
-(data-plane reduction buffers), ``"hello"`` (stream header).
+(data-plane reduction buffers), ``"hb"`` (heartbeat, echoed by the
+reader thread), ``"ctl"`` (out-of-band step control, e.g. abort),
+``"hello"`` (stream header).
+
+Chaos layer (DESIGN.md §13): ``ChaosConfig`` + ``FaultyInprocFabric`` /
+``FaultyEndpoint`` decorate the two fabrics with a *seeded, per-(src,
+dst)* fault policy. Faults are injected only where a recovery mechanism
+exists for them:
+
+* RPC frames (``cmd``/``rep``/``hb``) may be dropped or duplicated —
+  retry with idempotent command ids recovers both;
+* protocol envelopes (``env``) may be *delayed and reordered across
+  channels* but never dropped or duplicated within a live channel: the
+  protocol's SIG counting has no retransmission and is not
+  duplication-safe, and per-(src, dst) FIFO is its only ordering
+  assumption — so injection queues later frames of a delayed channel
+  behind the delayed head (FIFO preserved end to end), and only frames
+  addressed to a *dead* endpoint are dropped (counted, and their spans
+  closed as blackholed through the ``reaper`` hook);
+* hard crash: ``SocketCluster.kill_pid`` (SIGKILL, no cleanup) and
+  ``InprocCluster.kill_host`` (simulated crash-stop).
+
+Every injected fault lands in the metrics registry / fault counters so
+it stays attributable next to the span traces.
 """
 from __future__ import annotations
 
 import os
 import queue
+import random
 import tempfile
 import threading
 import time
-from collections import deque
-from typing import Any, Dict, Optional, Tuple
+from collections import defaultdict, deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from .failure import PeerUnreachable
 
 Frame = Tuple[int, str, Any]  # (src pid, tag, payload)
 
+# tags a retry + idempotency layer recovers: safe to drop/duplicate
+RPC_TAGS = ("cmd", "rep", "hb")
 
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault policy; every rate is per-frame, per ordered
+    (src, dst) channel (each channel owns a derived rng, so one
+    channel's draws never perturb another's — runs are reproducible
+    under membership churn)."""
+
+    seed: int = 0
+    p_drop: float = 0.05      # RPC frames only
+    p_dup: float = 0.02       # RPC frames only
+    p_delay: float = 0.2      # env frames: probability of entering limbo
+    delay_ticks: int = 3      # inproc: max extra delivery ticks
+    max_delay: float = 0.05   # socket: max extra seconds in limbo
+
+    def rng(self, src: int, dst: int) -> random.Random:
+        return random.Random((self.seed * 1_000_003
+                              + (src + 7) * 8191 + (dst + 7)) & 0x7FFFFFFF)
+
+
+# ---------------------------------------------------------------------------
 class Endpoint:
     """One process's port on a fabric."""
 
@@ -64,10 +114,8 @@ class InprocEndpoint(Endpoint):
         self.inbox: deque = deque()
 
     def send(self, dst: int, tag: str, payload: Any) -> None:
-        ep = self.fabric.endpoints.get(dst)
-        assert ep is not None, f"send to unknown pid {dst}"
         self.frames_sent += 1
-        ep.inbox.append((self.pid, tag, payload))
+        self.fabric.transmit(self.pid, dst, tag, payload)
 
     def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
         if not self.inbox:
@@ -81,18 +129,114 @@ class InprocFabric:
 
     def __init__(self):
         self.endpoints: Dict[int, InprocEndpoint] = {}
+        self.removed: set = set()         # pids that once had an endpoint
+        self.faults: Dict[str, int] = defaultdict(int)
+        # span-close hook for frames swallowed at the fabric (dead
+        # destination): the coordinator wires this to its tracer so the
+        # causal tree never dangles
+        self.reaper: Optional[Callable[[Any, str], Any]] = None
 
     def endpoint(self, pid: int) -> InprocEndpoint:
         assert pid not in self.endpoints, pid
         ep = InprocEndpoint(pid, self)
         self.endpoints[pid] = ep
+        self.removed.discard(pid)
         return ep
 
     def drop_endpoint(self, pid: int) -> None:
-        self.endpoints.pop(pid, None)
+        if self.endpoints.pop(pid, None) is not None:
+            self.removed.add(pid)
+
+    def _reap(self, tag: str, payload: Any) -> None:
+        self.faults["dead_dropped"] += 1
+        if self.reaper is not None:
+            self.reaper(payload, tag)
+
+    def transmit(self, src: int, dst: int, tag: str, payload: Any) -> None:
+        ep = self.endpoints.get(dst)
+        if ep is None:
+            # crash-stop semantics: frames to a dead host vanish —
+            # counted, never raised (the sender may not know yet)
+            assert dst in self.removed, f"send to unknown pid {dst}"
+            self._reap(tag, payload)
+            return
+        ep.inbox.append((src, tag, payload))
 
     def pending(self) -> int:
         return sum(len(ep.inbox) for ep in self.endpoints.values())
+
+    def tick(self) -> int:
+        return 0    # no time-based state in the fault-free fabric
+
+
+class FaultyInprocFabric(InprocFabric):
+    """Seeded delay/reorder-across-channels for the in-process fabric.
+
+    Only ``env`` frames ride this fabric (in-proc RPC is a direct
+    call), so the injected fault is exactly the one the protocol must
+    tolerate: a channel's frames go into *limbo* for a bounded number
+    of delivery ticks, later frames on the same channel queue behind
+    the delayed head (per-channel FIFO preserved), while other
+    channels' frames overtake freely. Deterministic in (seed, traffic).
+    """
+
+    def __init__(self, chaos: ChaosConfig):
+        super().__init__()
+        self.chaos = chaos
+        self._rngs: Dict[Tuple[int, int], random.Random] = {}
+        # (src, dst) -> deque of [release_tick, tag, payload]
+        self.limbo: Dict[Tuple[int, int], deque] = defaultdict(deque)
+        self._tick = 0
+
+    def _rng(self, src: int, dst: int) -> random.Random:
+        key = (src, dst)
+        if key not in self._rngs:
+            self._rngs[key] = self.chaos.rng(src, dst)
+        return self._rngs[key]
+
+    def transmit(self, src: int, dst: int, tag: str, payload: Any) -> None:
+        self._tick += 1
+        ch = (src, dst)
+        q = self.limbo[ch]
+        rng = self._rng(src, dst)
+        delay = rng.random() < self.chaos.p_delay
+        if q or delay:
+            release = self._tick + (rng.randint(1, self.chaos.delay_ticks)
+                                    if delay else 0)
+            if q:
+                release = max(release, q[-1][0])   # never overtake the head
+            q.append([release, tag, payload])
+            self.faults["delayed"] += 1
+        else:
+            super().transmit(src, dst, tag, payload)
+        self._release_due()
+
+    def _release_due(self) -> int:
+        n = 0
+        for ch in sorted(k for k, q in self.limbo.items() if q):
+            q = self.limbo[ch]
+            while q and q[0][0] <= self._tick:
+                _, tag, payload = q.popleft()
+                super().transmit(ch[0], ch[1], tag, payload)
+                n += 1
+                self.faults["released"] += 1
+        return n
+
+    def tick(self) -> int:
+        """Advance fabric time without traffic (quiescence driver):
+        limbo frames come due even when nobody is sending."""
+        self._tick += 1
+        return self._release_due()
+
+    def drop_endpoint(self, pid: int) -> None:
+        super().drop_endpoint(pid)
+        for ch in list(self.limbo):
+            if ch[1] == pid:
+                for _, tag, payload in self.limbo.pop(ch):
+                    self._reap(tag, payload)
+
+    def pending(self) -> int:
+        return super().pending() + sum(len(q) for q in self.limbo.values())
 
 
 # ---------------------------------------------------------------------------
@@ -107,20 +251,42 @@ def _sock_path(directory: str, pid: int) -> str:
 
 
 class SocketEndpoint(Endpoint):
-    """AF_UNIX endpoint: own listener + lazy outbound connections."""
+    """AF_UNIX endpoint: own listener + lazy outbound connections.
 
-    def __init__(self, pid: int, directory: str):
+    ``hb_echo=True`` (worker side) makes the *reader thread* echo
+    heartbeat frames back to their source — liveness is then a
+    transport property, independent of how long the main loop spends
+    inside a command (a multi-second jax compile must not look like a
+    death), while a SIGKILL stops the reader and therefore the echoes.
+    ``last_rx`` timestamps every arrival, so an orphaned worker can
+    notice its coordinator went silent.
+    """
+
+    def __init__(self, pid: int, directory: str, *, metrics=None,
+                 hb_echo: bool = False):
         super().__init__(pid)
         from multiprocessing.connection import Listener
         self.directory = directory
         self.path = _sock_path(directory, pid)
+        self.metrics = metrics
+        self.hb_echo = hb_echo
+        self.last_rx = time.monotonic()
         self._listener = Listener(self.path, "AF_UNIX")
         self._inbox: "queue.Queue[Frame]" = queue.Queue()
         self._out: Dict[int, Any] = {}
+        self._ever: set = set()          # dsts we once connected to
+        self._down: Dict[int, float] = {}  # dst -> last connect failure
+        self._down_ttl = 1.0
+        self._locks: Dict[int, threading.Lock] = {}
+        self._locks_guard = threading.Lock()
         self._closed = False
         self._accept_thread = threading.Thread(target=self._accept_loop,
                                                daemon=True)
         self._accept_thread.start()
+
+    def _inc(self, name: str) -> None:
+        if self.metrics is not None:
+            self.metrics.inc(name)
 
     # -- inbound ------------------------------------------------------------
     def _accept_loop(self) -> None:
@@ -139,6 +305,15 @@ class SocketEndpoint(Endpoint):
             src = payload
             while True:
                 tag, payload = conn.recv()
+                self.last_rx = time.monotonic()
+                if tag == "hb" and self.hb_echo:
+                    # echo from the reader thread: never blocks on the
+                    # main loop, dies with the process on SIGKILL
+                    try:
+                        self.send(src, "hb", payload)
+                    except (PeerUnreachable, OSError):
+                        pass          # coordinator gone: orphan timer runs
+                    continue
                 self._inbox.put((src, tag, payload))
         except (EOFError, OSError):
             pass
@@ -160,33 +335,83 @@ class SocketEndpoint(Endpoint):
         return frame
 
     # -- outbound -----------------------------------------------------------
+    def _lock_for(self, dst: int) -> threading.Lock:
+        with self._locks_guard:
+            if dst not in self._locks:
+                self._locks[dst] = threading.Lock()
+            return self._locks[dst]
+
     def _connect(self, dst: int, timeout: float = 30.0):
+        """Exponential backoff + jitter up to ``timeout``; raises a
+        structured ``PeerUnreachable`` (not a bare TimeoutError) so
+        callers can attribute the failure to a pid. A *re*connect (the
+        peer was reachable before, so a refusal means it died, not
+        that it is still booting) gets a short deadline, and a recent
+        failure short-circuits entirely — a signal fan-out to a dead
+        peer must not stall the survivor once per frame."""
         from multiprocessing.connection import Client
+        down_at = self._down.get(dst)
+        if down_at is not None:
+            if time.monotonic() - down_at < self._down_ttl:
+                self._inc("transport.connect_shortcircuit")
+                raise PeerUnreachable(dst, 0, 0.0)
+            self._down.pop(dst, None)
+        if dst in self._ever:
+            timeout = min(timeout, 1.0)
         path = _sock_path(self.directory, dst)
-        deadline = time.monotonic() + timeout
+        t0 = time.monotonic()
+        deadline = t0 + timeout
+        attempts = 0
+        delay = 0.005
+        rng = random.Random((self.pid + 7) * 131 + dst)
         while True:
+            attempts += 1
+            self._inc("transport.connect_attempts")
             try:
                 conn = Client(path, "AF_UNIX")
                 break
-            except (FileNotFoundError, ConnectionRefusedError):
-                if time.monotonic() > deadline:
-                    raise TimeoutError(f"pid {self.pid}: no listener for "
-                                       f"pid {dst} at {path}")
-                time.sleep(0.01)
+            except (FileNotFoundError, ConnectionRefusedError, OSError):
+                now = time.monotonic()
+                if now > deadline:
+                    self._inc("transport.connect_failures")
+                    self._down[dst] = now
+                    raise PeerUnreachable(dst, attempts, now - t0)
+                time.sleep(min(delay * (1 + rng.random()),
+                               max(0.0, deadline - now)))
+                delay = min(delay * 1.6, 0.25)
         conn.send(("hello", self.pid))
+        self._ever.add(dst)
         return conn
 
     def send(self, dst: int, tag: str, payload: Any) -> None:
-        conn = self._out.get(dst)
-        if conn is None:
-            conn = self._connect(dst)
-            self._out[dst] = conn
-        conn.send((tag, payload))
+        # per-destination lock: the heartbeat thread and the main loop
+        # share outbound connections, and Connection.send is not atomic
+        with self._lock_for(dst):
+            conn = self._out.get(dst)
+            if conn is None:
+                # heartbeats are periodic: fail one fast rather than
+                # let a dead peer starve the hb thread's round
+                conn = self._connect(dst, timeout=(0.2 if tag == "hb"
+                                                   else 30.0))
+                self._out[dst] = conn
+            try:
+                conn.send((tag, payload))
+            except (OSError, ValueError):
+                # broken pipe (peer died): drop the cached conn so a
+                # retry reconnects, surface the failure to the caller
+                self._out.pop(dst, None)
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                self._inc("transport.send_failures")
+                raise
         self.frames_sent += 1
 
     def forget_peer(self, dst: int) -> None:
         """Drop the cached outbound connection (evicted process)."""
-        conn = self._out.pop(dst, None)
+        with self._lock_for(dst):
+            conn = self._out.pop(dst, None)
         if conn is not None:
             try:
                 conn.close()
@@ -205,3 +430,124 @@ class SocketEndpoint(Endpoint):
             os.unlink(self.path)
         except OSError:
             pass
+
+
+class FaultyEndpoint(Endpoint):
+    """Chaos decorator over any endpoint (installed on the coordinator's
+    socket endpoint). Faults by tag class:
+
+    * send side: ``cmd``/``hb`` frames dropped or duplicated per the
+      seeded channel rng (retry + worker-side cid dedupe recover);
+    * recv side: ``rep`` frames dropped (reply lost -> retry) or
+      re-delivered (coordinator ignores cids it no longer awaits);
+      ``env`` frames held in per-source limbo for a bounded wall-clock
+      delay — later frames of the same source queue behind the held
+      head, so per-channel FIFO survives while channels reorder.
+    """
+
+    def __init__(self, inner: Endpoint, chaos: ChaosConfig, metrics=None):
+        super().__init__(inner.pid)
+        self.inner = inner
+        self.chaos = chaos
+        self.metrics = metrics
+        self._rngs: Dict[Tuple[int, int], random.Random] = {}
+        self._held: Dict[int, deque] = defaultdict(deque)  # src -> frames
+        self._redeliver: deque = deque()
+
+    def _inc(self, name: str) -> None:
+        if self.metrics is not None:
+            self.metrics.inc(name)
+
+    def _rng(self, src: int, dst: int) -> random.Random:
+        key = (src, dst)
+        if key not in self._rngs:
+            self._rngs[key] = self.chaos.rng(src, dst)
+        return self._rngs[key]
+
+    # -- passthrough surface -------------------------------------------------
+    @property
+    def last_rx(self):
+        return getattr(self.inner, "last_rx", 0.0)
+
+    def forget_peer(self, dst: int) -> None:
+        fp = getattr(self.inner, "forget_peer", None)
+        if fp is not None:
+            fp(dst)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    # -- faulted send/recv ---------------------------------------------------
+    def send(self, dst: int, tag: str, payload: Any) -> None:
+        if tag in ("cmd", "hb"):
+            rng = self._rng(self.pid, dst)
+            if rng.random() < self.chaos.p_drop:
+                self._inc(f"chaos.drop_{tag}")
+                return
+            if rng.random() < self.chaos.p_dup:
+                self._inc(f"chaos.dup_{tag}")
+                self.inner.send(dst, tag, payload)
+        self.inner.send(dst, tag, payload)
+        self.frames_sent += 1
+
+    def _due(self) -> Optional[Frame]:
+        if self._redeliver:
+            return self._redeliver.popleft()
+        now = time.monotonic()
+        for src in sorted(s for s, q in self._held.items() if q):
+            q = self._held[src]
+            if q[0][0] <= now:
+                self._inc("chaos.release_env")
+                return q.popleft()[1]
+        return None
+
+    def _filter(self, frame: Frame) -> Optional[Frame]:
+        src, tag, payload = frame
+        rng = self._rng(src, self.pid)
+        if tag == "rep":
+            if rng.random() < self.chaos.p_drop:
+                self._inc("chaos.drop_rep")
+                return None
+            if rng.random() < self.chaos.p_dup:
+                self._inc("chaos.dup_rep")
+                self._redeliver.append(frame)
+            return frame
+        if tag == "env":
+            q = self._held[src]
+            if q or rng.random() < self.chaos.p_delay:
+                due = time.monotonic() + rng.uniform(
+                    0.0, self.chaos.max_delay)
+                if q:
+                    due = max(due, q[-1][0])   # FIFO within the channel
+                q.append((due, frame))
+                self._inc("chaos.delay_env")
+                return None
+            return frame
+        return frame
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            due = self._due()
+            if due is not None:
+                self.frames_received += 1
+                return due
+            if timeout == 0:
+                inner_t: Optional[float] = 0
+            else:
+                inner_t = 0.02
+                if deadline is not None:
+                    inner_t = min(inner_t,
+                                  max(0.0, deadline - time.monotonic()))
+            frame = self.inner.recv(timeout=inner_t)
+            if frame is not None:
+                out = self._filter(frame)
+                if out is not None:
+                    self.frames_received += 1
+                    return out
+                continue
+            if timeout == 0:
+                return None
+            if deadline is not None and time.monotonic() >= deadline:
+                return None

@@ -1,0 +1,343 @@
+"""Fault-tolerant control plane (DESIGN.md §13).
+
+Tier-1 drives the deterministic chaos fabric (``FaultyInprocFabric``)
+and simulated crash-stops: unilateral eviction after ``kill_host``, the
+generation fence black-holing the dead incarnation's frames, seeded
+fault-injection determinism (same seed -> identical fingerprints AND
+identical fault counters), a seed-sweep property tier over
+boot/churn/advance under chaos, and deterministic-clock unit tests of
+the phi-accrual detector's suspect -> confirm -> declare machine and
+the jittered bounded backoff.
+
+The slow tier crosses real process boundaries: a SIGKILLed
+``SocketCluster`` worker is declared dead by heartbeat silence and
+evicted non-cooperatively while the survivors keep advancing, and an
+orphaned worker (its coordinator gone silent) exits cleanly with its
+span shard flushed to disk instead of hanging forever.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime_dist import (ChaosConfig, DistCoordinator, InprocCluster,
+                                PhiDetector, backoff)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def coordinator(n, *, chaos=None, **kw):
+    return DistCoordinator(InprocCluster(chaos=chaos), n,
+                           seed=kw.pop("seed", 0), **kw)
+
+
+# ------------------------------------------------------------------ backoff
+def test_backoff_is_bounded_exponential_with_jitter():
+    base, cap = 0.25, 2.0
+    bare = [backoff(a, base, cap) for a in range(1, 10)]
+    assert bare[0] == base
+    assert all(b2 >= b1 for b1, b2 in zip(bare, bare[1:]))   # monotone
+    assert bare[-1] == cap                                   # capped
+    rng = random.Random(0)
+    for a in range(1, 10):
+        d = backoff(a, base, cap, rng)
+        assert bare[min(a, 9) - 1] <= d <= bare[min(a, 9) - 1] * 1.5 + 1e-9
+    # same seed -> same jitter sequence (retries are reproducible)
+    seq = [backoff(a, base, cap, random.Random(7)) for a in (3, 3, 3)]
+    assert seq[0] == seq[1] == seq[2]
+
+
+# ----------------------------------------------------------- phi detector
+def test_phi_detector_suspect_confirm_declare():
+    """Deterministic clock: a silent host is suspected first, declared
+    dead only when BOTH the adaptive phi test and the hard silence
+    floor hold, and an ack during suspicion recovers it."""
+    det = PhiDetector(interval=0.5, timeout=4.0, phi_suspect=4.0,
+                      phi_dead=8.0, window=8)
+    det.touch(1, t=0.0)
+    t = 0.0
+    while t < 3.0:                      # healthy acks every 0.5s
+        t += 0.5
+        det.on_ack(1, t=t)
+    assert det.poll(now=t) == [] and det.state[1] == det.ALIVE
+    # silence begins: phi crosses suspect quickly, but the hard floor
+    # (timeout=4s) must ALSO pass before declaration
+    assert det.poll(now=t + 2.5) == []
+    assert det.state[1] == det.SUSPECT
+    assert det.poll(now=t + 3.9) == []          # phi huge, floor not met
+    newly = det.poll(now=t + 4.1)
+    assert newly == [1] and det.state[1] == det.DEAD
+    assert det.declared[1]["silence"] == pytest.approx(4.1)
+    # declared is edge-triggered and sticky; late acks are ignored
+    assert det.poll(now=t + 10.0) == []
+    det.on_ack(1, t=t + 10.0)
+    assert det.state[1] == det.DEAD
+
+
+def test_phi_detector_ack_during_suspicion_recovers():
+    det = PhiDetector(interval=0.5, timeout=4.0)
+    det.touch(2, t=0.0)
+    det.on_ack(2, t=0.5)
+    det.poll(now=3.0)
+    assert det.state[2] == det.SUSPECT
+    det.on_ack(2, t=3.1)                # confirm failed: back to alive
+    assert det.state[2] == det.ALIVE
+    det.remove(2)                       # cooperative departure
+    assert det.poll(now=100.0) == [] and 2 not in det.state
+
+
+# ------------------------------------------------- inproc crash recovery
+def test_inproc_kill_host_recovers_unilaterally():
+    """A crash-stop host cannot answer the cooperative unlink dance:
+    the coordinator evicts it unilaterally, every survivor re-seeds its
+    shard from the surviving oracle under a bumped generation, and
+    phases keep advancing with fingerprint-agreed epochs."""
+    rt = coordinator(4)
+    rt.advance(step=0)
+    fps = [rt.epoch.fingerprint]
+    rt.cluster.kill_host(2)                   # no protocol, no goodbye
+    for s in range(1, 4):
+        rt.advance(step=s)                    # auto-recovers, then phases
+    assert 2 not in rt.live and sorted(rt.live) == [0, 1, 3]
+    assert rt.epoch.live == (0, 1, 3)
+    fps.append(rt.epoch.fingerprint)
+    assert fps[0] != fps[1]                   # structure identity changed
+    assert [e.kind for e in rt.events] == ["dead"]
+    assert rt.gen >= 1                        # incarnation fence bumped
+    # the dead pid is black-holed at every survivor's network edge
+    nets = [rt.shard.net] + [a.shard.net
+                             for a in rt.cluster.agents.values()]
+    for net in nets:
+        assert 2 in net.dropped
+    rt.close()
+
+
+def test_inproc_kill_during_epoch_with_pending_churn():
+    """A crash racing an in-flight join: the join still lands, the dead
+    host is evicted, and both changes appear in fingerprint-distinct
+    epochs."""
+    rt = coordinator(3)
+    rt.request_join(step=0)
+    rt.cluster.kill_host(1)
+    rt.advance(step=0)
+    assert 1 not in rt.live and 3 in rt.live
+    for s in range(1, 4):
+        rt.advance(step=s)
+    assert rt.epoch.live == (0, 2, 3)
+    assert len({e.fingerprint for e in rt.epochs}) == len(rt.epochs)
+    kinds = [e.kind for e in rt.events]
+    assert "dead" in kinds and "join" in kinds
+    rt.close()
+
+
+# ------------------------------------------------------- chaos determinism
+def _churn_run(seed, *, obs=False):
+    """One seeded chaos run: boot 4, join, advance, kill, advance."""
+    rt = coordinator(4, chaos=ChaosConfig(seed=seed, p_drop=0.0, p_dup=0.0,
+                                          p_delay=0.4, delay_ticks=3),
+                     obs=obs)
+    rt.advance(step=0)
+    rt.request_join(step=1)
+    rt.advance(step=1)
+    rt.cluster.kill_host(1)
+    for s in range(2, 6):
+        rt.advance(step=s)
+    fps = [e.fingerprint for e in rt.epochs]
+    faults = rt.cluster.fault_counters()
+    released = rt.shard.released()
+    out = (fps, faults, released, sorted(rt.live),
+           rt.obs.summary() if obs else None)
+    rt.close()
+    return out
+
+
+def test_chaos_fabric_is_deterministic_per_seed():
+    a = _churn_run(11)
+    b = _churn_run(11)
+    assert a == b                        # fingerprints AND fault counters
+    c = _churn_run(12)
+    assert c[2] == a[2] and c[3] == a[3]   # same protocol outcome...
+    assert c[1] != a[1] or c[0] == a[0]    # ...different injected faults
+
+
+def test_chaos_blackhole_accounting_and_hop_bound():
+    """Under chaos + a crash, with obs on: frames reaped at the fabric
+    (dead destination) are counted and span-closed, the lost shard's
+    records are tolerated, and the O(log P) per-signal hop assertion
+    still runs (and passes) at every advance."""
+    fps, faults, released, live, summary = _churn_run(5, obs=True)
+    assert live == [0, 2, 3, 4] and released >= 4
+    assert faults.get("delayed", 0) > 0          # chaos actually fired
+    assert summary["hop_checks"] >= 5            # T2a ran every advance
+    assert summary["spans"] > 0
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5, 6])
+def test_chaos_seed_sweep_property(seed):
+    """Property tier: for arbitrary fault-injection seeds, a fixed
+    boot/churn/kill/advance schedule must preserve every invariant —
+    strictly monotone phase releases, unique fingerprints per epoch,
+    the dead host evicted exactly once, and quiescence reached."""
+    rng = random.Random(seed)
+    chaos = ChaosConfig(seed=seed, p_drop=0.0, p_dup=0.0,
+                        p_delay=0.2 + 0.6 * rng.random(),
+                        delay_ticks=1 + rng.randrange(5))
+    rt = coordinator(4, chaos=chaos)
+    releases = []
+    victim = rng.choice([1, 2, 3])
+    kill_at = rng.randrange(1, 4)
+    for s in range(6):
+        if s == kill_at:
+            rt.cluster.kill_host(victim)
+        if s == 2 and victim != 3:
+            rt.request_join(step=s)
+        releases.append(rt.advance(step=s))
+    assert releases == sorted(releases)            # no out-of-order phase
+    assert all(b > a for a, b in zip(releases, releases[1:]))
+    assert victim not in rt.live
+    assert [e.kind for e in rt.events].count("dead") == 1
+    assert len({e.fingerprint for e in rt.epochs}) == len(rt.epochs)
+    rt.close()
+
+
+# ------------------------------------------------------- slow: real sockets
+@pytest.mark.slow
+def test_socket_kill9_detected_and_evicted():
+    """SIGKILL a worker OS process mid-epoch: heartbeat silence drives
+    suspect -> confirm -> declare, the coordinator evicts unilaterally,
+    and the survivors keep advancing with agreed fingerprints."""
+    code = """
+import os, time
+os.chdir({root!r})
+from repro.runtime_dist import DistCoordinator, SocketCluster
+
+cl = SocketCluster(control_only=True, hb_interval=0.1, failure_timeout=2.0)
+rt = DistCoordinator(cl, 3, seed=0)
+rt.advance(step=0)
+cl.kill_pid(1)                             # SIGKILL, no cleanup
+t0 = time.monotonic()
+for s in range(1, 5):
+    rt.advance(step=s)                     # detect + evict + keep going
+dt = time.monotonic() - t0
+assert sorted(rt.live) == [0, 2], rt.live
+assert rt.epoch.live == (0, 2)
+assert "dead" in [e.kind for e in rt.events]
+assert len({{e.fingerprint for e in rt.epochs}}) == len(rt.epochs)
+assert dt < 60.0, dt
+rt.close()
+print("OK")
+""".format(root=REPO)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_socket_chaos_converges_with_kill():
+    """Chaos on the real socket fabric (seeded drops/dups of command
+    and heartbeat frames, delayed envelope channels) plus a SIGKILL:
+    idempotent command replay keeps RPCs exactly-once, the phaser
+    protocol's per-channel FIFO survives, and training-control phases
+    converge over the survivors."""
+    code = """
+import os
+os.chdir({root!r})
+from repro.runtime_dist import ChaosConfig, DistCoordinator, SocketCluster
+
+chaos = ChaosConfig(seed=7, p_drop=0.15, p_dup=0.10, p_delay=0.30,
+                    max_delay=0.02)
+cl = SocketCluster(control_only=True, hb_interval=0.1, failure_timeout=3.0,
+                   chaos=chaos)
+rt = DistCoordinator(cl, 3, seed=0)
+for s in range(3):
+    rt.advance(step=s)
+rt.request_join(step=3)
+rt.advance(step=3)
+assert rt.epoch.live == (0, 1, 2, 3)
+cl.kill_pid(2)
+for s in range(4, 8):
+    rt.advance(step=s)
+assert 2 not in rt.live
+faults = cl.fault_counters()
+assert sum(faults.values()) > 0, faults     # chaos actually fired
+assert len({{e.fingerprint for e in rt.epochs}}) == len(rt.epochs)
+rt.close()
+print("OK")
+""".format(root=REPO)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_orphaned_worker_exits_and_flushes_spans():
+    """Regression: a worker whose coordinator dies must not hang
+    forever on a silent socket. After ``orphan_timeout`` of heartbeat
+    silence it flushes its span shard to disk and exits with code 2."""
+    code = """
+import os
+os.chdir({root!r})
+from repro.runtime_dist import SocketCluster
+
+cl = SocketCluster(control_only=True, hb_interval=0.1, failure_timeout=1.0,
+                   orphan_timeout=2.0)
+cl.add_host(0, {{"pid": 0, "n": 1, "seed": 0, "control_only": True}})
+p = cl.procs[0]
+cl._hb_stop.set()                   # simulate coordinator crash: silence
+cl._hb_thread.join(timeout=5)
+cl.ep.close()
+rc = p.wait(timeout=30)
+assert rc == 2, rc
+span_file = os.path.join(cl.dir, "worker0.spans.jsonl")
+assert os.path.exists(span_file), span_file
+print("OK")
+""".format(root=REPO)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_train_cli_kill_event_finite_loss(tmp_path):
+    """End to end through the CLI: a 3-process socket data-plane run
+    with a SIGKILL mid-run detects, evicts, and finishes with finite
+    loss; the exported span log passes the offline checker including
+    the failure op."""
+    spans = str(tmp_path / "run.trace.json")
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(REPO, "src"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=3",
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--reduced", "--layers", "2", "--steps", "8", "--batch", "4",
+         "--seq", "32", "--processes", "3",
+         "--fabric", "socket", "--heartbeat-interval", "0.2",
+         "--failure-timeout", "3", "--elastic", "kill:2@4",
+         "--trace", spans],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "nan" not in out.stdout.lower().split("loss")[-1][:40]
+    span_log = spans[:-5] + ".spans.jsonl"
+    chk = subprocess.run(
+        [sys.executable, "-m", "repro.obs.check", span_log,
+         "--hosts", "3", "--require-ops", "signal,failure"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+    assert chk.returncode == 0, (chk.stdout[-2000:], chk.stderr[-2000:])
