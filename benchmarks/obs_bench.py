@@ -22,8 +22,14 @@ only ever inflates the overhead). The parent then MERGES the cases'
 metrics shards — the same cross-process ``MetricsRegistry.merge`` the
 coordinator runs over host shards.
 
-Gate: traced overhead < ``GATE_PCT`` percent of the untraced min on
-every mesh. Emits ``BENCH_obs.json``.
+A third mode, **streamed**, adds the live-telemetry path on top of
+tracing: one ``LiveStreamer`` heartbeat frame (watermark view + merged
+counter deltas) written per step — the worst case, since the runtime
+rate-limits frames to a bounded cadence. Streaming must sit under the
+same gate as tracing.
+
+Gate: traced AND streamed overhead < ``GATE_PCT`` percent of the
+untraced min on every mesh. Emits ``BENCH_obs.json``.
 """
 from __future__ import annotations
 
@@ -32,9 +38,10 @@ import os
 import statistics
 import subprocess
 import sys
+import tempfile
 import time
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 GATE_PCT = 3.0
 REPS = 7
 ATTEMPTS = 3
@@ -47,15 +54,16 @@ CASES = {
 }
 
 
-def _min_pair(step_fn, tl, reg, reps):
-    """Alternate (untraced, traced) executions of ``step_fn`` —
-    swapping which mode leads each pair, so first-of-pair warmth bias
-    lands on both — and return (untraced_min_s, traced_min_s,
-    medians)."""
+def _min_modes(step_fn, tl, reg, streamer, wm, reps):
+    """Rotate (untraced, traced, streamed) executions of ``step_fn`` —
+    rotating which mode leads each round, so first-of-round warmth bias
+    spreads over all three — and return per-mode (min_s, median_s).
+    The streamed mode times the step PLUS one forced heartbeat frame
+    (the runtime rate-limits frames, so one-per-step is the ceiling)."""
     from repro.obs import timeline as obs_timeline
-    untraced, traced = [], []
+    untraced, traced, streamed = [], [], []
 
-    def one_untraced():
+    def one_untraced(i):
         t0 = time.perf_counter()
         step_fn()
         untraced.append(time.perf_counter() - t0)
@@ -71,15 +79,28 @@ def _min_pair(step_fn, tl, reg, reps):
         obs_timeline.deactivate()
         traced.append(dt)
 
+    def one_streamed(i):
+        obs_timeline.activate(tl)
+        tp0 = tl.now()
+        t0 = time.perf_counter()
+        step_fn()
+        streamer.frame(step=i, phase=i, epoch=0, gen=0,
+                       live=sorted(wm.view),
+                       watermarks=wm, merged_metrics=reg.snapshot(),
+                       force=True)
+        dt = time.perf_counter() - t0
+        tl.complete("train.step", tp0, args={"step": i})
+        reg.observe("train.step_seconds", dt)
+        obs_timeline.deactivate()
+        streamed.append(dt)
+
+    modes = (one_untraced, one_traced, one_streamed)
     for i in range(reps):
-        if i % 2 == 0:
-            one_untraced()
-            one_traced(i)
-        else:
-            one_traced(i)
-            one_untraced()
-    return (min(untraced), min(traced),
-            (statistics.median(untraced), statistics.median(traced)))
+        for j in range(3):
+            modes[(i + j) % 3](i)
+    return {"untraced": (min(untraced), statistics.median(untraced)),
+            "traced": (min(traced), statistics.median(traced)),
+            "streamed": (min(streamed), statistics.median(streamed))}
 
 
 def run_case(label: str) -> dict:
@@ -116,8 +137,23 @@ def run_case(label: str) -> dict:
     def step_fn():
         jax.block_until_ready(ts.jitted(params, opt_state, b, alive))
 
+    from repro.obs.live import ClusterWatermarks, LiveStreamer, \
+        WatermarkTracker
+
     reg = MetricsRegistry()
     tl = Timeline()
+    # the streamed mode's frame inputs: a realistic merged watermark
+    # view over the case's data width, and a streamer on a throwaway
+    # file (the cost under test is serialize + append + flush)
+    wmt = WatermarkTracker(0)
+    for r in range(n):
+        wmt.on_signal(r, 0)
+        wmt.on_wait_advance(r, 0)
+    wm = ClusterWatermarks()
+    wm.update(0, wmt.snapshot())
+    stream_path = os.path.join(tempfile.mkdtemp(prefix="obs_bench_"),
+                               "live.jsonl")
+    streamer = LiveStreamer(stream_path, min_interval=0.0)
     # warmup both modes: compiles the program; the traced warmup also
     # pays the one-time logical-grid emission (per lowering, not per
     # step — exactly why it stays out of the timed region)
@@ -127,13 +163,21 @@ def run_case(label: str) -> dict:
     step_fn()
     grid_events = len(tl.events)
 
-    min_u, min_t, (med_u, med_t) = _min_pair(step_fn, tl, reg, reps=REPS)
+    res = _min_modes(step_fn, tl, reg, streamer, wm, reps=REPS)
+    streamer.close()
+    (min_u, med_u) = res["untraced"]
+    (min_t, med_t) = res["traced"]
+    (min_s, med_s) = res["streamed"]
     return {"case": label, "mesh": f"{stages}x{n}", "microbatches": mbs,
             "untraced_ms": round(min_u * 1e3, 3),
             "traced_ms": round(min_t * 1e3, 3),
+            "streamed_ms": round(min_s * 1e3, 3),
             "untraced_med_ms": round(med_u * 1e3, 3),
             "traced_med_ms": round(med_t * 1e3, 3),
+            "streamed_med_ms": round(med_s * 1e3, 3),
             "overhead_pct": round((min_t - min_u) / min_u * 100.0, 2),
+            "streamed_overhead_pct": round((min_s - min_u) / min_u
+                                           * 100.0, 2),
             "grid_events": grid_events, "gate_pct": GATE_PCT,
             "metrics": reg.snapshot()}
 
@@ -169,17 +213,21 @@ def run(report):
             print(f"  (skipped {label}: needs >= {min_dev} devices)")
             continue
         best, last_err = None, None
+
+        def worst_pct(r):
+            return max(r["overhead_pct"], r["streamed_overhead_pct"])
+
         for attempt in range(ATTEMPTS):
             row, err = _spawn_case(label)
             if row is None:
                 last_err = err
                 print(f"  retry {label}: {err}")
                 continue
-            if best is None or row["overhead_pct"] < best["overhead_pct"]:
+            if best is None or worst_pct(row) < worst_pct(best):
                 best = row
-            if best["overhead_pct"] < GATE_PCT:
+            if worst_pct(best) < GATE_PCT:
                 break
-            print(f"  retry {label}: {row['overhead_pct']}% reads over "
+            print(f"  retry {label}: {worst_pct(row)}% reads over "
                   f"the {GATE_PCT}% gate (scheduler noise)")
         assert best is not None, \
             f"obs overhead case {label} never completed: {last_err}"
@@ -190,13 +238,17 @@ def run(report):
         assert r["overhead_pct"] < GATE_PCT, \
             (f"obs tracing overhead {r['overhead_pct']}% on {r['case']} "
              f"breaches the <{GATE_PCT}% gate")
+        assert r["streamed_overhead_pct"] < GATE_PCT, \
+            (f"obs streaming overhead {r['streamed_overhead_pct']}% on "
+             f"{r['case']} breaches the <{GATE_PCT}% gate")
     report.table(
-        "obs-plane tracing overhead: traced vs untraced step minima "
-        f"(gate: < {GATE_PCT}%)", rows,
-        note=f"paired-alternated reps ({REPS}) in a fresh process per "
-             "case; grid_events = one-time logical schedule events "
-             "emitted at lowering (excluded from the steady-state cost "
-             "by construction)")
+        "obs-plane overhead: traced and streamed vs untraced step "
+        f"minima (gate: < {GATE_PCT}%)", rows,
+        note=f"mode-rotated reps ({REPS}) in a fresh process per case; "
+             "streamed = traced + one heartbeat frame per step (the "
+             "ceiling; the runtime rate-limits frames); grid_events = "
+             "one-time logical schedule events emitted at lowering "
+             "(excluded from the steady-state cost by construction)")
 
     merged = MetricsRegistry.merge(shards)
     report.table("obs metrics registry: per-case process shards merged "
@@ -209,7 +261,9 @@ def run(report):
         "schema_version": SCHEMA_VERSION,
         "gate_pct": GATE_PCT,
         "rows": rows,
-        "within_gate": all(r["overhead_pct"] < GATE_PCT for r in rows),
+        "within_gate": all(r["overhead_pct"] < GATE_PCT
+                           and r["streamed_overhead_pct"] < GATE_PCT
+                           for r in rows),
         # the merged per-case shards, so downstream consumers (the
         # --quick summary table, CI artifact diffs) read one view
         "metrics": merged,

@@ -101,6 +101,23 @@ class P2PPhaser:
         accumulated run-ahead (the semaphore value)."""
         return self.signaled[rank] - (self.ph.released() + 1)
 
+    # --------------------------------------------------------- watermarks
+    def enable_watermarks(self, pid: int = 0):
+        """Install a live phase-watermark tracker (obs plane): the
+        underlying actors report per-rank (signal, wait) phases and the
+        signal->release gap through the facade hooks; modes are seeded
+        so the tracker's view matches the registration table."""
+        from ..obs.live import WatermarkTracker
+        wm = WatermarkTracker(pid)
+        for r, m in self.modes.items():
+            wm.set_mode(r, m)
+        self.ph.watermarks = wm
+        return wm
+
+    @property
+    def watermarks(self):
+        return self.ph.watermarks
+
     def released(self, rank: Optional[int] = None) -> int:
         return self.ph.released(rank)
 
@@ -109,6 +126,8 @@ class P2PPhaser:
         self.ph.async_add(parent, rank, mode)
         self.modes[rank] = mode
         self.signaled[rank] = 0
+        if self.ph.watermarks is not None:
+            self.ph.watermarks.set_mode(rank, mode)
         self.run()
 
     def demote(self, rank: int) -> None:

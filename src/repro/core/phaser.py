@@ -233,6 +233,11 @@ class PhaserActor(Actor):
         self.sig_next += 1
         self.sc.selfsig.add(k)
         self.sc.buf[k] = self.sc.buf.get(k, 0) + 1
+        # phase-watermark hook (obs plane): facades that track live
+        # watermarks implement it; plain facades don't pay for it
+        cb = getattr(self.ph, "on_local_signal", None)
+        if cb is not None:
+            cb(self.rank, k)
         self._try_close_sc()
 
     def local_drop(self) -> None:
@@ -398,16 +403,23 @@ class PhaserActor(Actor):
             self._send(m.src, M.ENSP(self.rank, m.src, phase=m.first_phase,
                                      delta=+1, lid=SCSL))
             # replay signals issued while the insert was in flight
+            cb = getattr(self.ph, "on_local_signal", None)
             while self.presig > 0:
                 self.presig -= 1
                 k = self.sig_next
                 self.sig_next += 1
                 st.selfsig.add(k)
                 st.buf[k] = st.buf.get(k, 0) + 1
+                if cb is not None:
+                    cb(self.rank, k)
             self._try_close_sc()
         else:
             st.released = max(st.released, m.released)
             self.wait_next = max(self.wait_next, m.first_phase)
+            if st.released >= 0:
+                cb = getattr(self.ph, "on_wait_advance", None)
+                if cb is not None:
+                    cb(self.rank, st.released)
         parent = self.ph.async_parent.get(self.rank)
         if parent is not None and parent != self.rank \
                 and self.ph.lists_done(self.rank):
@@ -967,6 +979,11 @@ class PhaserActor(Actor):
         if m.phase <= st.released:
             return
         st.released = m.phase
+        # wait-watermark hook: phase m.phase is now released to this
+        # participant — the signal->here gap is its blocked-on-WAIT time
+        cb = getattr(self.ph, "on_wait_advance", None)
+        if cb is not None:
+            cb(self.rank, m.phase)
         for c in list(st.books):
             self._send(c, M.ADV(self.rank, c, phase=m.phase, lid=SNSL))
 
@@ -999,6 +1016,9 @@ class DistPhaser:
         self.demoted: set = set()
         # optional monitor(ph, k) invoked at the release instant (modelcheck)
         self.release_monitor = None
+        # optional WatermarkTracker (obs plane): installed by consumers
+        # that want live phase watermarks (P2PPhaser.enable_watermarks)
+        self.watermarks = None
 
         head = PhaserActor(HEAD, self.net, SIG_WAIT, phaser=self)
         self.actors[HEAD] = head
@@ -1106,6 +1126,15 @@ class DistPhaser:
         self.release_log.append(k)
         if self.release_monitor is not None:
             self.release_monitor(self, k)
+
+    # -------------------------------------------------- watermark hooks
+    def on_local_signal(self, rank: int, phase: int) -> None:
+        if self.watermarks is not None:
+            self.watermarks.on_signal(rank, phase)
+
+    def on_wait_advance(self, rank: int, phase: int) -> None:
+        if self.watermarks is not None:
+            self.watermarks.on_wait_advance(rank, phase)
 
     # ------------------------------------------------------------- driving
     def run(self, scheduler: Optional[Scheduler] = None,

@@ -161,10 +161,11 @@ def run_processes(args, ap):
             events = parse_elastic(args.elastic)
         except ValueError as e:
             ap.error(str(e))
-    obs = bool(args.trace or args.metrics_out)
+    obs = bool(args.trace or args.metrics_out or args.live_out)
     rt = DistCoordinator(cluster, n, seed=args.seed,
                          proc_kind=args.sync_kind, data_for=data_for,
-                         obs=obs)
+                         obs=obs, live_out=args.live_out,
+                         flight_dir=args.flight_dir)
     start = 0
     if args.resume and args.ckpt_dir:
         mk = rt.cluster.call(min(rt.live),
@@ -323,6 +324,17 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None,
                     help="write the merged metrics-registry JSON "
                          "(counters/gauges/histograms across shards)")
+    ap.add_argument("--live-out", default=None,
+                    help="with --processes: append live heartbeat "
+                         "frames (phase watermarks, metric deltas, phi "
+                         "scores) to this JSONL file at a bounded "
+                         "cadence; tail it mid-run with "
+                         "`python -m repro.obs.watch`")
+    ap.add_argument("--flight-dir", default=None,
+                    help="with --processes: directory where per-process "
+                         "flight-recorder rings are flushed on crash, "
+                         "orphan exit, eviction, and failure recovery "
+                         "(*.flight.jsonl)")
     ap.add_argument("--interleave", type=int, default=1,
                     help="virtual stages per device: run the "
                          "interleaved 1F1B schedule (v non-contiguous "

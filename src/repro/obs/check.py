@@ -12,7 +12,13 @@ reconstructs the causal span trees, and asserts:
   path is within ``signal_bound(hosts)``;
 * (optional) presence — at least one complete trace per required op.
 
-Exit code 0 iff all hold; prints a summary either way.
+``lost`` markers (a crashed shard's records are gone) and ``retention``
+markers (a bounded store evicted old traces before export) may appear
+anywhere in the file, interleaved with spans.
+
+Exit codes: 0 all invariants hold; 1 an invariant is violated;
+2 the log itself is unreadable (missing file / non-JSON lines) —
+distinct so CI can tell a broken export from a broken protocol.
 """
 from __future__ import annotations
 
@@ -35,11 +41,21 @@ def main(argv=None) -> int:
                     help="comma list of root ops that must each have "
                          "at least one complete trace (e.g. "
                          "signal,join,evict)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print a one-line human summary instead of "
+                         "the full JSON report")
     args = ap.parse_args(argv)
 
-    store = TraceStore()
-    with open(args.spans) as f:
-        store.add(json.loads(line) for line in f if line.strip())
+    # the exported log already reflects any upstream retention cap:
+    # check exactly what is in the file, evict nothing further
+    store = TraceStore(max_spans=None)
+    try:
+        with open(args.spans) as f:
+            records = [json.loads(line) for line in f if line.strip()]
+    except (OSError, ValueError) as e:
+        print(f"span log unreadable: {e}", file=sys.stderr)
+        return 2
+    store.add(records)
 
     failures = []
     per_op = {}
@@ -66,16 +82,27 @@ def main(argv=None) -> int:
             if op and not per_op.get(op):
                 failures.append(f"no complete {op!r} trace in the log")
 
-    print(json.dumps({
-        "spans": len(store.spans),
-        "traces": len(store.trace_ids()),
-        "complete_traces_per_op": per_op,
-        "blackholed_spans": len(store.blackholed()),
-        "signal_bound": bound,
-        "max_signal_depth": worst,
-        "failures": failures[:20],
-        "ok": not failures,
-    }, indent=2))
+    if args.summary:
+        ops = " ".join(f"{op}={n}" for op, n in sorted(per_op.items()))
+        verdict = "OK" if not failures else f"FAIL({len(failures)})"
+        print(f"{verdict} spans={len(store.spans)} "
+              f"dropped={store.dropped_spans} lost={sorted(store.lost)} "
+              f"sig_depth={worst}/{bound} {ops}")
+        for msg in failures[:5]:
+            print(f"  {msg}")
+    else:
+        print(json.dumps({
+            "spans": len(store.spans),
+            "dropped_spans": store.dropped_spans,
+            "lost_pids": sorted(store.lost),
+            "traces": len(store.trace_ids()),
+            "complete_traces_per_op": per_op,
+            "blackholed_spans": len(store.blackholed()),
+            "signal_bound": bound,
+            "max_signal_depth": worst,
+            "failures": failures[:20],
+            "ok": not failures,
+        }, indent=2))
     return 0 if not failures else 1
 
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 import json
 from typing import Dict, List, Optional
 
+from .live import ClusterWatermarks
 from .metrics import MetricsRegistry
 from .timeline import Timeline
 from .trace import TraceStore, check_signal_hops
@@ -35,14 +36,15 @@ class ObsHub:
         self.hop_checks = 0
         self.hop_check_log: List[Dict] = []
         self._window: List[Dict] = []        # records since last check
-        self._all_records: List[Dict] = []   # full log for export
+        # merged live phase-watermark view (fed by the coordinator from
+        # every shard's tracker snapshot at each quiescent advance)
+        self.watermarks = ClusterWatermarks()
 
     # ---------------------------------------------------------- ingestion
     def ingest(self, pid: int, spans: List[Dict],
                metrics: Optional[Dict] = None) -> None:
         self.store.add(spans)
         self._window.extend(spans)
-        self._all_records.extend(spans)
         if metrics is not None:
             self.shards[pid] = metrics
 
@@ -54,7 +56,6 @@ class ObsHub:
         rec = {"ev": "lost", "pid": pid}
         self.store.mark_lost(pid)
         self._window.append(rec)
-        self._all_records.append(rec)
 
     # --------------------------------------------------------- invariants
     def check_window(self, n_live: int, *, phase: Optional[int] = None
@@ -76,6 +77,32 @@ class ObsHub:
             [self.metrics.snapshot(), *self.shards.values()])
 
     # ------------------------------------------------------------- export
+    def span_records(self) -> List[Dict]:
+        """The retained window of span records, reconstructed from the
+        capped store (retention is bounded — DESIGN.md §12): a
+        ``retention`` marker accounting everything evicted, the ``lost``
+        markers, then per trace (oldest first) each span followed by its
+        close. Offline checks over the exported log therefore agree
+        with the in-memory store."""
+        out: List[Dict] = []
+        st = self.store
+        if st.dropped_spans or st.evicted_traces:
+            out.append({"ev": "retention",
+                        "dropped_spans": st.dropped_spans,
+                        "evicted_traces": st.evicted_traces})
+        out.extend({"ev": "lost", "pid": pid} for pid in sorted(st.lost))
+        for trace, sids in st._by_trace.items():
+            for sid in sids:
+                rec = st.spans.get(sid)
+                if rec is None:
+                    continue
+                out.append(rec)
+                status = st.status.get(sid)
+                if status is not None:
+                    out.append({"ev": "close", "span": list(sid),
+                                "status": status, "pid": rec["pid"]})
+        return out
+
     def export(self, trace_path: Optional[str] = None,
                metrics_path: Optional[str] = None) -> None:
         """Write the Chrome trace (+ sibling span JSONL) and/or the
@@ -83,7 +110,7 @@ class ObsHub:
         if trace_path:
             self.timeline.save(trace_path)
             with open(spans_path(trace_path), "w") as f:
-                for r in self._all_records:
+                for r in self.span_records():
                     f.write(json.dumps(r) + "\n")
         if metrics_path:
             with open(metrics_path, "w") as f:
@@ -92,8 +119,10 @@ class ObsHub:
 
     def summary(self) -> Dict:
         return {"spans": len(self.store.spans),
+                "dropped_spans": self.store.dropped_spans,
                 "hop_checks": self.hop_checks,
                 "max_signal_depth": max((h["max_depth"]
                                          for h in self.hop_check_log),
                                         default=0),
-                "blackholed": len(self.store.blackholed())}
+                "blackholed": len(self.store.blackholed()),
+                "watermarks": self.watermarks.summary()}

@@ -9,8 +9,11 @@ shards' ``snapshot()`` dicts into one cluster view at collection time
 * ``Gauge``      — last-set level; merge = max across shards (levels
   like decode occupancy compare, they don't add);
 * ``Histogram``  — count/total/min/max plus a bounded reservoir of
-  recent samples for a median; merge folds the moments and
-  concatenates the reservoirs (capped).
+  recent samples for a median AND a fixed log-spaced bucket ladder
+  (shared across every shard, so merge is an elementwise sum of
+  bucket counts); p50/p99 derive from the cumulative bucket counts
+  (``quantile``) — the latency numbers the serve autoscaler and the
+  live-telemetry frames read.
 
 Names are dot-separated, subsystem first: ``serve.prefill.traces``,
 ``rpc.derive_epoch.seconds``, ``exchange.bytes_sent``,
@@ -22,6 +25,14 @@ from collections import deque
 from typing import Deque, Dict, Iterable, List, Optional
 
 _RESERVOIR = 64
+
+# Shared bucket ladder: geometric, 1 µs .. 25 s in 1/2.5/5 decades
+# (seconds-denominated metrics land mid-ladder; anything above the top
+# bound falls into the implicit +inf bucket). Every shard uses the SAME
+# ladder, which is what makes merge a plain elementwise sum.
+BUCKET_BOUNDS = tuple(m * (10.0 ** e)
+                      for e in range(-6, 2) for m in (1.0, 2.5, 5.0))
+_NB = len(BUCKET_BOUNDS) + 1          # + the +inf overflow bucket
 
 
 class Counter:
@@ -44,8 +55,40 @@ class Gauge:
         self.value = float(v)
 
 
+def _bucket_index(v: float) -> int:
+    lo, hi = 0, len(BUCKET_BOUNDS)
+    while lo < hi:                     # first bound >= v (upper bound)
+        mid = (lo + hi) // 2
+        if BUCKET_BOUNDS[mid] >= v:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo                          # == len(BOUNDS) -> +inf bucket
+
+
+def quantile_from_buckets(buckets: List[int], q: float,
+                          vmax: Optional[float] = None
+                          ) -> Optional[float]:
+    """Quantile estimate from cumulative bucket counts: the upper bound
+    of the bucket where the cumulative count crosses ``q`` (the +inf
+    bucket reports ``vmax`` when known). Works on a live ``Histogram``'s
+    buckets and on merged snapshot dicts alike."""
+    total = sum(buckets)
+    if not total:
+        return None
+    target = q * total
+    cum = 0
+    for i, n in enumerate(buckets):
+        cum += n
+        if cum >= target:
+            if i < len(BUCKET_BOUNDS):
+                return BUCKET_BOUNDS[i]
+            return vmax if vmax is not None else BUCKET_BOUNDS[-1]
+    return vmax if vmax is not None else BUCKET_BOUNDS[-1]
+
+
 class Histogram:
-    __slots__ = ("count", "total", "vmin", "vmax", "recent")
+    __slots__ = ("count", "total", "vmin", "vmax", "recent", "buckets")
 
     def __init__(self):
         self.count = 0
@@ -53,6 +96,7 @@ class Histogram:
         self.vmin: Optional[float] = None
         self.vmax: Optional[float] = None
         self.recent: Deque[float] = deque(maxlen=_RESERVOIR)
+        self.buckets: List[int] = [0] * _NB
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -61,6 +105,7 @@ class Histogram:
         self.vmin = v if self.vmin is None else min(self.vmin, v)
         self.vmax = v if self.vmax is None else max(self.vmax, v)
         self.recent.append(v)
+        self.buckets[_bucket_index(v)] += 1
 
     def median(self) -> Optional[float]:
         if not self.recent:
@@ -70,6 +115,11 @@ class Histogram:
 
     def mean(self) -> Optional[float]:
         return self.total / self.count if self.count else None
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Bucket-derived quantile (p50: ``quantile(0.5)``, p99:
+        ``quantile(0.99)``); resolution is the ladder's decade thirds."""
+        return quantile_from_buckets(self.buckets, q, self.vmax)
 
 
 class MetricsRegistry:
@@ -118,7 +168,8 @@ class MetricsRegistry:
             "gauges": {k: g.value for k, g in self._gauges.items()},
             "hists": {k: {"count": h.count, "total": h.total,
                           "min": h.vmin, "max": h.vmax,
-                          "recent": list(h.recent)}
+                          "recent": list(h.recent),
+                          "buckets": list(h.buckets)}
                       for k, h in self._hists.items()},
         }
 
@@ -142,7 +193,9 @@ class MetricsRegistry:
             for k, h in snap.get("hists", {}).items():
                 cur = out["hists"].get(k)
                 if cur is None:
-                    out["hists"][k] = {**h, "recent": list(h["recent"])}
+                    out["hists"][k] = {**h, "recent": list(h["recent"]),
+                                       "buckets": list(h.get("buckets")
+                                                       or [0] * _NB)}
                     continue
                 cur["count"] += h["count"]
                 cur["total"] += h["total"]
@@ -151,7 +204,20 @@ class MetricsRegistry:
                 cur["min"] = min(mins) if mins else None
                 cur["max"] = max(maxs) if maxs else None
                 cur["recent"] = (cur["recent"] + list(h["recent"]))[-_RESERVOIR:]
+                # same fixed ladder on every shard: elementwise sum
+                hb = h.get("buckets") or [0] * _NB
+                cb = cur.get("buckets") or [0] * _NB
+                cur["buckets"] = [a + b for a, b in zip(cb, hb)]
         return out
+
+    @staticmethod
+    def hist_quantile(merged_hist: Dict, q: float) -> Optional[float]:
+        """Quantile from a snapshot/merged hist dict (p50/p99 for
+        summary rows and live-telemetry frames)."""
+        b = merged_hist.get("buckets")
+        if not b:
+            return None
+        return quantile_from_buckets(b, q, merged_hist.get("max"))
 
     @staticmethod
     def summary_rows(merged: Dict) -> List[Dict]:
@@ -166,11 +232,16 @@ class MetricsRegistry:
                          "value": round(merged["gauges"][k], 4)})
         for k in sorted(merged.get("hists", {})):
             h = merged["hists"][k]
-            mean = h["total"] / h["count"] if h["count"] else 0.0
-            rows.append({"metric": k, "type": "hist",
-                         "value": f"n={h['count']} mean={mean:.4g} "
-                                  f"max={h['max']:.4g}" if h["count"]
-                                  else "n=0"})
+            if not h["count"]:
+                rows.append({"metric": k, "type": "hist", "value": "n=0"})
+                continue
+            mean = h["total"] / h["count"]
+            val = f"n={h['count']} mean={mean:.4g} max={h['max']:.4g}"
+            p50 = MetricsRegistry.hist_quantile(h, 0.5)
+            p99 = MetricsRegistry.hist_quantile(h, 0.99)
+            if p50 is not None:
+                val += f" p50={p50:.4g} p99={p99:.4g}"
+            rows.append({"metric": k, "type": "hist", "value": val})
         return rows
 
 

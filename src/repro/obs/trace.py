@@ -35,6 +35,7 @@ latency bench) import it without paying the jax import.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from ..core.complexity import signal_bound
@@ -62,6 +63,9 @@ class Tracer:
         self.dropped_records = 0
         # actor rank -> the context its next sends parent under
         self._cur: Dict[int, SpanCtx] = {}
+        # optional FlightRecorder tee: every record also lands in the
+        # process's bounded crash ring (set by ShardPhaser)
+        self.flight = None
 
     # ------------------------------------------------------------ plumbing
     def _new_id(self) -> SpanId:
@@ -69,6 +73,10 @@ class Tracer:
         return (self.pid, self.seq)
 
     def _emit(self, rec: Dict) -> None:
+        if self.flight is not None:
+            # tee BEFORE the backstop: the flight ring keeps the most
+            # recent records even when the drain buffer saturated
+            self.flight.record(rec)
         if len(self.records) >= _MAX_RECORDS:
             self.dropped_records += 1
             return
@@ -141,29 +149,75 @@ class Tracer:
         return out
 
 
+def trace_root_pid(trace: str) -> Optional[int]:
+    """The pid that opened a trace's root span, parsed from the trace
+    id (``op:key:pid:seq`` — ``orphan:kind:pid:seq`` for rootless
+    sends). Lets ``problems`` tolerate a whole trace whose root lived
+    on a lost shard, whatever order the ``lost`` marker arrived in."""
+    parts = trace.split(":")
+    if len(parts) != 4:
+        return None
+    try:
+        return int(parts[2])
+    except ValueError:
+        return None
+
+
 class TraceStore:
     """Merged span records from every shard; reconstructs causal span
-    trees and answers the completeness / critical-path queries."""
+    trees and answers the completeness / critical-path queries.
 
-    def __init__(self):
+    Retention is bounded (``max_spans``): once the cap is crossed, the
+    OLDEST whole traces are evicted — whole traces, never individual
+    spans, so every retained tree stays complete and ``problems`` keeps
+    its meaning over the retained window. ``dropped_spans`` counts the
+    evicted spans; ``max_spans=None`` disables eviction (the per-window
+    hop check builds throwaway exact stores that way)."""
+
+    def __init__(self, max_spans: Optional[int] = 100_000):
+        self.max_spans = max_spans
         self.spans: Dict[SpanId, Dict] = {}
         self.status: Dict[SpanId, str] = {}
         # shards declared dead before their records could be drained
         # (non-cooperative eviction): their spans are tolerated as
         # incomplete instead of failing the causal-tree check
         self.lost: set = set()
+        self.dropped_spans = 0
+        self.evicted_traces = 0
+        # trace id -> span ids, in trace arrival order (eviction order)
+        self._by_trace: "OrderedDict[str, List[SpanId]]" = OrderedDict()
 
     def mark_lost(self, pid: int) -> None:
         self.lost.add(pid)
 
     def add(self, records: Iterable[Dict]) -> None:
         for r in records:
-            if r["ev"] == "span":
-                self.spans[tuple(r["span"])] = r
-            elif r["ev"] == "close":
+            ev = r.get("ev")
+            if ev == "span":
+                sid = tuple(r["span"])
+                self.spans[sid] = r
+                self._by_trace.setdefault(r["trace"], []).append(sid)
+            elif ev == "close":
                 self.status[tuple(r["span"])] = r["status"]
-            elif r["ev"] == "lost":
+            elif ev == "lost":
                 self.lost.add(r["pid"])
+            elif ev == "retention":
+                # a bounded upstream store already evicted: account it
+                self.dropped_spans += r.get("dropped_spans", 0)
+                self.evicted_traces += r.get("evicted_traces", 0)
+            # unknown ev kinds (flight events, future frames): ignored
+        self._evict()
+
+    def _evict(self) -> None:
+        if self.max_spans is None:
+            return
+        while len(self.spans) > self.max_spans and len(self._by_trace) > 1:
+            trace, sids = self._by_trace.popitem(last=False)
+            for sid in sids:
+                self.spans.pop(sid, None)
+                self.status.pop(sid, None)
+                self.dropped_spans += 1
+            self.evicted_traces += 1
 
     # ------------------------------------------------------------ queries
     def traces(self) -> Dict[str, List[Dict]]:
@@ -214,7 +268,8 @@ class TraceStore:
         tolerated — a crash must not fail the survivors' trees."""
         out = []
         recs = [r for r in self.spans.values() if r["trace"] == trace]
-        if not any(r["parent"] is None for r in recs):
+        if not any(r["parent"] is None for r in recs) \
+                and trace_root_pid(trace) not in self.lost:
             out.append(f"{trace}: no root span")
         for r in recs:
             sid = tuple(r["span"])
@@ -256,7 +311,7 @@ def check_signal_hops(records: Iterable[Dict], n_live: int, *,
     returns the measured summary. The coordinator runs this on the
     window of records drained since the previous check — i.e. at every
     phase advance, epoch boundaries included."""
-    store = TraceStore()
+    store = TraceStore(max_spans=None)   # one window: exact, uncapped
     store.add(records)
     bound = signal_bound(max(2, n_live), p=p, c=c)
     worst, worst_trace = 0, None

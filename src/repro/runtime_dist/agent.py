@@ -236,8 +236,18 @@ class HostAgent:
         coordinator collects after every quiescent advance)."""
         return {"spans": self.shard.drain_obs(),
                 "metrics": self.metrics.snapshot(),
+                "watermarks": self.shard.watermarks.snapshot(),
                 "frames": {"sent": self.endpoint.frames_sent,
                            "received": self.endpoint.frames_received}}
+
+    def _op_flight_flush(self, c):
+        """Flush this shard's flight ring to disk (coordinator asks at
+        failure edges: cooperative leave, and on every survivor after a
+        non-cooperative eviction)."""
+        from ..obs.recorder import flight_path
+        path = c.get("path") or flight_path(c["dir"], self.pid)
+        n = self.shard.flight.flush(path, c.get("reason", "request"))
+        return {"path": path, "records": n}
 
     def _op_derive_epoch(self, c):
         """Boundary: install the membership view, verify this shard's
@@ -295,6 +305,9 @@ class HostAgent:
             time.sleep(c["delay"])   # test hook: straggling process
         dt = time.perf_counter() - pend["t0"]
         self.metrics.observe("agent.step_seconds", dt)
+        self.shard.watermarks.add_compute_time(self.pid, dt)
+        self.shard.flight.event("step", step=int(c.get("step", -1)),
+                                dt=round(dt, 6))
         out = {"loss": pend["loss"], "dt": dt,
                "gnorm": float(np.asarray(om.get("gnorm", 0.0)))}
         self._applied = {"step": int(c.get("step", -1)), **out}

@@ -61,6 +61,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.phaser import SCSL, SNSL
 from ..obs.hub import ObsHub
+from ..obs.live import LiveStreamer
+from ..obs.recorder import flight_path
 from .agent import HostAgent
 from .exchange import run_schedule_rounds
 from .failure import (HostDead, PeerUnreachable, PhiDetector, RpcTimeout,
@@ -456,7 +458,8 @@ class DistCoordinator:
                  p: float = 0.5, proc_kind: str = "phaser_scsl",
                  axis_name: str = "data", data: Optional[Dict] = None,
                  data_for: Optional[Callable[[int], Dict]] = None,
-                 obs: bool = False):
+                 obs: bool = False, live_out: Optional[str] = None,
+                 flight_dir: Optional[str] = None):
         self.cluster = cluster
         self.seed = seed
         self.p = p
@@ -478,7 +481,16 @@ class DistCoordinator:
         # obs plane: per-frame span traces collected at every quiescent
         # advance, the O(log P) hop invariant checked per phase, shard
         # metrics merged here (DESIGN.md §12)
-        self.obs = ObsHub(p=p) if obs else None
+        self.obs = ObsHub(p=p) if (obs or live_out) else None
+        # streaming telemetry: heartbeat frames appended to --live-out
+        # at a bounded cadence; failure edges force a frame through
+        self.live_stream = LiveStreamer(live_out) if live_out else None
+        # flight-ring flush directory: when set, the coordinator asks
+        # shards to flush their rings at the failure edges and flushes
+        # its own alongside
+        self.flight_dir = flight_dir
+        if flight_dir:
+            os.makedirs(flight_dir, exist_ok=True)
         # the first step after any (re)compile boundary is warmup: tag
         # it so step-time strike accounting never counts compile time.
         # Only hosts with a data plane ever compile; control-only
@@ -513,6 +525,7 @@ class DistCoordinator:
                 "proc_kind": self.proc_kind,
                 "live": sorted(self.live), "demoted": sorted(self.demoted),
                 "obs": self.obs is not None,
+                "flight_dir": self.flight_dir,
                 # a host joining after a non-cooperative eviction must be
                 # born into the CURRENT incarnation, or the survivors'
                 # gen-stamped frames (its own MURS_ACK included) get
@@ -537,9 +550,15 @@ class DistCoordinator:
         shard included)."""
         assert self.obs is not None
         self.obs.ingest(COORD, self.shard.drain_obs())
+        self.obs.watermarks.update(COORD, self.shard.watermarks.snapshot(),
+                                   gen=self._gen)
         for pid in sorted(self.live):
             r = self._call(pid, {"op": "obs"})
             self.obs.ingest(pid, r["spans"], r["metrics"])
+            # merge the shard's phase watermarks: per-host monotonicity
+            # asserted here, across churn and generation bumps
+            self.obs.watermarks.update(pid, r.get("watermarks"),
+                                       gen=self._gen)
         cm = getattr(self.cluster, "metrics", None)
         if cm is not None:
             self.obs.ingest(-2, [], cm.snapshot())
@@ -552,6 +571,45 @@ class DistCoordinator:
                    metrics_path: Optional[str] = None) -> None:
         assert self.obs is not None, "coordinator built without obs=True"
         self.obs.export(trace_path, metrics_path)
+
+    def _emit_live_frame(self, *, phase: int, force: bool = False) -> None:
+        """One heartbeat frame to --live-out (rate-limited unless the
+        caller forces; failure edges always force)."""
+        if self.live_stream is None or self.obs is None:
+            return
+        det = getattr(self.cluster, "detector", None)
+        phi = None
+        if det is not None:
+            phi = {}
+            for p in sorted(self.live):
+                try:
+                    phi[p] = det.phi(p)
+                except Exception:
+                    pass
+        self.live_stream.frame(
+            step=self._step, phase=phase, epoch=self.epoch.index,
+            gen=self._gen, live=sorted(self.live),
+            watermarks=self.obs.watermarks,
+            merged_metrics=self.obs.merged_metrics(), phi=phi,
+            events=[[e.step, e.kind, e.pid] for e in self.events],
+            force=force)
+
+    def _flush_flight(self, reason: str,
+                      pids: Optional[Sequence[int]] = None) -> None:
+        """Best-effort flight-ring flush: the coordinator's own ring
+        plus the given shards' (default: every live host). Never raises
+        — these are failure edges."""
+        if not self.flight_dir:
+            return
+        self.shard.flight.flush(flight_path(self.flight_dir, COORD),
+                                reason)
+        for pid in (sorted(self.live) if pids is None else pids):
+            try:
+                self._call(pid, {"op": "flight_flush",
+                                 "dir": self.flight_dir,
+                                 "reason": reason}, timeout=30.0)
+            except Exception:
+                pass    # a flush must never extend a failure cascade
 
     def _quiesce(self) -> None:
         self.cluster.quiesce(self.shard)
@@ -665,6 +723,11 @@ class DistCoordinator:
             # span + deliveries) must be salvaged before the process goes
             r = self._call(pid, {"op": "obs"})
             self.obs.ingest(pid, r["spans"], r["metrics"])
+            self.obs.watermarks.update(pid, r.get("watermarks"),
+                                       gen=self._gen)
+            self.obs.watermarks.retire(pid)
+        if self.flight_dir:
+            self._flush_flight("leave", pids=[pid])
         self.cluster.drop_host(pid)
         self.events.append(HostEvent(self._at(step),
                                      "fail" if fail else "leave", pid))
@@ -761,12 +824,21 @@ class DistCoordinator:
             self._dirty = True
             if self.obs is not None:
                 self.obs.note_lost(d)
+                # the corpse's watermark freezes at its last observed
+                # value, then leaves the live view — survivors keep
+                # asserting monotone against their own floors
+                self.obs.watermarks.retire(d)
                 self.obs.metrics.inc("failure.declared_dead")
                 self.obs.metrics.observe("failure.recover_seconds",
                                          time.perf_counter() - t0)
                 if decl is not None:
                     self.obs.metrics.observe("failure.detection_seconds",
                                              decl["silence"])
+        # SIGKILL-survivor recovery: the corpse wrote nothing, so the
+        # record of the death is every survivor's ring (+ the
+        # coordinator's own), flushed now
+        self._flush_flight("peer-dead")
+        self._emit_live_frame(phase=self.shard.released(), force=True)
 
     # ----------------------------------------------------------- stepping
     def advance(self, *, step: Optional[int] = None) -> int:
@@ -802,6 +874,7 @@ class DistCoordinator:
             # this runs at EVERY quiescent advance, churn included
             self._collect_obs()
             self.obs.check_window(len(self.live), phase=released)
+            self._emit_live_frame(phase=released)
         if self._dirty:
             old = self.epoch
             new = self._derive_boundary(old.index + 1, released + 1)
@@ -951,8 +1024,14 @@ class DistCoordinator:
 
         compile_step = self._compile_pending
         self._compile_pending = False
+        # wait attribution: a host slow because it *waited* on peers is
+        # a victim, not a culprit — its blocked-on-WAIT seconds since
+        # the last policy call are subtracted before the median test
+        waits = (self.obs.watermarks.take_wait_deltas()
+                 if self.obs is not None else None)
         esc.observe(self.live, times, demoted=self.demoted,
-                    on_action=apply, compile_step=compile_step)
+                    on_action=apply, compile_step=compile_step,
+                    waits=waits)
         return evicted
 
     # ------------------------------------------------------- checkpointing
@@ -1018,6 +1097,10 @@ class DistCoordinator:
         if self.obs is not None and self.live:
             try:
                 self._collect_obs()   # epoch spans since the last advance
+                self._emit_live_frame(phase=self.shard.released(),
+                                      force=True)
             except Exception:
                 pass                  # never let teardown fail on obs
+        if self.live_stream is not None:
+            self.live_stream.close()
         self.cluster.close()

@@ -22,12 +22,15 @@ because delivery is synchronous).
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core.phaser import SCSL, SNSL, SIG_MODE, SIG_WAIT, WAIT_MODE, \
     PhaserActor
 from ..core.runtime import Envelope, Network
 from ..core.skiplist import HEAD, SkipList, det_height
+from ..obs.live import WatermarkTracker
+from ..obs.recorder import FlightRecorder
 from ..obs.trace import Tracer
 from .transport import Endpoint
 
@@ -147,11 +150,20 @@ class ShardPhaser:
         self.live: Set[int] = set(live)
         self.demoted: Set[int] = set(demoted)
         self.net = PartitionedNetwork(pid, endpoint, owner_of)
+        # always-on obs layer: phase watermarks (counter bumps via the
+        # actor hooks) and the bounded flight ring — both cheap enough
+        # to never gate behind ``obs``
+        self.watermarks = WatermarkTracker(pid)
+        self.flight = FlightRecorder(pid)
         if obs:
             self.net.tracer = Tracer(pid)
+            self.net.tracer.flight = self.flight
         self.modes: Dict[int, str] = {k: SIG_WAIT for k in self.live}
         if modes:
             self.modes.update(modes)
+        for k in self.live:
+            if owner_of(k) == pid:
+                self.watermarks.set_mode(k, self.modes[k])
         self.async_parent: Dict[int, int] = {}
         self.release_log: List[int] = []
         self.gen = 0                 # membership incarnation (recovery)
@@ -192,6 +204,16 @@ class ShardPhaser:
 
     def on_release(self, k: int) -> None:
         self.release_log.append(k)
+        # fires on the HEAD owner (the coordinator): one event per phase
+        self.flight.event("release", phase=k)
+
+    # watermark hooks — PhaserActor looks these up via getattr on its
+    # phaser facade; the shard's tracker is always on
+    def on_local_signal(self, rank: int, phase: int) -> None:
+        self.watermarks.on_signal(rank, phase)
+
+    def on_wait_advance(self, rank: int, phase: int) -> None:
+        self.watermarks.on_wait_advance(rank, phase)
 
     # ---------------------------------------------------------- topology
     def oracle(self, keys: Optional[Iterable[int]] = None) -> SkipList:
@@ -285,7 +307,9 @@ class ShardPhaser:
 
     def signal(self, rank: int) -> None:
         self._root("signal", rank)
+        t0 = time.perf_counter()
         self.actors[rank].local_signal()
+        self.watermarks.add_signal_time(rank, time.perf_counter() - t0)
 
     def drop(self, rank: int) -> None:
         self._root("evict", rank)
@@ -323,6 +347,8 @@ class ShardPhaser:
         self.demoted = set(demoted)
         for k in self.live:
             self.modes.setdefault(k, SIG_WAIT)
+        self.flight.event("membership", live=sorted(self.live),
+                          gone=sorted(gone))
 
     # ---------------------------------------------------------- recovery
     def rebuild(self, live: Iterable[int], demoted: Iterable[int],
@@ -342,6 +368,12 @@ class ShardPhaser:
         self.demoted = set(demoted)
         for k in self.live:
             self.modes.setdefault(k, SIG_WAIT)
+        # the tracker survives rebuild: watermarks are monotone across
+        # generations (the rebuilt incarnation opens at phase + 1, which
+        # is >= every previously observed watermark)
+        self.watermarks.gen = gen
+        self.flight.event("rebuild", gen=gen, phase=phase,
+                          live=sorted(self.live), gone=sorted(gone))
         # drop the old incarnation's in-flight frames, closing spans so
         # the causal trees stay complete
         for q in self.net.channels.values():

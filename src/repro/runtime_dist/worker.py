@@ -54,6 +54,21 @@ def _flush_spans(agent, directory: str, pid: int) -> None:
         pass                    # best effort: never mask the exit path
 
 
+def _flush_flight(agent, directory: str, pid: int, reason: str) -> None:
+    """Flush the flight ring on a failure edge (crash / orphan exit):
+    the bounded window of recent records survives even though the
+    coordinator will never collect this shard again."""
+    if agent is None:
+        return
+    try:
+        from ..obs.recorder import flight_path
+        d = agent.cfg.get("flight_dir") or directory
+        agent.shard.flight.event("exit", reason=reason)
+        agent.shard.flight.flush(flight_path(d, pid), reason)
+    except Exception:
+        pass                    # best effort: never mask the exit path
+
+
 def serve(pid: int, directory: str,
           orphan_timeout: float | None = None) -> int:
     if orphan_timeout is None:
@@ -73,6 +88,7 @@ def serve(pid: int, directory: str,
                     # coordinator silent past the heartbeat horizon:
                     # flush observability state and exit cleanly
                     _flush_spans(agent, directory, pid)
+                    _flush_flight(agent, directory, pid, "orphan")
                     return 2
                 continue
             src, tag, payload = frame
@@ -123,6 +139,11 @@ def serve(pid: int, directory: str,
                 ep.send(src, "rep", (cid, reply))
             else:
                 raise AssertionError(f"worker {pid}: bad tag {tag!r}")
+    except Exception:
+        # crash path: the ring is the only record of what this shard
+        # was doing — flush it before the traceback propagates
+        _flush_flight(agent, directory, pid, "crash")
+        raise
     finally:
         ep.close()
 

@@ -55,13 +55,27 @@ class StrikeEscalation:
     def observe(self, live, times: Dict[int, float], *,
                 demoted: Iterable[int] = (),
                 on_action: Optional[Callable[[StrikeAction], None]] = None,
-                compile_step: bool = False) -> List[StrikeAction]:
+                compile_step: bool = False,
+                waits: Optional[Dict[int, float]] = None
+                ) -> List[StrikeAction]:
         """One step's observation. ``live`` and ``demoted`` are read
         live (the callback may mutate them); returns every action
         emitted, in order. A ``compile_step`` (the first step after a
         boundary re-lower) is recorded in the metrics but exempt from
-        strike accounting: compile/warmup skew is not straggling."""
-        live_times = [times[w] for w in live if w in times]
+        strike accounting: compile/warmup skew is not straggling.
+
+        ``waits`` (optional) is the watermark layer's per-participant
+        blocked-on-WAIT seconds for the step window: time spent waiting
+        on *peers* is subtracted before the slack test, so a host that
+        is slow because someone else gated it is a victim, not a
+        culprit — attribution, not just magnitude."""
+        wait_of = (lambda w: 0.0) if waits is None else \
+            (lambda w: max(0.0, waits.get(w, 0.0)))
+
+        def eff(w: int, t: float) -> float:
+            return max(0.0, t - min(wait_of(w), t))
+
+        live_times = [eff(w, times[w]) for w in live if w in times]
         if not live_times:
             return []
         med = sorted(live_times)[len(live_times) // 2]
@@ -82,6 +96,8 @@ class StrikeEscalation:
 
         for w in sorted(live):
             t = times.get(w)
+            if t is not None:
+                t = eff(w, t)
             if t is not None and t > self.slack * med:
                 self.strikes[w] = self.strikes.get(w, 0) + 1
                 emit(w, "straggle")

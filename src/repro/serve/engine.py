@@ -49,6 +49,7 @@ therefore go through ``utils.to_device_copy``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -70,6 +71,7 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0           # stamped by submit(); queue-wait base
 
 
 class ServeEngine:
@@ -173,6 +175,7 @@ class ServeEngine:
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     @staticmethod
@@ -346,6 +349,11 @@ class ServeEngine:
 
     def _occupy(self, slot: int, req: "Request", first_tok: int,
                 length: int) -> None:
+        # admission completes here: submit -> first token in a slot is
+        # the request's queue wait (histogram buckets give p50/p99)
+        if req.t_submit:
+            self.metrics.observe("serve.admit.queue_wait_seconds",
+                                 time.perf_counter() - req.t_submit)
         req.out.append(first_tok)
         self.slot_key[slot] = self.gate.request_join()
         self.slot_req[slot] = req
@@ -389,8 +397,13 @@ class ServeEngine:
             r = self.slot_req[i]
             token_b[i] = r.out[-1] if r.out else r.prompt[-1]
         self.metrics.inc("serve.decode.steps")
+        t0 = time.perf_counter()
         logits, self.state = self._dispatch(token_b, self.slot_pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # np.asarray forced the device sync: this is the real per-token
+        # decode latency of the whole batch (p50/p99 from the buckets)
+        self.metrics.observe("serve.decode.token_seconds",
+                             time.perf_counter() - t0)
         for i in active:
             r = self.slot_req[i]
             r.out.append(int(nxt[i]))
