@@ -97,18 +97,22 @@ def bench_lazy(cs=(1, 2, 4, 8, 16, 32), n=64, seed=0) -> List[Dict]:
     return rows
 
 
-def bench_dist_control(ns=(2, 4, 8), seed=0, reps=3) -> List[Dict]:
+def bench_dist_control(ns=(2, 4, 8), seed=0, reps=3,
+                       fabric="unix") -> List[Dict]:
     """The partitioned control plane at host granularity: N worker OS
-    processes over AF_UNIX sockets, coordinator owning HEAD. Per N:
-    phase-advance wall latency (min over ``reps`` — socket polling
-    cadence dominates the constant, so the deterministic hop depth is
-    the scaling metric), one join + one evict latency, and the
-    critical-path hops / remote frame counts, which are deterministic
-    functions of (seed, membership) and survive pickling."""
+    processes over socket ``fabric`` ("unix" = AF_UNIX, "tcp" =
+    loopback TCP with the reconnect-replay session layer), coordinator
+    owning HEAD. Per N: phase-advance wall latency (min over ``reps``
+    — socket polling cadence dominates the constant, so the
+    deterministic hop depth is the scaling metric), one join + one
+    evict latency, and the critical-path hops / remote frame counts,
+    which are deterministic functions of (seed, membership) and
+    survive pickling — identical across fabrics by construction."""
     from repro.runtime_dist import DistCoordinator, SocketCluster
     rows = []
     for n in ns:
-        rt = DistCoordinator(SocketCluster(control_only=True), n,
+        rt = DistCoordinator(SocketCluster(control_only=True,
+                                           fabric=fabric), n,
                              seed=seed, obs=True)
         adv = math.inf
         sig_hops = None
@@ -140,7 +144,8 @@ def bench_dist_control(ns=(2, 4, 8), seed=0, reps=3) -> List[Dict]:
         hops = rt.control_stats()["critical_path"]
         rt.close()
         hop_checks = rt.obs.hop_checks
-        rows.append({"n": n,
+        rows.append({"transport": fabric,
+                     "n": n,
                      "advance_ms": round(adv * 1e3, 2),
                      "join_ms": round(t_join * 1e3, 2),
                      "evict_ms": round(t_evict * 1e3, 2),
@@ -182,43 +187,53 @@ def run(report):
     report.table("T3 lazy promotion per-node MULS messages vs C "
                  "(claim: O(p/(1-p)·log(C·p/(1-p))))", rows)
 
-    rows = bench_dist_control()
-    ns = [r["n"] for r in rows]
-    lo, hi = rows[0], rows[-1]
-    scale = hi["n"] / lo["n"]
-    # primary claim: growing the host count 4x must grow the critical
-    # path strictly sub-linearly (< 4x) — the partitioned skip list
-    # keeps O(log n) depth even when every hop is an inter-process
-    # frame. Asserted on the signal phase AND on the full churn
-    # sequence (join + evict + boundaries).
-    for metric in ("sig_hops", "churn_hops"):
-        assert hi[metric] < lo[metric] * scale, \
-            (f"control-plane {metric} grew super-linearly over "
-             f"{lo['n']}->{hi['n']} hosts: {lo[metric]} -> {hi[metric]}")
-    within = all(r["sig_hops"] <= r["bound_hops"] for r in rows)
-    _, fit = X.is_logarithmic(ns, [r["sig_hops"] for r in rows])
-    report.table(
-        "multi-host control plane: structural ops across worker "
-        "processes (claim: O(log n) critical path)", rows,
-        note=f"sub-linear hop growth over {lo['n']}->{hi['n']} hosts "
-             f"asserted (sig {lo['sig_hops']}->{hi['sig_hops']}, churn "
-             f"{lo['churn_hops']}->{hi['churn_hops']}, linear would be "
-             f"{scale:.0f}x); signal hops within O(log n) bound: "
-             f"{within} (log-fit r2={fit.r2:.3f}); join/evict wall "
-             f"includes process spawn/reap — hops are the scaling "
-             f"metric")
+    all_rows = []
+    fit = within = None
+    for fabric in ("unix", "tcp"):
+        rows = bench_dist_control(fabric=fabric)
+        ns = [r["n"] for r in rows]
+        lo, hi = rows[0], rows[-1]
+        scale = hi["n"] / lo["n"]
+        # primary claim: growing the host count 4x must grow the
+        # critical path strictly sub-linearly (< 4x) — the partitioned
+        # skip list keeps O(log n) depth even when every hop is an
+        # inter-process frame. Asserted on the signal phase AND on the
+        # full churn sequence (join + evict + boundaries), per fabric
+        # (the hop counts are fabric-independent; the TCP rows prove
+        # the session layer does not change the structure).
+        for metric in ("sig_hops", "churn_hops"):
+            assert hi[metric] < lo[metric] * scale, \
+                (f"{fabric} control-plane {metric} grew super-linearly "
+                 f"over {lo['n']}->{hi['n']} hosts: "
+                 f"{lo[metric]} -> {hi[metric]}")
+        within = all(r["sig_hops"] <= r["bound_hops"] for r in rows)
+        _, fit = X.is_logarithmic(ns, [r["sig_hops"] for r in rows])
+        report.table(
+            "multi-host control plane: structural ops across worker "
+            f"processes, {fabric} fabric (claim: O(log n) critical "
+            "path)", rows,
+            note=f"sub-linear hop growth over {lo['n']}->{hi['n']} "
+                 f"hosts asserted (sig {lo['sig_hops']}->"
+                 f"{hi['sig_hops']}, churn {lo['churn_hops']}->"
+                 f"{hi['churn_hops']}, linear would be {scale:.0f}x); "
+                 f"signal hops within O(log n) bound: {within} "
+                 f"(log-fit r2={fit.r2:.3f}); join/evict wall "
+                 f"includes process spawn/reap — hops are the scaling "
+                 f"metric")
+        all_rows += rows
     payload = {
         "bench": "dist_control_plane",
-        "schema_version": 2,            # v2: trace_sig_depth/hop_checks
-        "transport": "af_unix_sockets",
-        "hosts": ns,
-        "rows": rows,
-        "sublinear_hop_growth": True,   # asserted above, 2 -> 8 hosts
+        "schema_version": 3,    # v3: per-fabric rows (transport key),
+                                # TCP + session layer beside AF_UNIX
+        "transports": ["unix", "tcp"],
+        "hosts": sorted({r["n"] for r in all_rows}),
+        "rows": all_rows,
+        "sublinear_hop_growth": True,   # asserted above, both fabrics
         "log_fit_r2": round(fit.r2, 4),
         "signal_hops_within_bound": within,
         # every row's phase advances ran the trace layer's per-signal
         # O(log P) hop assertion (obs.check_signal_hops) at runtime
-        "runtime_hop_checks": sum(r["hop_checks"] for r in rows),
+        "runtime_hop_checks": sum(r["hop_checks"] for r in all_rows),
     }
     path = os.path.join(report.outdir, "BENCH_dist.json")
     with open(path, "w") as f:

@@ -49,7 +49,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: complexity,modelcheck,collective,"
-                         "pipeline,kernel,roofline,obs,chaos")
+                         "pipeline,kernel,roofline,obs,chaos,tcp")
     ap.add_argument("--quick", action="store_true",
                     help="smoke path: schedule-derivation benches only "
                          "(complexity + collective + pipeline + obs "
@@ -58,12 +58,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
     if args.quick and want is None:
-        want = {"complexity", "collective", "pipeline", "obs", "chaos"}
+        want = {"complexity", "collective", "pipeline", "obs", "chaos",
+                "tcp"}
 
     from benchmarks import (chaos_bench, collective_bench,
                             complexity_bench, kernel_bench,
                             modelcheck_bench, obs_bench, pipeline_bench,
-                            roofline_bench)
+                            roofline_bench, tcp_bench)
     benches = {
         "complexity": complexity_bench,
         "modelcheck": modelcheck_bench,
@@ -73,6 +74,7 @@ def main(argv=None):
         "roofline": roofline_bench,
         "obs": obs_bench,
         "chaos": chaos_bench,
+        "tcp": tcp_bench,
     }
     rep = Report()
     t0 = time.time()

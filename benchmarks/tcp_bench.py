@@ -1,0 +1,143 @@
+"""TCP-fabric bench: reconnect-replay latency and partition healing.
+
+Two tables over the loopback-TCP socket fabric (control-plane-only
+worker processes) exercising the session layer end to end:
+
+1. **Reconnect-replay latency** — between phase advances, reset every
+   established connection in the cluster (coordinator outbound plus
+   each worker's outbound, via RPC) and measure the next advance
+   against the clean figure. The gap is the full recovery path: the
+   first write into a severed stream surfaces the error, the channel
+   reconnects with a fresh hello, replays every unacked envelope from
+   the resend ring, and the receiver dedupes by sequence — the advance
+   completes with zero lost or duplicated SIGs, asserted by the exact
+   cluster-wide ``seq_assigned == delivered`` balance.
+
+2. **Partition heal** — a symmetric link partition around one worker,
+   shorter than the failure timeout. The detector suspects the host,
+   the window expires, acks resume, and the suspicion clears with ZERO
+   membership events; the table reports the heal-to-advance wall
+   latency and the recovered/evicted counters.
+
+Emits ``BENCH_tcp.json`` (consumed by the perf-regression sentry and
+uploaded by the ``tcp-smoke`` CI job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+SCHEMA_VERSION = 1
+HOSTS = 3
+STORM_REPS = 3
+
+
+def _session_totals(cl) -> dict:
+    """Cluster-wide counter fold: the coordinator endpoint's registry
+    plus every worker's, fetched over the (already exercised) RPC."""
+    tot = dict(cl.metrics.snapshot()["counters"])
+    for pid in sorted(cl.procs):
+        m = cl.call(pid, {"op": "obs"})["metrics"]["counters"]
+        for k, v in m.items():
+            tot[k] = tot.get(k, 0) + v
+    return tot
+
+
+def bench_reset_replay() -> tuple[list, dict]:
+    from repro.runtime_dist import DistCoordinator, SocketCluster
+    cl = SocketCluster(control_only=True, hb_interval=0.1,
+                       failure_timeout=5.0, fabric="tcp")
+    rt = DistCoordinator(cl, HOSTS, seed=0)
+    rows = []
+    try:
+        clean = float("inf")
+        for s in range(3):              # warm + clean figure
+            t0 = time.perf_counter()
+            rt.advance(step=s)
+            clean = min(clean, time.perf_counter() - t0)
+        for i in range(STORM_REPS):
+            hit = cl.inject_reset_storm()
+            t0 = time.perf_counter()
+            rt.advance(step=3 + i)
+            dt = time.perf_counter() - t0
+            rows.append({"storm": i, "streams_reset": hit,
+                         "clean_advance_ms": round(clean * 1e3, 2),
+                         "storm_advance_ms": round(dt * 1e3, 2),
+                         "recovery_overhead_ms":
+                             round((dt - clean) * 1e3, 2)})
+        tot = _session_totals(cl)
+        assigned = tot.get("transport.session.seq_assigned", 0)
+        delivered = tot.get("transport.session.delivered", 0)
+        assert assigned > 0 and assigned == delivered, \
+            (assigned, delivered)
+        assert tot.get("transport.session.reaped", 0) == 0
+        fps = {e.fingerprint for e in rt.epochs}
+        assert len(fps) == len(rt.epochs)
+        summary = {
+            "balance_ok": True,         # asserted above
+            "seq_assigned": assigned,
+            "resets": tot.get("transport.session.resets", 0),
+            "replays": tot.get("transport.session.replays", 0),
+            "dupes_dropped":
+                tot.get("transport.session.dupes_dropped", 0),
+        }
+        return rows, summary
+    finally:
+        rt.close()
+
+
+def bench_partition_heal() -> dict:
+    from repro.runtime_dist import DistCoordinator, SocketCluster
+    window, timeout = 1.3, 4.0
+    cl = SocketCluster(control_only=True, hb_interval=0.2,
+                       failure_timeout=timeout, fabric="tcp")
+    rt = DistCoordinator(cl, HOSTS, seed=0)
+    try:
+        rt.advance(step=0)
+        t_fault = time.monotonic()
+        cl.inject_link_fault([1], None, duration=window)
+        while time.monotonic() - t_fault < window + 0.4:
+            time.sleep(0.1)
+            assert cl.poll_failures() == []     # zero evictions
+        t0 = time.perf_counter()
+        rt.advance(step=1)
+        heal_ms = (time.perf_counter() - t0) * 1e3
+        snap = cl.metrics.snapshot()["counters"]
+        assert sorted(rt.live) == list(range(HOSTS))
+        assert [e.kind for e in rt.events] == []
+        assert snap.get("detector.declared_dead", 0) == 0, snap
+        return {"partition_s": window, "failure_timeout_s": timeout,
+                "heal_to_advance_ms": round(heal_ms, 2),
+                "suspected": snap.get("detector.suspected", 0),
+                "recovered": snap.get("detector.recovered", 0),
+                "evictions": 0}         # asserted above
+    finally:
+        rt.close()
+
+
+def run(report) -> None:
+    rows, summary = bench_reset_replay()
+    report.table(
+        f"TCP reconnect-replay latency ({HOSTS} hosts, full reset "
+        "storm between advances)", rows,
+        note=f"session ledger balanced exactly: "
+             f"{summary['seq_assigned']} SIGs assigned == delivered "
+             f"(0 lost, {summary['dupes_dropped']} dupes dropped) "
+             f"across {summary['resets']} stream resets / "
+             f"{summary['replays']} replays")
+
+    heal = bench_partition_heal()
+    report.table(
+        f"TCP partition heal ({HOSTS} hosts, symmetric partition "
+        "shorter than the failure timeout)", [heal],
+        note="suspect -> recover with zero membership events; only "
+             "partitions outlasting the timeout escalate to eviction")
+
+    out = {"schema_version": SCHEMA_VERSION, "hosts": HOSTS,
+           "transport": "tcp", "reset_replay": rows,
+           "session": summary, "partition_heal": heal}
+    path = os.path.join(report.outdir, "BENCH_tcp.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")

@@ -107,9 +107,25 @@ def run_processes(args, ap):
     chaos = None
     if args.chaos is not None:
         from ..runtime_dist import ChaosConfig
-        chaos = ChaosConfig(seed=args.chaos)
+        chaos = ChaosConfig(seed=args.chaos, p_reset=args.chaos_reset)
+    elif args.chaos_reset > 0:
+        # reset storms without the RPC drop/dup/delay chaos: exercises
+        # the session layer in isolation
+        from ..runtime_dist import ChaosConfig
+        chaos = ChaosConfig(seed=13, p_drop=0.0, p_dup=0.0, p_delay=0.0,
+                            p_reset=args.chaos_reset)
+    link_faults = {}
+    if args.chaos_links is not None:
+        if args.fabric not in ("socket", "tcp"):
+            ap.error("--chaos-links needs --fabric socket|tcp")
+        from ..runtime_dist import parse_link_spec
+        try:
+            for f in parse_link_spec(args.chaos_links):
+                link_faults.setdefault(f["step"], []).append(f)
+        except ValueError as e:
+            ap.error(str(e))
     slot_of = {}
-    if args.fabric == "socket":
+    if args.fabric in ("socket", "tcp"):
         m = max(1, args.host_devices or 1)   # devices per host process
         per_dev_batch = max(1, args.batch // (n * m))
 
@@ -124,7 +140,9 @@ def run_processes(args, ap):
 
         cluster = SocketCluster(hb_interval=args.heartbeat_interval,
                                 failure_timeout=args.failure_timeout,
-                                chaos=chaos)
+                                chaos=chaos,
+                                fabric=("tcp" if args.fabric == "tcp"
+                                        else "unix"))
     else:
         ndev = len(jax.devices())
         if ndev < n:
@@ -183,6 +201,16 @@ def run_processes(args, ap):
                   f"{mk['process_set']} compiled={out['compiled']}")
     metrics = []
     for step in range(start, args.steps):
+        for f in link_faults.get(step, []):
+            # bounded wall-clock window with local auto-heal timers at
+            # every endpoint: the heal fires even while the partition
+            # stalls this very loop
+            rt.cluster.inject_link_fault(
+                f["a"], f["b"], duration=f["dur"], oneway=f["oneway"])
+            print(f"# step {step}: link fault "
+                  f"{f['a']}{'->' if f['oneway'] else '|'}"
+                  f"{f['b'] if f['b'] is not None else '*'} "
+                  f"for {f['dur']}s")
         for kind, wid in events.get(step, []):
             if kind == "join":
                 rt.request_join(step=step)
@@ -301,14 +329,30 @@ def main(argv=None):
                          "shard_map reduce, then the process-level "
                          "schedule). Elastic events churn whole hosts.")
     ap.add_argument("--fabric", default="inproc",
-                    choices=["inproc", "socket"],
+                    choices=["inproc", "socket", "tcp"],
                     help="--processes transport: in-process logical "
-                         "hosts (deterministic) or real OS processes "
-                         "over AF_UNIX sockets (heartbeat failure "
-                         "detection, kill events are SIGKILL)")
+                         "hosts (deterministic), real OS processes "
+                         "over AF_UNIX sockets, or real processes over "
+                         "TCP loopback (host:port registry files; same "
+                         "session layer + failure detection)")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="inject seeded transport faults (RPC drop/dup "
                          "+ bounded env delay/reorder; DESIGN.md §13)")
+    ap.add_argument("--chaos-links", default=None, metavar="SPEC",
+                    help="link-level chaos on the socket fabrics: "
+                         "'A|B@STEP+DUR' (symmetric partition between "
+                         "pid sets, healing after DUR seconds) or "
+                         "'A->B@STEP+DUR' (one-way link kill); "
+                         "';'-separated, '-1'/'coord' = coordinator, "
+                         "'*' = everyone else. A window shorter than "
+                         "--failure-timeout must heal with zero "
+                         "evictions (DESIGN.md §15)")
+    ap.add_argument("--chaos-reset", type=float, default=0.0,
+                    metavar="P",
+                    help="socket fabrics: per-frame probability of a "
+                         "connection reset injected on cmd/env sends "
+                         "(the session layer must reconnect + replay; "
+                         "usable without --chaos)")
     ap.add_argument("--heartbeat-interval", type=float, default=0.5,
                     help="socket fabric: coordinator heartbeat period "
                          "(seconds)")

@@ -86,11 +86,12 @@ def _x_obs(d: Dict) -> Dict[str, Metric]:
 def _x_dist(d: Dict) -> Dict[str, Metric]:
     out = {}
     for row in d.get("rows", []):
-        n = row["n"]
+        # schema v3 rows carry the socket fabric; v2 rows were AF_UNIX
+        pre = f"{row.get('transport', 'unix')}.n{row['n']}"
         for k in ("advance_ms", "join_ms", "evict_ms"):
-            out[f"n{n}.{k}"] = (row[k], "lower", _T_SOCKET)
+            out[f"{pre}.{k}"] = (row[k], "lower", _T_SOCKET)
         for k in ("sig_hops", "trace_sig_depth", "frames_per_advance"):
-            out[f"n{n}.{k}"] = (row[k], "lower", _T_COUNT)
+            out[f"{pre}.{k}"] = (row[k], "lower", _T_COUNT)
     for k in ("sublinear_hop_growth", "signal_hops_within_bound"):
         if k in d:
             out[k] = (1.0 if d[k] else 0.0, "bool", 0.0)
@@ -113,12 +114,32 @@ def _x_chaos(d: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _x_tcp(d: Dict) -> Dict[str, Metric]:
+    out = {}
+    for row in d.get("reset_replay", []):
+        key = f"storm{row['storm']}"
+        out[f"{key}.storm_advance_ms"] = (row["storm_advance_ms"],
+                                          "lower", _T_SOCKET)
+    s = d.get("session", {})
+    if "balance_ok" in s:
+        out["session.balance_ok"] = (1.0 if s["balance_ok"] else 0.0,
+                                     "bool", 0.0)
+    heal = d.get("partition_heal", {})
+    if heal:
+        out["heal.heal_to_advance_ms"] = (heal["heal_to_advance_ms"],
+                                          "lower", _T_SOCKET)
+        out["heal.zero_evictions"] = (
+            1.0 if heal.get("evictions", 1) == 0 else 0.0, "bool", 0.0)
+    return out
+
+
 EXTRACTORS = {
     "BENCH_collective.json": _x_collective,
     "BENCH_pipeline.json": _x_pipeline,
     "BENCH_obs.json": _x_obs,
     "BENCH_dist.json": _x_dist,
     "BENCH_chaos.json": _x_chaos,
+    "BENCH_tcp.json": _x_tcp,
 }
 
 BASELINE_NAME = "BENCH_BASELINE.json"

@@ -17,22 +17,24 @@ loads lazily on attribute access.
 from .agent import HostAgent
 from .exchange import exchange_schedule, run_schedule_rounds
 from .failure import (HostDead, PeerUnreachable, PhiDetector, RpcTimeout,
-                      StepInconsistent, backoff)
+                      StepInconsistent, backoff, orphan_horizon)
 from .plane import COORD, PartitionedNetwork, ShardPhaser, default_owner
 from .transport import (ChaosConfig, Endpoint, FaultyEndpoint,
                         FaultyInprocFabric, InprocEndpoint, InprocFabric,
-                        SocketEndpoint, fabric_dir)
+                        LinkFault, SocketEndpoint, TcpEndpoint,
+                        endpoint_cls, fabric_dir, parse_link_spec)
 
 _LAZY = ("DistCoordinator", "DistEpoch", "HostEvent", "InprocCluster",
          "SocketCluster")
 
 __all__ = ["HostAgent", "exchange_schedule", "run_schedule_rounds",
            "HostDead", "PeerUnreachable", "PhiDetector", "RpcTimeout",
-           "StepInconsistent", "backoff",
+           "StepInconsistent", "backoff", "orphan_horizon",
            "COORD", "PartitionedNetwork", "ShardPhaser", "default_owner",
            "ChaosConfig", "Endpoint", "FaultyEndpoint",
            "FaultyInprocFabric", "InprocEndpoint", "InprocFabric",
-           "SocketEndpoint", "fabric_dir"] + list(_LAZY)
+           "LinkFault", "SocketEndpoint", "TcpEndpoint", "endpoint_cls",
+           "fabric_dir", "parse_link_spec"] + list(_LAZY)
 
 
 def __getattr__(name):   # PEP 562: keep worker imports jax-free

@@ -54,6 +54,11 @@ class HostAgent:
         # this process's metrics shard (one per agent, so in-process
         # logical hosts stay isolated); merged at the coordinator
         self.metrics = MetricsRegistry()
+        if getattr(endpoint, "metrics", None) is None:
+            # worker endpoints are built before the agent exists:
+            # adopt them here so transport.session.* counters land in
+            # this shard and merge cluster-wide through _op_obs
+            endpoint.metrics = self.metrics
         self.data_cfg = cfg.get("data")
         self._dp = None            # lazily-built data plane dict
         self._deferred: List = []  # env frames deferred during a step
@@ -194,11 +199,19 @@ class HostAgent:
         released phase, adopt the new generation (fencing the old
         incarnation's in-flight frames), and drop any held step rounds
         from the dead generation."""
+        gone = set(self.shard.live) - set(c["live"]) - {self.pid}
         self.shard.rebuild(c["live"], c["demoted"], c["phase"], c["gen"])
         self.gen = c["gen"]
         self._red_held = [f for f in self._red_held
                           if f[2][0] == self.gen]
         self._deferred.clear()   # old-gen envs would be fenced anyway
+        # tear down sessions to the evicted peers: unacked ring frames
+        # are reaped (their spans close as blackholed) instead of being
+        # replayed at a corpse forever
+        fp = getattr(self.endpoint, "forget_peer", None)
+        if fp is not None:
+            for pid in gone:
+                fp(pid)
         self.metrics.inc("failure.force_evict")
         return {"gen": self.gen, "phase": c["phase"],
                 "live": sorted(self.shard.live)}
@@ -239,6 +252,36 @@ class HostAgent:
                 "watermarks": self.shard.watermarks.snapshot(),
                 "frames": {"sent": self.endpoint.frames_sent,
                            "received": self.endpoint.frames_received}}
+
+    def _op_link_fault(self, c):
+        """Install a link-fault window (chaos): each endpoint computes
+        its own local wall-clock window from ``dur`` at receipt — no
+        shared clock — and auto-heals when it expires, so a heal never
+        depends on reaching anyone through the partition."""
+        alf = getattr(self.endpoint, "add_link_fault", None)
+        if alf is None:
+            return {"installed": False}
+        # activation grace: the window must not swallow this very
+        # command's reply (or the installing RPC degenerates into a
+        # wait-for-heal), so it starts a beat after the rep escapes
+        now = time.monotonic() + 0.15
+        alf(c["a"], c["b"], now, now + float(c["dur"]),
+            oneway=bool(c.get("oneway", False)))
+        return {"installed": True}
+
+    def _op_link_clear(self, c):
+        clf = getattr(self.endpoint, "clear_link_faults", None)
+        if clf is not None:
+            clf()
+
+    def _op_inject_reset(self, c):
+        """Hard-close cached outbound streams (chaos reset storm)."""
+        ir = getattr(self.endpoint, "inject_reset", None)
+        hit = 0
+        if ir is not None:
+            for dst in c.get("dsts", []):
+                hit += bool(ir(dst))
+        return {"reset": hit}
 
     def _op_flight_flush(self, c):
         """Flush this shard's flight ring to disk (coordinator asks at

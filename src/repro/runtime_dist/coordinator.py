@@ -66,10 +66,11 @@ from ..obs.recorder import flight_path
 from .agent import HostAgent
 from .exchange import run_schedule_rounds
 from .failure import (HostDead, PeerUnreachable, PhiDetector, RpcTimeout,
-                      StepInconsistent, backoff)
+                      StepInconsistent, backoff, orphan_horizon)
 from .plane import COORD, ShardPhaser
 from .transport import (ChaosConfig, FaultyEndpoint, FaultyInprocFabric,
-                        InprocFabric, SocketEndpoint, fabric_dir)
+                        InprocFabric, SocketEndpoint, endpoint_cls,
+                        fabric_dir)
 
 
 @dataclass
@@ -190,11 +191,13 @@ class SocketCluster:
                  hb_interval: float = 0.5,
                  failure_timeout: float = 10.0,
                  chaos: Optional[ChaosConfig] = None,
-                 orphan_timeout: Optional[float] = None):
+                 orphan_timeout: Optional[float] = None,
+                 fabric: str = "unix"):
         from ..obs.metrics import MetricsRegistry
         self.dir = fabric_dir()
         self.metrics = MetricsRegistry()
-        ep = SocketEndpoint(COORD, self.dir, metrics=self.metrics)
+        self.fabric_kind = fabric
+        ep = endpoint_cls(fabric)(COORD, self.dir, metrics=self.metrics)
         self.ep = (FaultyEndpoint(ep, chaos, metrics=self.metrics)
                    if chaos is not None else ep)
         self.procs: Dict[int, subprocess.Popen] = {}
@@ -204,7 +207,7 @@ class SocketCluster:
         self.hb_interval = hb_interval
         self.failure_timeout = failure_timeout
         self.orphan_timeout = (orphan_timeout if orphan_timeout is not None
-                               else max(10.0, 3.0 * failure_timeout))
+                               else orphan_horizon(failure_timeout))
         self._cid = 0
         self._reps: Dict[int, Dict] = {}
         self._pending: Dict[int, Dict] = {}   # cid -> retransmit state
@@ -266,7 +269,8 @@ class SocketCluster:
                                 f"{data.get('devices', 1)}")
         self.procs[pid] = subprocess.Popen(
             [self.python, "-m", "repro.runtime_dist.worker",
-             "--dir", self.dir, "--pid", str(pid)],
+             "--dir", self.dir, "--pid", str(pid),
+             "--fabric", self.fabric_kind],
             env=env, cwd=root)
         self.detector.touch(pid)
 
@@ -300,6 +304,74 @@ class SocketCluster:
                     if e["pid"] == pid]:
             self._pending.pop(cid, None)
         self.metrics.inc("cluster.marked_dead")
+
+    # ------------------------------------------------------------ link chaos
+    def inject_link_fault(self, a, b=None, *, duration: float,
+                          oneway: bool = False) -> None:
+        """Install a link-fault window on every live endpoint.
+
+        ``b=None`` means "everyone else" (a isolates itself). Each
+        endpoint converts ``duration`` into a *local* wall-clock window
+        at receipt and auto-heals when it expires — no shared clock,
+        and a heal never needs connectivity through the partition.
+        Workers are told BEFORE the coordinator installs locally: once
+        our own edge is cut we may not reach workers inside it."""
+        a = sorted(a)
+        if b is None:
+            b = sorted(({COORD} | set(self.procs)) - set(a))
+        else:
+            b = sorted(b)
+        cmd = {"op": "link_fault", "a": a, "b": b,
+               "dur": duration, "oneway": oneway}
+        for pid in sorted(self.procs):
+            if pid in self.dead:
+                continue
+            try:
+                self.call(pid, cmd, timeout=10.0)
+            except (HostDead, RpcTimeout, PeerUnreachable, OSError):
+                pass        # best effort: its local window just stays off
+        alf = getattr(self.ep, "add_link_fault", None)
+        if alf is not None and (COORD in a or COORD in b):
+            now = time.monotonic()
+            alf(a, b, now, now + duration, oneway=oneway)
+        self.metrics.inc("chaos.link_fault_installed")
+
+    def heal_link_faults(self) -> None:
+        """Force-heal every window early: clear locally FIRST (so the
+        broadcast can get through a partition that included us)."""
+        clf = getattr(self.ep, "clear_link_faults", None)
+        if clf is not None:
+            clf()
+        for pid in sorted(self.procs):
+            if pid in self.dead:
+                continue
+            try:
+                self.call(pid, {"op": "link_clear"}, timeout=10.0)
+            except (HostDead, RpcTimeout, PeerUnreachable, OSError):
+                pass
+
+    def inject_reset_storm(self) -> int:
+        """Chaos: hard-close every cached stream everywhere (coordinator
+        outbound + each worker's outbound) — the session layer must
+        reconnect and replay with zero envelope loss."""
+        hit = 0
+        ir = getattr(self.ep, "inject_reset", None)
+        if ir is not None:
+            for pid in sorted(self.procs):
+                hit += bool(ir(pid))
+        dsts = [COORD] + sorted(self.procs)
+        for pid in sorted(self.procs):
+            if pid in self.dead:
+                continue
+            try:
+                r = self.call(pid, {"op": "inject_reset",
+                                    "dsts": [d for d in dsts if d != pid]},
+                              timeout=10.0)
+                hit += int(r.get("reset", 0))
+            except (HostDead, RpcTimeout, PeerUnreachable, OSError):
+                pass
+        self.metrics.inc("chaos.reset_storms")
+        return hit
 
     # ------------------------------------------------------------------ rpc
     def _drain(self, timeout: float) -> bool:
@@ -380,6 +452,60 @@ class SocketCluster:
         r = self._reps.pop(cid)
         assert r.get("ok"), (cid, r)
         return r
+
+    def collect_any(self, cids, timeout: float = 600.0,
+                    watch=None) -> Tuple[int, Dict]:
+        """Await the first available reply among ``cids`` in ARRIVAL
+        order (not posting order), with the same retransmit / death /
+        deadline rules as ``collect``. Returns ``(cid, reply)``.
+
+        Arrival order is load-bearing for the step path: when a
+        partition makes one worker abort its exchange while another
+        blocks on its in-step recv deadline, posting-order collection
+        would pin the coordinator behind the blocked worker and never
+        see the abort it needs to act on."""
+        t0 = time.monotonic()
+        deadline = t0 + timeout
+        cids = list(cids)
+        while True:
+            for cid in cids:
+                if cid in self._reps:
+                    r = self._reps.pop(cid)
+                    assert r.get("ok"), (cid, r)
+                    return cid, r
+            self._drain(0.05)
+            while self._drain(0):
+                pass
+            self.detector.poll()
+            now = time.monotonic()
+            for cid in cids:
+                ent = self._pending.get(cid)
+                if ent is None:
+                    continue
+                pid = ent["pid"]
+                if self._is_dead(pid):
+                    self._pending.pop(cid, None)
+                    raise HostDead(pid)
+                if now >= ent["retry_at"]:
+                    ent["attempts"] += 1
+                    self.metrics.inc("rpc.retries")
+                    try:
+                        self.ep.send(pid, "cmd", (cid, ent["cmd"]))
+                    except (PeerUnreachable, OSError):
+                        self.metrics.inc("rpc.retry_send_failures")
+                    ent["retry_at"] = now + backoff(ent["attempts"],
+                                                    0.25, 2.0,
+                                                    self._retry_rng)
+            for w in (watch or ()):
+                if self._is_dead(w):
+                    for cid in cids:
+                        self._pending.pop(cid, None)
+                    raise HostDead(w)
+            if now >= deadline:
+                for cid in cids:
+                    self._pending.pop(cid, None)
+                raise RpcTimeout(-1, cids[0] if cids else -1,
+                                 now - t0, 0)
 
     def call(self, pid: int, cmd: Dict, timeout: float = 600.0) -> Dict:
         return self.collect(self.post(pid, cmd), timeout=timeout)
@@ -938,8 +1064,20 @@ class DistCoordinator:
                        for pid in pids]
             out = {}
             try:
-                for pid, h in handles:
-                    out[pid] = self.cluster.collect(h, watch=pids)
+                # collect in ARRIVAL order: the first "aborted" reply
+                # triggers the out-of-band unwind immediately, so a
+                # peer blocked on its in-step recv (e.g. behind a link
+                # partition) is released by the sequenced ctl abort
+                # instead of pinning this loop on its 300 s deadline
+                waiting = {h: pid for pid, h in handles}
+                abort_sent = False
+                while waiting:
+                    h, r = self.cluster.collect_any(list(waiting),
+                                                    watch=pids)
+                    out[waiting.pop(h)] = r
+                    if r.get("aborted") and not abort_sent:
+                        abort_sent = True
+                        self._abort_step(step)
             except BaseException:
                 ab = getattr(self.cluster, "abandon", None)
                 if ab is not None:

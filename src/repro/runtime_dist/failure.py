@@ -70,6 +70,23 @@ class StepInconsistent(RuntimeError):
                          f"survivors: {self.applied}")
 
 
+def orphan_horizon(failure_timeout: float) -> float:
+    """How long a worker tolerates coordinator silence before it
+    self-terminates as an orphan.
+
+    Partition-tolerance invariant: this must strictly exceed the
+    coordinator's eviction horizon (``failure_timeout``), or a
+    transient network partition shorter than the failure timeout —
+    which the session layer heals with zero envelope loss and the
+    PhiDetector resolves as suspect→recover — would still kill the
+    worker from the *other* side. 3× the failure timeout (floored at
+    10s so aggressive test timeouts don't make orphanhood hair-
+    triggered) means any partition short enough to be survivable is
+    also short enough that neither side acts on it.
+    """
+    return max(10.0, 3.0 * failure_timeout)
+
+
 def backoff(attempt: int, base: float, cap: float, rng=None) -> float:
     """Bounded exponential backoff with optional jitter: attempt 1 waits
     ~``base``, doubling up to ``cap``; jitter spreads retries by up to

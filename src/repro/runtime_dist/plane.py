@@ -91,7 +91,11 @@ class PartitionedNetwork(Network):
             self.endpoint.send(owner, "env", env)
         except (OSError, ConnectionError):
             # crash-stop peer: the frame is gone; count it and close
-            # the span — detection/recovery is the coordinator's job
+            # the span — detection/recovery is the coordinator's job.
+            # (Socket fabrics no longer take this path: their session
+            # layer defers undeliverable envelopes into the resend
+            # ring instead of raising, and frames reaped for good come
+            # back through the endpoint reaper -> _blackhole edge.)
             self.send_failed += 1
             self._blackhole(env)
             return
@@ -150,6 +154,13 @@ class ShardPhaser:
         self.live: Set[int] = set(live)
         self.demoted: Set[int] = set(demoted)
         self.net = PartitionedNetwork(pid, endpoint, owner_of)
+        # session-layer reap edge: an unacked envelope torn out of a
+        # resend ring for good (peer evicted, ring overflow) is
+        # blackholed through the net so its span still closes
+        _sr = getattr(endpoint, "set_reaper", None)
+        if _sr is not None:
+            _sr(lambda payload, tag:
+                self.net._blackhole(payload) if tag == "env" else None)
         # always-on obs layer: phase watermarks (counter bumps via the
         # actor hooks) and the bounded flight ring — both cheap enough
         # to never gate behind ``obs``

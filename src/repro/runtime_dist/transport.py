@@ -24,6 +24,24 @@ Frames are ``(src, tag, payload)``; tags in use: ``"env"`` (a protocol
 reader thread), ``"ctl"`` (out-of-band step control, e.g. abort),
 ``"hello"`` (stream header).
 
+Session layer (DESIGN.md §15): the socket fabrics (AF_UNIX and TCP)
+wrap every stream in a partition-tolerant session so the channel
+abstraction above survives *connection* failure, not just process
+failure. Per ordered (src, dst) channel: ``env`` frames carry monotone
+sequence numbers and sit in a bounded resend ring until a cumulative
+ack (piggybacked on every reverse frame, topped up by standalone
+``ack`` frames) covers them; every frame is CRC-framed so a torn read
+is dropped unparsed (and the stream cut, forcing a replay) instead of
+deserialized; a (re)connect replays everything past the last acked
+seq and the receiver dedupes by seq — exactly-once, in-order envelope
+delivery re-established after any reset or healed partition. Counters:
+``transport.session.{resets,replays,dupes_dropped,crc_drops,...}``.
+
+``TcpEndpoint`` is the same machinery over AF_INET: each endpoint
+binds an ephemeral TCP port and advertises ``host:port`` in a registry
+file (``ep<pid>.addr``) in the fabric dir — the address book stays
+derivable from ``(directory, pid)`` exactly like the AF_UNIX paths.
+
 Chaos layer (DESIGN.md §13): ``ChaosConfig`` + ``FaultyInprocFabric`` /
 ``FaultyEndpoint`` decorate the two fabrics with a *seeded, per-(src,
 dst)* fault policy. Faults are injected only where a recovery mechanism
@@ -39,6 +57,13 @@ exists for them:
   behind the delayed head (FIFO preserved end to end), and only frames
   addressed to a *dead* endpoint are dropped (counted, and their spans
   closed as blackholed through the ``reaper`` hook);
+* link-level faults the RPC layer can't paper over: seeded connection
+  resets (``p_reset``: the cached stream is torn down mid-traffic, the
+  session layer must reconnect + replay) and ``LinkFault`` windows —
+  symmetric partitions and one-way link kills between pid sets for a
+  bounded wall-clock window, enforced at the *sender's* transmit edge
+  (``chaos.link_blocked``), so a heal needs no connectivity to take
+  effect;
 * hard crash: ``SocketCluster.kill_pid`` (SIGKILL, no cleanup) and
   ``InprocCluster.kill_host`` (simulated crash-stop).
 
@@ -48,14 +73,17 @@ it stays attributable next to the span traces.
 from __future__ import annotations
 
 import os
+import pickle
 import queue
 import random
+import struct
 import tempfile
 import threading
 import time
+import zlib
 from collections import defaultdict, deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .failure import PeerUnreachable
 
@@ -63,6 +91,17 @@ Frame = Tuple[int, str, Any]  # (src pid, tag, payload)
 
 # tags a retry + idempotency layer recovers: safe to drop/duplicate
 RPC_TAGS = ("cmd", "rep", "hb")
+
+# tags the session layer sequences, rings, replays and dedupes: the
+# protocol envelopes, whose SIG counting is neither loss- nor
+# duplication-safe, and step control — the ``ctl`` abort is what
+# unwinds a worker blocked in an in-step exchange, so it must survive
+# the very partition that caused the abort (a lost abort leaves the
+# partitioned worker pinned on its in-step recv deadline, and the
+# coordinator's resolve probe pinned behind it). RPC frames keep their
+# own retry+cid-dedupe layer, ``red`` rounds their own step
+# abort/retry, heartbeats are ephemeral.
+SESSION_TAGS = ("env", "ctl")
 
 
 @dataclass(frozen=True)
@@ -78,10 +117,72 @@ class ChaosConfig:
     p_delay: float = 0.2      # env frames: probability of entering limbo
     delay_ticks: int = 3      # inproc: max extra delivery ticks
     max_delay: float = 0.05   # socket: max extra seconds in limbo
+    p_reset: float = 0.0      # socket: per-frame connection reset (the
+    #                           cached stream is hard-closed; the session
+    #                           layer must reconnect and replay). Drawn
+    #                           only when > 0, so existing seeds keep
+    #                           their exact fault sequences.
 
     def rng(self, src: int, dst: int) -> random.Random:
         return random.Random((self.seed * 1_000_003
                               + (src + 7) * 8191 + (dst + 7)) & 0x7FFFFFFF)
+
+
+@dataclass(frozen=True)
+class LinkFault:
+    """One link-level fault window: frames from ``a`` to ``b`` (and,
+    unless ``oneway``, from ``b`` to ``a``) are blocked while
+    ``t1 <= now < t2`` (``time.monotonic()``, evaluated locally at the
+    enforcing endpoint — windows need no shared clock, each endpoint
+    computes its own from the install moment)."""
+
+    a: frozenset
+    b: frozenset
+    t1: float
+    t2: float
+    oneway: bool = False
+
+    def blocks(self, src: int, dst: int, now: float) -> bool:
+        if not (self.t1 <= now < self.t2):
+            return False
+        if src in self.a and dst in self.b:
+            return True
+        return (not self.oneway) and src in self.b and dst in self.a
+
+
+def parse_link_spec(spec: str) -> List[Dict]:
+    """``"1|0,2@3+1.5;0->2@5+0.5"`` -> fault dicts for the launcher.
+
+    Each item is ``A|B@STEP+DUR`` (symmetric partition between pid sets
+    A and B) or ``A->B@STEP+DUR`` (one-way link kill: A's frames to B
+    are dropped, B's to A still flow). Pid sets are comma-separated
+    ints (``-1``/``coord`` is the coordinator) or ``*`` = everyone
+    else. The window activates at the STEP boundary and heals DUR
+    seconds later — heal is a local timer at every endpoint, so it
+    fires even while the partition blocks the control plane."""
+
+    def pids(s: str):
+        s = s.strip()
+        if s == "*":
+            return None                      # "everyone else"
+        return sorted({-1 if x.strip() in ("coord", "-1") else int(x)
+                       for x in s.split(",")})
+
+    faults = []
+    for item in spec.split(";"):
+        item = item.strip()
+        if not item:
+            continue
+        body, at = item.rsplit("@", 1)
+        step_s, dur_s = at.split("+", 1)
+        oneway = "->" in body
+        a, b = body.split("->" if oneway else "|", 1)
+        if pids(a) is None:
+            raise ValueError(f"link fault {item!r}: '*' only on the "
+                             "right side")
+        faults.append({"a": pids(a), "b": pids(b), "step": int(step_s),
+                       "dur": float(dur_s), "oneway": oneway})
+    return faults
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +341,7 @@ class FaultyInprocFabric(InprocFabric):
 
 
 # ---------------------------------------------------------------------------
-# Socket fabric (real processes)
+# Socket fabrics (real processes): AF_UNIX and TCP over one session layer
 # ---------------------------------------------------------------------------
 def fabric_dir() -> str:
     return tempfile.mkdtemp(prefix="phaser-fabric-")
@@ -250,8 +351,70 @@ def _sock_path(directory: str, pid: int) -> str:
     return os.path.join(directory, f"ep{pid}.sock")
 
 
+def _addr_path(directory: str, pid: int) -> str:
+    return os.path.join(directory, f"ep{pid}.addr")
+
+
+def _pack_frame(seq: int, ack: int, tag: str, payload: Any) -> bytes:
+    """Wire format: 4-byte big-endian CRC32 over the pickled
+    ``(seq, ack, tag, payload)`` body. ``seq`` is 0 for unsequenced
+    tags; ``ack`` is the sender's highest contiguously-delivered seq on
+    the reverse channel (cumulative ack, piggybacked on every frame)."""
+    blob = pickle.dumps((seq, ack, tag, payload),
+                        protocol=pickle.HIGHEST_PROTOCOL)
+    return struct.pack(">I", zlib.crc32(blob)) + blob
+
+
+def _unpack_frame(buf: bytes):
+    """``(seq, ack, tag, payload)``, or None for a torn/corrupt frame —
+    the body is never unpickled unless the CRC matches, so garbage on
+    the wire cannot reach the deserializer."""
+    if len(buf) < 5:
+        return None
+    (want,) = struct.unpack(">I", buf[:4])
+    blob = buf[4:]
+    if zlib.crc32(blob) != want:
+        return None
+    try:
+        return pickle.loads(blob)
+    except Exception:
+        return None
+
+
+class _SendSession:
+    """Sender half of one ordered (self, dst) channel: monotone seq
+    assignment and the bounded resend ring of unacked frames."""
+
+    __slots__ = ("lock", "seq", "acked", "ring", "touched", "wired")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.seq = 0            # last assigned
+        self.acked = 0          # highest cumulative ack from the peer
+        self.ring: deque = deque()   # (seq, tag, payload), unacked
+        self.touched = time.monotonic()  # last send or ack progress
+        self.wired = 0          # highest seq ever attempted on a wire
+        #                         (distinguishes a true retransmission
+        #                          from a first send riding a replay)
+
+    def unacked(self) -> int:
+        with self.lock:
+            return sum(1 for f in self.ring if f[0] > self.acked)
+
+
+class _RecvSession:
+    """Receiver half: dedupe-by-seq watermark + standalone-ack pacing."""
+
+    __slots__ = ("delivered", "since_ack")
+
+    def __init__(self):
+        self.delivered = 0      # highest contiguously delivered seq
+        self.since_ack = 0      # sequenced receipts since the last ack
+
+
 class SocketEndpoint(Endpoint):
-    """AF_UNIX endpoint: own listener + lazy outbound connections.
+    """AF_UNIX endpoint: own listener + lazy outbound connections, with
+    the partition-tolerant session layer (DESIGN.md §15) underneath.
 
     ``hb_echo=True`` (worker side) makes the *reader thread* echo
     heartbeat frames back to their source — liveness is then a
@@ -260,18 +423,32 @@ class SocketEndpoint(Endpoint):
     death), while a SIGKILL stops the reader and therefore the echoes.
     ``last_rx`` timestamps every arrival, so an orphaned worker can
     notice its coordinator went silent.
+
+    Session layer: ``env`` frames get per-(src, dst) monotone seqs and
+    sit in a bounded resend ring until the peer's cumulative ack covers
+    them; any (re)connect replays the unacked suffix and the receiver
+    dedupes by seq, so a connection reset or healed partition never
+    loses or duplicates an envelope. A blocked/undeliverable ``env`` is
+    *deferred* (kept in the ring, flushed by a background thread once
+    the peer is reachable) rather than surfaced — the layers above keep
+    their reliable-FIFO channel assumption. Frames reaped for good
+    (eviction via ``forget_peer``, ring overflow) go through ``reaper``
+    so their spans still close.
     """
 
     def __init__(self, pid: int, directory: str, *, metrics=None,
-                 hb_echo: bool = False):
+                 hb_echo: bool = False, ack_every: int = 64,
+                 ring_cap: int = 4096):
         super().__init__(pid)
-        from multiprocessing.connection import Listener
         self.directory = directory
-        self.path = _sock_path(directory, pid)
         self.metrics = metrics
         self.hb_echo = hb_echo
         self.last_rx = time.monotonic()
-        self._listener = Listener(self.path, "AF_UNIX")
+        self._ack_every = ack_every
+        self._ring_cap = ring_cap
+        self._probe_after = 1.0   # unacked-and-silent before probing
+        self.reaper: Optional[Callable[[Any, str], Any]] = None
+        self._listener = self._make_listener()
         self._inbox: "queue.Queue[Frame]" = queue.Queue()
         self._out: Dict[int, Any] = {}
         self._ever: set = set()          # dsts we once connected to
@@ -279,14 +456,92 @@ class SocketEndpoint(Endpoint):
         self._down_ttl = 1.0
         self._locks: Dict[int, threading.Lock] = {}
         self._locks_guard = threading.Lock()
+        self._send_s: Dict[int, _SendSession] = {}
+        self._recv_s: Dict[int, _RecvSession] = {}
+        self._rs_guard = threading.Lock()
+        self._links: List[LinkFault] = []
+        self._dirty: set = set()         # dsts with deferred ring frames
+        self._accepted: List[Any] = []   # inbound conns, severed on close
         self._closed = False
+        self._stop = threading.Event()
         self._accept_thread = threading.Thread(target=self._accept_loop,
                                                daemon=True)
         self._accept_thread.start()
+        self._flush_thread = threading.Thread(target=self._flush_loop,
+                                              daemon=True)
+        self._flush_thread.start()
 
-    def _inc(self, name: str) -> None:
+    # -- address family hooks (overridden by TcpEndpoint) -------------------
+    def _make_listener(self):
+        from multiprocessing.connection import Listener
+        self.path = _sock_path(self.directory, self.pid)
+        return Listener(self.path, "AF_UNIX")
+
+    def _dial(self, dst: int):
+        from multiprocessing.connection import Client
+        return Client(_sock_path(self.directory, dst), "AF_UNIX")
+
+    def _inc(self, name: str, n: int = 1) -> None:
         if self.metrics is not None:
-            self.metrics.inc(name)
+            self.metrics.inc(name, n)
+
+    # -- link faults (chaos) -------------------------------------------------
+    def add_link_fault(self, a, b, t1: float, t2: float, *,
+                       oneway: bool = False) -> None:
+        self._links.append(LinkFault(frozenset(a), frozenset(b),
+                                     t1, t2, oneway))
+
+    def clear_link_faults(self) -> None:
+        self._links = []
+
+    def _blocked(self, dst: int) -> bool:
+        if not self._links:
+            return False
+        now = time.monotonic()
+        live = [f for f in self._links if now < f.t2]
+        if len(live) != len(self._links):
+            self._links = live          # expired windows fall away
+        return any(f.blocks(self.pid, dst, now) for f in live)
+
+    # -- sessions ------------------------------------------------------------
+    def set_reaper(self, fn: Callable[[Any, str], Any]) -> None:
+        self.reaper = fn
+
+    def _send_session(self, dst: int) -> _SendSession:
+        with self._locks_guard:
+            ss = self._send_s.get(dst)
+            if ss is None:
+                ss = self._send_s[dst] = _SendSession()
+            return ss
+
+    def _ack_for(self, src: int) -> int:
+        with self._rs_guard:
+            rs = self._recv_s.get(src)
+            return rs.delivered if rs is not None else 0
+
+    def _note_ack(self, src: int, ack: int) -> None:
+        ss = self._send_s.get(src)
+        if ss is None:
+            return
+        with ss.lock:
+            if ack > ss.acked:
+                ss.acked = ack
+                ss.touched = time.monotonic()
+                while ss.ring and ss.ring[0][0] <= ack:
+                    ss.ring.popleft()
+                if not ss.ring:
+                    self._dirty.discard(src)
+
+    def _reap(self, tag: str, payload: Any) -> None:
+        if self.reaper is not None:
+            try:
+                self.reaper(payload, tag)
+            except Exception:
+                pass            # span salvage is best effort
+
+    def session_stats(self) -> Dict[str, int]:
+        """Introspection for tests/benches: unacked frames per ring."""
+        return {dst: ss.unacked() for dst, ss in self._send_s.items()}
 
     # -- inbound ------------------------------------------------------------
     def _accept_loop(self) -> None:
@@ -295,27 +550,100 @@ class SocketEndpoint(Endpoint):
                 conn = self._listener.accept()
             except (OSError, EOFError):
                 return
+            self._accepted.append(conn)
             threading.Thread(target=self._read_loop, args=(conn,),
                              daemon=True).start()
 
     def _read_loop(self, conn) -> None:
         try:
-            tag, payload = conn.recv()
-            assert tag == "hello", tag
-            src = payload
+            msg = _unpack_frame(conn.recv_bytes())
+            if msg is None or msg[2] != "hello" \
+                    or not isinstance(msg[3], int):
+                # malformed or half-open connect: reject the stream
+                # gracefully instead of dying on an assertion — the
+                # accept loop (and every other reader) keeps running
+                self._inc("transport.bad_hello")
+                return
+            src = msg[3]
             while True:
-                tag, payload = conn.recv()
+                msg = _unpack_frame(conn.recv_bytes())
+                if msg is None:
+                    # torn/corrupt frame: dropped unparsed; cutting the
+                    # stream makes the peer reconnect and replay from
+                    # the last acked seq (dropped-and-resent, never
+                    # deserialized)
+                    self._inc("transport.session.crc_drops")
+                    return
+                seq, ack, tag, payload = msg
                 self.last_rx = time.monotonic()
+                if ack:
+                    self._note_ack(src, ack)
+                if seq:
+                    want_ack = dup = False
+                    with self._rs_guard:
+                        rs = self._recv_s.get(src)
+                        if rs is None:
+                            rs = self._recv_s[src] = _RecvSession()
+                        if seq <= rs.delivered:
+                            dup = True
+                        else:
+                            if seq != rs.delivered + 1:
+                                # only possible after a ring-overflow
+                                # eviction upstream: counted, not hidden
+                                self._inc("transport.session.gaps",
+                                          seq - rs.delivered - 1)
+                            rs.delivered = seq
+                            rs.since_ack += 1
+                            if rs.since_ack >= self._ack_every:
+                                rs.since_ack = 0
+                                want_ack = True
+                            # claim + enqueue under one lock: overlapping
+                            # old/new streams from the same src stay FIFO
+                            self._inbox.put((src, tag, payload))
+                    if dup:
+                        # a replay the previous stream already delivered:
+                        # dropped (exactly-once by seq dedupe), but
+                        # re-acked so the sender's stale ring drains
+                        self._inc("transport.session.dupes_dropped")
+                        want_ack = True
+                    else:
+                        self._inc("transport.session.delivered")
+                    if want_ack:
+                        # reverse traffic may be sparse (one-way env
+                        # fan-out): top up the piggybacked acks so the
+                        # peer's ring drains
+                        try:
+                            self.send(src, "ack", None)
+                        except (PeerUnreachable, OSError, ValueError):
+                            pass
+                    continue
+                if tag == "ack":
+                    continue    # carried its ack field; nothing to queue
                 if tag == "hb" and self.hb_echo:
                     # echo from the reader thread: never blocks on the
                     # main loop, dies with the process on SIGKILL
                     try:
                         self.send(src, "hb", payload)
-                    except (PeerUnreachable, OSError):
-                        pass          # coordinator gone: orphan timer runs
+                    except PeerUnreachable:
+                        # _connect already stamped the negative cache
+                        # (or short-circuited off it): re-stamping here
+                        # would make the cache self-renewing and a
+                        # healed coordinator unreachable forever
+                        pass
+                    except (OSError, ValueError):
+                        # socket-level send failure: stamp the negative
+                        # cache so subsequent heartbeats short-circuit
+                        # instead of paying a full connect backoff
+                        # each (the orphan timer is the recovery path)
+                        self._down[src] = time.monotonic()
                     continue
                 self._inbox.put((src, tag, payload))
         except (EOFError, OSError):
+            pass
+        except (TypeError, ValueError):
+            # Connection isn't thread-safe against concurrent close():
+            # a blocked recv raced by close() (endpoint shutdown) dies
+            # with a TypeError from the nulled handle, not an OSError
             pass
         finally:
             try:
@@ -349,7 +677,6 @@ class SocketEndpoint(Endpoint):
         that it is still booting) gets a short deadline, and a recent
         failure short-circuits entirely — a signal fan-out to a dead
         peer must not stall the survivor once per frame."""
-        from multiprocessing.connection import Client
         down_at = self._down.get(dst)
         if down_at is not None:
             if time.monotonic() - down_at < self._down_ttl:
@@ -358,7 +685,6 @@ class SocketEndpoint(Endpoint):
             self._down.pop(dst, None)
         if dst in self._ever:
             timeout = min(timeout, 1.0)
-        path = _sock_path(self.directory, dst)
         t0 = time.monotonic()
         deadline = t0 + timeout
         attempts = 0
@@ -368,7 +694,7 @@ class SocketEndpoint(Endpoint):
             attempts += 1
             self._inc("transport.connect_attempts")
             try:
-                conn = Client(path, "AF_UNIX")
+                conn = self._dial(dst)
                 break
             except (FileNotFoundError, ConnectionRefusedError, OSError):
                 now = time.monotonic()
@@ -379,57 +705,305 @@ class SocketEndpoint(Endpoint):
                 time.sleep(min(delay * (1 + rng.random()),
                                max(0.0, deadline - now)))
                 delay = min(delay * 1.6, 0.25)
-        conn.send(("hello", self.pid))
+        conn.send_bytes(_pack_frame(0, 0, "hello", self.pid))
         self._ever.add(dst)
         return conn
+
+    def _replay(self, dst: int, conn) -> None:
+        """(Re)transmit every unacked sequenced frame to a fresh stream
+        — reconnect-and-replay from the last acked seq. The receiver's
+        seq dedupe drops whatever the dead stream already delivered.
+        Only frames previously attempted on a wire count as replays;
+        deferred frames getting their first transmission here don't."""
+        ss = self._send_s.get(dst)
+        if ss is None:
+            return
+        with ss.lock:
+            frames = [f for f in ss.ring if f[0] > ss.acked]
+            wired_before = ss.wired
+            if frames:
+                ss.wired = max(ss.wired, frames[-1][0])
+        for seq, tag, payload in frames:
+            conn.send_bytes(_pack_frame(seq, self._ack_for(dst), tag,
+                                        payload))
+        redone = sum(1 for f in frames if f[0] <= wired_before)
+        if redone:
+            self._inc("transport.session.replays", redone)
+
+    def _drop_conn(self, dst: int, conn) -> None:
+        self._out.pop(dst, None)
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def _transmit(self, dst: int, seq: int, tag: str,
+                  payload: Any) -> None:
+        """One framed message out, (re)establishing the stream (and
+        replaying the unacked ring suffix) as needed. Caller holds the
+        dst connection lock."""
+        if self._blocked(dst):
+            # link fault window: emulate the partition by tearing the
+            # cached stream down once and refusing to transmit
+            conn = self._out.pop(dst, None)
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                self._inc("chaos.link_cut")
+            self._inc("chaos.link_blocked")
+            raise PeerUnreachable(dst, 0, 0.0)
+        short = tag in ("hb", "ack")    # periodic/advisory: fail fast
+        conn = self._out.get(dst)
+        if conn is None:
+            # fresh stream: everything unacked (the current sequenced
+            # frame included — it is already in the ring) rides the
+            # replay; only unsequenced frames need a direct send
+            conn = self._connect(dst, timeout=(0.2 if short else 30.0))
+            try:
+                self._replay(dst, conn)
+                if not seq:
+                    conn.send_bytes(_pack_frame(0, self._ack_for(dst),
+                                                tag, payload))
+            except (OSError, ValueError):
+                self._drop_conn(dst, conn)
+                self._inc("transport.send_failures")
+                raise
+            self._out[dst] = conn
+            return
+        if seq:
+            ss = self._send_s.get(dst)
+            if ss is not None:
+                with ss.lock:
+                    ss.wired = max(ss.wired, seq)   # attempt recorded
+        try:
+            conn.send_bytes(_pack_frame(seq, self._ack_for(dst), tag,
+                                        payload))
+        except (OSError, ValueError):
+            # connection reset mid-stream: drop the dead conn, dial
+            # once more and replay from the last acked seq — the
+            # current frame, if sequenced, is already in the ring and
+            # rides the replay
+            self._inc("transport.session.resets")
+            self._drop_conn(dst, conn)
+            conn = self._connect(dst, timeout=(0.2 if short else 1.0))
+            try:
+                self._replay(dst, conn)
+                if not seq:
+                    conn.send_bytes(_pack_frame(0, self._ack_for(dst),
+                                                tag, payload))
+            except (OSError, ValueError):
+                self._drop_conn(dst, conn)
+                self._inc("transport.send_failures")
+                raise
+            self._out[dst] = conn
 
     def send(self, dst: int, tag: str, payload: Any) -> None:
         # per-destination lock: the heartbeat thread and the main loop
         # share outbound connections, and Connection.send is not atomic
         with self._lock_for(dst):
-            conn = self._out.get(dst)
-            if conn is None:
-                # heartbeats are periodic: fail one fast rather than
-                # let a dead peer starve the hb thread's round
-                conn = self._connect(dst, timeout=(0.2 if tag == "hb"
-                                                   else 30.0))
-                self._out[dst] = conn
+            seq = 0
+            if tag in SESSION_TAGS:
+                ss = self._send_session(dst)
+                with ss.lock:
+                    ss.seq += 1
+                    seq = ss.seq
+                    ss.touched = time.monotonic()
+                    ss.ring.append((seq, tag, payload))
+                    while len(ss.ring) > self._ring_cap:
+                        # replay-window bound: the oldest unacked frame
+                        # can no longer be resent — reaped, its span
+                        # closed, the receiver counts the gap
+                        _, t, p = ss.ring.popleft()
+                        self._inc("transport.session.ring_evict")
+                        self._reap(t, p)
+                self._inc("transport.session.seq_assigned")
             try:
-                conn.send((tag, payload))
-            except (OSError, ValueError):
-                # broken pipe (peer died): drop the cached conn so a
-                # retry reconnects, surface the failure to the caller
-                self._out.pop(dst, None)
-                try:
-                    conn.close()
-                except OSError:
-                    pass
-                self._inc("transport.send_failures")
+                self._transmit(dst, seq, tag, payload)
+            except (PeerUnreachable, OSError, ValueError):
+                if seq:
+                    # the frame stays in the resend ring: the flusher
+                    # (or the next successful send) replays it once the
+                    # peer is reachable again — an envelope is never
+                    # lost to a reset or a transient partition
+                    self._inc("transport.session.deferred")
+                    self._dirty.add(dst)
+                    return
                 raise
         self.frames_sent += 1
 
+    def _flush_loop(self) -> None:
+        """Background session maintenance, three duties per tick:
+
+        * flush pending receiver acks (ack_every paces bursts, but a
+          trickle below the threshold must still ack within a tick so
+          peer rings drain);
+        * retry deferred (dirty) channels — a one-way envelope channel
+          with no reverse traffic to ride on must still replay once a
+          partition heals or the peer comes back;
+        * probe channels whose unacked frames went stale: a send into a
+          freshly-reset TCP stream can succeed into the kernel buffer
+          and vanish, with the error surfacing only on the *next* write
+          — the probe is that next write, provoking the reset detection
+          (and thus reconnect-and-replay) even when the application has
+          gone quiet.
+        """
+        while not self._stop.wait(0.2):
+            with self._rs_guard:
+                owed = [(src, rs.delivered)
+                        for src, rs in self._recv_s.items()
+                        if rs.since_ack > 0]
+            for src, seen in owed:
+                try:
+                    self.send(src, "ack", None)
+                except (PeerUnreachable, OSError, ValueError):
+                    continue
+                with self._rs_guard:
+                    rs = self._recv_s.get(src)
+                    if rs is not None and rs.delivered == seen:
+                        rs.since_ack = 0
+            now = time.monotonic()
+            for dst, ss in list(self._send_s.items()):
+                stale = (ss.unacked() > 0
+                         and now - ss.touched > self._probe_after)
+                if not (stale or dst in self._dirty):
+                    continue
+                lk = self._lock_for(dst)
+                if not lk.acquire(blocking=False):
+                    continue
+                try:
+                    self._transmit(dst, 0, "ack", None)
+                    self._dirty.discard(dst)
+                    self._inc("transport.session.flushes")
+                except (PeerUnreachable, OSError, ValueError):
+                    pass        # still unreachable: retry next tick
+                finally:
+                    lk.release()
+
+    # -- chaos hooks ---------------------------------------------------------
+    def inject_reset(self, dst: int) -> bool:
+        """Hard-close the cached outbound stream *without* forgetting it:
+        the peer sees EOF, and our next send hits the dead conn —
+        exercising the reset-detect + reconnect-and-replay path."""
+        with self._lock_for(dst):
+            conn = self._out.get(dst)
+            if conn is None:
+                return False
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._inc("chaos.reset_inject")
+        return True
+
+    def _send_corrupt(self, dst: int) -> None:
+        """Chaos/test hook: emit a deliberately torn frame (CRC cannot
+        match) on the cached stream — the receiver must drop it unparsed
+        and cut the stream."""
+        with self._lock_for(dst):
+            conn = self._out.get(dst)
+            if conn is None:
+                conn = self._connect(dst)
+                self._out[dst] = conn
+            conn.send_bytes(b"\x00\x00\x00\x00not-a-frame")
+
+    # -- lifecycle -----------------------------------------------------------
     def forget_peer(self, dst: int) -> None:
-        """Drop the cached outbound connection (evicted process)."""
+        """Drop the cached outbound connection AND the session state for
+        an evicted process: unacked ring frames are reaped (spans close
+        as blackholed), the recv watermark resets so a future
+        incarnation of the pid space starts a fresh session."""
         with self._lock_for(dst):
             conn = self._out.pop(dst, None)
+            ss = self._send_s.pop(dst, None)
+        self._dirty.discard(dst)
+        with self._rs_guard:
+            self._recv_s.pop(dst, None)
+        if ss is not None:
+            with ss.lock:
+                frames = [f for f in ss.ring if f[0] > ss.acked]
+                ss.ring.clear()
+            for _, tag, payload in frames:
+                self._inc("transport.session.reaped")
+                self._reap(tag, payload)
         if conn is not None:
             try:
                 conn.close()
             except OSError:
                 pass
+        self._down.pop(dst, None)
+        self._ever.discard(dst)
 
     def close(self) -> None:
         self._closed = True
+        self._stop.set()
         try:
             self._listener.close()
         except OSError:
             pass
+        # sever inbound streams too: peers of a closed endpoint must see
+        # the death (broken pipe) instead of feeding a zombie reader
+        for conn in self._accepted:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._accepted = []
         for dst in list(self._out):
-            self.forget_peer(dst)
+            with self._lock_for(dst):
+                conn = self._out.pop(dst, None)
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
         try:
             os.unlink(self.path)
         except OSError:
             pass
+
+
+class TcpEndpoint(SocketEndpoint):
+    """The socket endpoint over TCP (AF_INET loopback/host networking):
+    each endpoint binds an ephemeral port and advertises ``host:port``
+    in a registry file in the fabric dir, so the address book is still
+    derivable from ``(directory, pid)`` alone — arrivals need no
+    address gossip, exactly like the AF_UNIX path scheme. Everything
+    else (session layer, backoff, negative cache, hb echo, link
+    faults) is shared."""
+
+    host = "127.0.0.1"
+
+    def _make_listener(self):
+        from multiprocessing.connection import Listener
+        lst = Listener((self.host, 0), "AF_INET")
+        host, port = lst.address
+        self.path = _addr_path(self.directory, self.pid)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(f"{host}:{port}\n")
+        os.replace(tmp, self.path)      # atomic: readers never see torn
+        return lst
+
+    def _dial(self, dst: int):
+        from multiprocessing.connection import Client
+        # FileNotFoundError (peer still booting, registry entry not
+        # written yet) rides the same backoff loop as a refused connect
+        with open(_addr_path(self.directory, dst)) as f:
+            host, port = f.read().strip().rsplit(":", 1)
+        return Client((host, int(port)), "AF_INET")
+
+
+ENDPOINT_KINDS = {"unix": SocketEndpoint, "tcp": TcpEndpoint}
+
+
+def endpoint_cls(kind: str):
+    try:
+        return ENDPOINT_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown socket fabric {kind!r} "
+                         f"(want one of {sorted(ENDPOINT_KINDS)})")
 
 
 class FaultyEndpoint(Endpoint):
@@ -474,6 +1048,30 @@ class FaultyEndpoint(Endpoint):
         if fp is not None:
             fp(dst)
 
+    def set_reaper(self, fn) -> None:
+        sr = getattr(self.inner, "set_reaper", None)
+        if sr is not None:
+            sr(fn)
+
+    def add_link_fault(self, a, b, t1: float, t2: float, *,
+                       oneway: bool = False) -> None:
+        alf = getattr(self.inner, "add_link_fault", None)
+        if alf is not None:
+            alf(a, b, t1, t2, oneway=oneway)
+
+    def clear_link_faults(self) -> None:
+        clf = getattr(self.inner, "clear_link_faults", None)
+        if clf is not None:
+            clf()
+
+    def inject_reset(self, dst: int) -> bool:
+        ir = getattr(self.inner, "inject_reset", None)
+        return bool(ir(dst)) if ir is not None else False
+
+    def session_stats(self):
+        st = getattr(self.inner, "session_stats", None)
+        return st() if st is not None else {}
+
     def close(self) -> None:
         self.inner.close()
 
@@ -487,6 +1085,12 @@ class FaultyEndpoint(Endpoint):
             if rng.random() < self.chaos.p_dup:
                 self._inc(f"chaos.dup_{tag}")
                 self.inner.send(dst, tag, payload)
+        if self.chaos.p_reset > 0 and tag in ("cmd", "env"):
+            # guard keeps the rng stream byte-identical for configs
+            # that never asked for resets (seed compatibility)
+            rng = self._rng(self.pid, dst)
+            if rng.random() < self.chaos.p_reset:
+                self.inject_reset(dst)
         self.inner.send(dst, tag, payload)
         self.frames_sent += 1
 

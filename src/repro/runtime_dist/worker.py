@@ -36,7 +36,7 @@ import time
 from collections import OrderedDict, deque
 
 from .agent import HostAgent
-from .transport import SocketEndpoint
+from .transport import endpoint_cls
 
 _DEDUPE_CAP = 512       # replay window of cached (cid -> reply) entries
 
@@ -69,12 +69,26 @@ def _flush_flight(agent, directory: str, pid: int, reason: str) -> None:
         pass                    # best effort: never mask the exit path
 
 
+def _send_rep(ep, src: int, cid: int, reply: dict) -> None:
+    """A lost reply must not kill the worker: the RPC layer is
+    at-least-once, so the coordinator retransmits the command, the cid
+    dedupe replays the cached reply, and a transient partition (link
+    fault, coordinator restart in flight) heals instead of escalating
+    a heal-able outage into a worker crash."""
+    from .failure import PeerUnreachable
+    try:
+        ep.send(src, "rep", (cid, reply))
+    except (PeerUnreachable, OSError, ValueError):
+        pass
+
+
 def serve(pid: int, directory: str,
-          orphan_timeout: float | None = None) -> int:
+          orphan_timeout: float | None = None,
+          fabric: str = "unix") -> int:
     if orphan_timeout is None:
         orphan_timeout = float(os.environ.get("PHASER_ORPHAN_TIMEOUT",
                                               "30"))
-    ep = SocketEndpoint(pid, directory, hb_echo=True)
+    ep = endpoint_cls(fabric)(pid, directory, hb_echo=True)
     agent = None
     pending = []            # env frames that beat the init command
     pending_red = []        # red frames that beat the init command
@@ -110,7 +124,7 @@ def serve(pid: int, directory: str,
                 if cid in done:
                     # duplicated or retried command: replay the cached
                     # reply without re-executing (idempotency)
-                    ep.send(src, "rep", (cid, done[cid]))
+                    _send_rep(ep, src, cid, done[cid])
                     continue
                 if cmd["op"] == "init":
                     agent = HostAgent(pid, ep, cmd["cfg"])
@@ -136,7 +150,7 @@ def serve(pid: int, directory: str,
                 done[cid] = reply
                 while len(done) > _DEDUPE_CAP:
                     done.popitem(last=False)
-                ep.send(src, "rep", (cid, reply))
+                _send_rep(ep, src, cid, reply)
             else:
                 raise AssertionError(f"worker {pid}: bad tag {tag!r}")
     except Exception:
@@ -153,8 +167,10 @@ def main(argv=None) -> int:
     ap.add_argument("--dir", required=True)
     ap.add_argument("--pid", type=int, required=True)
     ap.add_argument("--orphan-timeout", type=float, default=None)
+    ap.add_argument("--fabric", default="unix", choices=["unix", "tcp"])
     args = ap.parse_args(argv)
-    return serve(args.pid, args.dir, orphan_timeout=args.orphan_timeout)
+    return serve(args.pid, args.dir, orphan_timeout=args.orphan_timeout,
+                 fabric=args.fabric)
 
 
 if __name__ == "__main__":

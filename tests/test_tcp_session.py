@@ -1,0 +1,524 @@
+"""TCP transport + partition-tolerant session layer (DESIGN.md §15).
+
+Tier-1 drives the two socket endpoints (AF_UNIX and TCP) directly:
+exactly-once in-order envelope delivery across injected connection
+resets (seq/ack/replay + receiver dedupe), CRC-framed torn reads
+dropped unparsed, malformed hellos rejected without killing the
+acceptor, link-fault windows (symmetric partition, one-way kill) with
+deferred-send + heal-time flush, the bounded resend ring's reap path,
+and a *paced* determinism property: the same scripted reset schedule
+produces identical delivery orders AND identical session counters
+across runs (pacing — ack_every=1 plus wait-until-acked between
+injections — removes the wall-clock races that make raw TCP timing
+nondeterministic, so the counters become a pure function of the
+schedule).
+
+The slow tier crosses real process boundaries over TCP: a chaos
+seed-sweep (same seed -> identical fingerprints and identical injected-
+fault counters, with the session ledger balancing exactly), a
+mid-epoch reset storm with in-flight envelopes (zero lost or
+duplicated SIGs), and the partition-heal sweep — a partition shorter
+than the failure timeout resolves suspect->recover with zero
+evictions, one outlasting it escalates to the existing non-cooperative
+eviction of exactly the victim.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime_dist import (LinkFault, SocketEndpoint, TcpEndpoint,
+                                endpoint_cls, fabric_dir, parse_link_spec)
+from repro.runtime_dist.failure import PeerUnreachable, orphan_horizon
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FABRICS = [SocketEndpoint, TcpEndpoint]
+
+
+def _pair(cls, tmp=None, **kw):
+    d = fabric_dir()
+    ma, mb = MetricsRegistry(), MetricsRegistry()
+    a = cls(1, d, metrics=ma, **kw)
+    b = cls(2, d, metrics=mb, **kw)
+    return a, b, ma, mb
+
+
+def _counters(m):
+    return m.snapshot()["counters"]
+
+
+def _drain_acked(ep, dst, deadline=5.0):
+    t0 = time.time()
+    while time.time() - t0 < deadline:
+        if not ep.session_stats().get(dst):
+            return True
+        time.sleep(0.05)
+    return False
+
+
+# ------------------------------------------------------------ link grammar
+def test_parse_link_spec_grammar():
+    faults = parse_link_spec("1|0,2@3+1.5; coord->2@5+0.5")
+    assert faults == [
+        {"a": [1], "b": [0, 2], "step": 3, "dur": 1.5, "oneway": False},
+        {"a": [-1], "b": [2], "step": 5, "dur": 0.5, "oneway": True}]
+    # '*' = everyone else, right side only
+    assert parse_link_spec("1|*@2+1.0")[0]["b"] is None
+    with pytest.raises(ValueError):
+        parse_link_spec("*|1@2+1.0")
+
+
+def test_link_fault_window_and_direction():
+    f = LinkFault(frozenset({1}), frozenset({0, 2}), 10.0, 12.0)
+    assert f.blocks(1, 0, 11.0) and f.blocks(2, 1, 11.0)  # symmetric
+    assert not f.blocks(0, 2, 11.0)          # outside the cut
+    assert not f.blocks(1, 0, 9.9) and not f.blocks(1, 0, 12.1)
+    one = LinkFault(frozenset({1}), frozenset({2}), 0.0, 1.0, oneway=True)
+    assert one.blocks(1, 2, 0.5) and not one.blocks(2, 1, 0.5)
+
+
+def test_orphan_horizon_exceeds_failure_timeout():
+    # the partition-tolerance invariant: a heal-able partition must not
+    # orphan the worker from the other side
+    for ft in (0.5, 3.0, 10.0, 60.0):
+        assert orphan_horizon(ft) > ft
+        assert orphan_horizon(ft) >= 10.0
+
+
+# ------------------------------------------------- session layer, fast tier
+@pytest.mark.parametrize("cls", FABRICS, ids=["unix", "tcp"])
+def test_reset_zero_loss_fifo(cls):
+    """Connection resets mid-stream: every envelope arrives exactly
+    once, in order, and the seq ledger balances across both ends."""
+    a, b, ma, mb = _pair(cls, ack_every=4)
+    try:
+        n = 0
+        for burst in range(3):
+            for _ in range(10):
+                a.send(2, "env", {"i": n})
+                n += 1
+            assert a.inject_reset(2)
+        got = [b.recv(timeout=5.0) for _ in range(n)]
+        assert all(g is not None for g in got)
+        assert [g[2]["i"] for g in got] == list(range(n))
+        assert b.recv(timeout=0.3) is None          # no duplicates leak
+        assert _drain_acked(a, 2)
+        ca, cb = _counters(ma), _counters(mb)
+        assert ca["transport.session.seq_assigned"] == n
+        assert cb["transport.session.delivered"] == n
+        assert ca.get("transport.session.resets", 0) >= 1
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.parametrize("cls", FABRICS, ids=["unix", "tcp"])
+def test_crc_corrupt_frame_dropped_unparsed(cls):
+    """A torn/corrupt frame is dropped by CRC before deserialization
+    (the stream is cut, forcing replay) — never pickled."""
+    a, b, ma, mb = _pair(cls, ack_every=2)
+    try:
+        a.send(2, "env", {"i": 0})
+        assert b.recv(timeout=5.0)[2]["i"] == 0
+        a._send_corrupt(2)
+        a.send(2, "env", {"i": 1})
+        got = b.recv(timeout=5.0)
+        assert got is not None and got[2]["i"] == 1
+        assert _counters(mb)["transport.session.crc_drops"] == 1
+    finally:
+        a.close()
+        b.close()
+
+
+def test_bad_hello_rejected_gracefully():
+    """A malformed or half-open connect must not kill the reader
+    thread (the old code died on a bare assert): it is counted and the
+    endpoint keeps serving real peers."""
+    d = fabric_dir()
+    mb = MetricsRegistry()
+    a = TcpEndpoint(1, d)
+    b = TcpEndpoint(2, d, metrics=mb)
+    try:
+        host, port = open(os.path.join(d, "ep2.addr")).read() \
+            .strip().rsplit(":", 1)
+        for garbage in (b"\x00\x00\x00\x04junk",
+                        b"\x00\x00\x00\x01x"):
+            s = socket.create_connection((host, int(port)))
+            s.sendall(garbage)
+            time.sleep(0.2)
+            s.close()
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            if _counters(mb).get("transport.bad_hello", 0) >= 2:
+                break
+            time.sleep(0.05)
+        assert _counters(mb)["transport.bad_hello"] >= 2
+        a.send(2, "env", "still-serving")
+        assert b.recv(timeout=5.0)[2] == "still-serving"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_hb_echo_failure_stamps_down_cache():
+    """A worker whose coordinator vanished must stamp the negative
+    cache on the failed echo, so later heartbeats short-circuit
+    instead of paying a fresh connect backoff each."""
+    d = fabric_dir()
+    coord = TcpEndpoint(-1, d)
+    w = TcpEndpoint(1, d, hb_echo=True)
+    try:
+        coord.send(1, "hb", (1, time.monotonic()))
+        assert coord.recv(timeout=5.0)[1] == "hb"     # echo arrived
+        coord.close()                                  # coordinator dies
+        # drive more echo attempts at the corpse; the first failure
+        # must stamp the cache (directly or via the connect path)
+        deadline = time.time() + 5.0
+        while time.time() < deadline and -1 not in w._down:
+            try:
+                w.send(-1, "hb", (0, 0.0))
+            except (PeerUnreachable, OSError, ValueError):
+                pass
+            time.sleep(0.05)
+        assert -1 in w._down
+        # and the short-circuit is cheap: no multi-second backoff
+        t0 = time.monotonic()
+        with pytest.raises(PeerUnreachable):
+            w.send(-1, "hb", (0, 0.0))
+        assert time.monotonic() - t0 < 0.5
+    finally:
+        w.close()
+
+
+@pytest.mark.parametrize("cls", FABRICS, ids=["unix", "tcp"])
+def test_partition_defer_and_heal_flush(cls):
+    """An envelope sent into a symmetric partition is deferred (never
+    raised, never lost) and the flusher replays it after the window
+    expires — with no application traffic to ride on."""
+    a, b, ma, _ = _pair(cls, ack_every=2)
+    try:
+        a.send(2, "env", "before")
+        assert b.recv(timeout=5.0)[2] == "before"
+        now = time.monotonic()
+        a.add_link_fault({1}, {2}, now, now + 0.8)
+        a.send(2, "env", "during")              # must not raise
+        assert b.recv(timeout=0.4) is None       # window holds
+        got = b.recv(timeout=5.0)                # heal -> flusher replay
+        assert got is not None and got[2] == "during"
+        ca = _counters(ma)
+        assert ca.get("transport.session.deferred", 0) >= 1
+        assert ca.get("chaos.link_blocked", 0) >= 1
+    finally:
+        a.close()
+        b.close()
+
+
+def test_one_way_link_kill_asymmetric_reachability():
+    a, b, _, _ = _pair(TcpEndpoint, ack_every=2)
+    try:
+        now = time.monotonic()
+        a.add_link_fault({1}, {2}, now, now + 0.8, oneway=True)
+        a.send(2, "env", "fwd")                  # deferred: a->b dead
+        b.send(1, "env", "rev")                  # b->a still flows
+        assert a.recv(timeout=5.0)[2] == "rev"
+        assert b.recv(timeout=0.3) is None
+        assert b.recv(timeout=5.0)[2] == "fwd"   # heal flush
+    finally:
+        a.close()
+        b.close()
+
+
+def test_ring_bound_evicts_oldest_and_reaps():
+    """The resend ring is bounded: overflow evicts the oldest unacked
+    frame through the reaper (its span closes) instead of growing
+    without bound against an unreachable peer."""
+    d = fabric_dir()
+    ma = MetricsRegistry()
+    a = TcpEndpoint(1, d, metrics=ma, ring_cap=4)
+    reaped = []
+    a.set_reaper(lambda payload, tag: reaped.append((tag, payload)))
+    try:
+        now = time.monotonic()
+        a.add_link_fault({1}, {2}, now, now + 30.0)
+        for i in range(10):
+            a.send(2, "env", {"i": i})
+        ca = _counters(ma)
+        assert ca["transport.session.ring_evict"] == 6
+        assert [p["i"] for _, p in reaped] == [0, 1, 2, 3, 4, 5]
+        assert a.session_stats()[2] == 4
+    finally:
+        a.close()
+
+
+def test_forget_peer_reaps_unacked_and_resets_session():
+    a, b, ma, _ = _pair(TcpEndpoint, ack_every=64)
+    reaped = []
+    a.set_reaper(lambda payload, tag: reaped.append(payload))
+    try:
+        now = time.monotonic()
+        a.add_link_fault({1}, {2}, now, now + 30.0)
+        for i in range(3):
+            a.send(2, "env", {"i": i})
+        a.forget_peer(2)                 # eviction: reap, don't replay
+        assert len(reaped) == 3
+        assert _counters(ma)["transport.session.reaped"] == 3
+        assert a.session_stats().get(2) is None
+        a.clear_link_faults()
+        a.send(2, "env", {"i": 99})      # fresh session restarts at 1
+        assert b.recv(timeout=5.0)[2]["i"] == 99
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.parametrize("cls", FABRICS, ids=["unix", "tcp"])
+def test_session_counters_deterministic_under_paced_resets(cls):
+    """Property: with pacing (ack_every=1, wait-until-fully-acked
+    before each injected reset) the session counters are a pure
+    function of the scripted schedule — two runs agree exactly."""
+
+    def run():
+        a, b, ma, mb = _pair(cls, ack_every=1)
+        try:
+            order = []
+            n = 0
+            for burst in (4, 3, 5):
+                for _ in range(burst):
+                    a.send(2, "env", n)
+                    n += 1
+                for _ in range(burst):
+                    order.append(b.recv(timeout=5.0)[2])
+                assert _drain_acked(a, 2)
+                a.inject_reset(2)
+            keys = ("transport.session.seq_assigned",
+                    "transport.session.resets",
+                    "transport.session.replays",
+                    "chaos.reset_inject")
+            ca, cb = _counters(ma), _counters(mb)
+            sig = ({k: ca.get(k, 0) for k in keys},
+                   {"delivered":
+                    cb.get("transport.session.delivered", 0),
+                    "dupes": cb.get("transport.session.dupes_dropped", 0)},
+                   order)
+            return sig
+        finally:
+            a.close()
+            b.close()
+
+    one, two = run(), run()
+    assert one == two
+    assert one[2] == list(range(12))        # exactly-once, in-order
+    # fully-acked before each reset: the only replayed frame per reset
+    # is the one whose send detected the dead stream (it sits in the
+    # ring and rides its own reconnect), and none of them double-deliver
+    # 3 injections, but only the first two are *detected*: detection is
+    # the next send hitting the dead stream, and nothing follows the
+    # final burst's injection before the endpoints close
+    assert one[0]["chaos.reset_inject"] == 3
+    assert one[0]["transport.session.resets"] == 2
+    assert one[0]["transport.session.replays"] == 2
+    assert one[1]["dupes"] == 0
+
+
+# ------------------------------------------------------- slow: real processes
+def _run_snippet(code, timeout=600):
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={**os.environ, "PYTHONPATH":
+                              os.path.join(REPO, "src")},
+                         cwd=REPO, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_tcp_cluster_chaos_seed_sweep_deterministic():
+    """Seed-sweep property over the TCP fabric: the same chaos seed
+    produces identical epoch fingerprints AND an identical session
+    ledger (same total seqs assigned, every one delivered exactly
+    once, zero reaps) across two full cluster runs, with faults
+    demonstrably injected in both.
+
+    The ledger totals are schedule-driven, so they are exact across
+    runs. The drop/dup/reset draw COUNTS are not compared here: those
+    draws ride heartbeat cadence and RPC retransmits, which are
+    functions of wall clock, not of the seed (exact counter
+    determinism under resets is covered by the paced endpoint-level
+    test above). The balance is polled to quiescence first — a reset
+    can park a trailing envelope in the resend ring until the 1 s
+    stale-unacked probe resurfaces it."""
+    code = """
+import os, time
+os.chdir({root!r})
+from repro.runtime_dist import ChaosConfig, DistCoordinator, SocketCluster
+
+def run(seed):
+    chaos = ChaosConfig(seed=seed, p_drop=0.10, p_dup=0.05, p_delay=0.20,
+                        max_delay=0.02, p_reset=0.05)
+    cl = SocketCluster(control_only=True, hb_interval=0.1,
+                       failure_timeout=5.0, chaos=chaos, fabric="tcp")
+    rt = DistCoordinator(cl, 3, seed=0)
+    for s in range(4):
+        rt.advance(step=s)
+    fps = [e.fingerprint for e in rt.epochs]
+    inj = {{k: v for k, v in cl.fault_counters().items()
+           if k.startswith(("drop_", "dup_", "reset_inject"))}}
+    # session ledger: every assigned seq delivered exactly once,
+    # summed across the coordinator and every worker shard
+    deadline = time.monotonic() + 10.0
+    while True:
+        tot = dict(cl.metrics.snapshot()["counters"])
+        for pid in sorted(cl.procs):
+            m = cl.call(pid, {{"op": "obs"}})["metrics"]["counters"]
+            for k, v in m.items():
+                tot[k] = tot.get(k, 0) + v
+        assigned = tot.get("transport.session.seq_assigned", 0)
+        delivered = tot.get("transport.session.delivered", 0)
+        if assigned == delivered or time.monotonic() > deadline:
+            break
+        time.sleep(0.25)
+    assert assigned > 0
+    assert assigned == delivered, (assigned, delivered)
+    assert tot.get("transport.session.reaped", 0) == 0
+    rt.close()
+    return fps, (assigned, delivered), inj
+
+for seed in (3, 11):
+    one, two = run(seed), run(seed)
+    assert one[0] == two[0], (seed, one[0], two[0])
+    assert one[1] == two[1], (seed, one[1], two[1])
+    assert sum(one[2].values()) > 0, (seed, one[2])
+    assert sum(two[2].values()) > 0, (seed, two[2])
+print("OK")
+""".format(root=REPO)
+    assert "OK" in _run_snippet(code)
+
+
+@pytest.mark.slow
+def test_tcp_reset_storm_mid_epoch_zero_loss():
+    """Reset storms between advances, with in-flight envelopes: the
+    cluster converges to fingerprint-agreed epochs and the session
+    replay/dedupe ledger balances exactly — zero lost or duplicated
+    SIGs."""
+    code = """
+import os
+os.chdir({root!r})
+from repro.runtime_dist import DistCoordinator, SocketCluster
+
+cl = SocketCluster(control_only=True, hb_interval=0.1,
+                   failure_timeout=5.0, fabric="tcp")
+rt = DistCoordinator(cl, 3, seed=0)
+for s in range(5):
+    rt.advance(step=s)
+    cl.inject_reset_storm()
+rt.request_join(step=5)
+rt.advance(step=5)
+assert rt.epoch.live == (0, 1, 2, 3)
+
+tot = dict(cl.metrics.snapshot()["counters"])
+for pid in sorted(cl.procs):
+    m = cl.call(pid, {{"op": "obs"}})["metrics"]["counters"]
+    for k, v in m.items():
+        tot[k] = tot.get(k, 0) + v
+assigned = tot.get("transport.session.seq_assigned", 0)
+delivered = tot.get("transport.session.delivered", 0)
+assert assigned > 0 and assigned == delivered, (assigned, delivered)
+assert tot.get("transport.session.reaped", 0) == 0
+assert tot.get("chaos.reset_storms", 0) == 5
+assert len({{e.fingerprint for e in rt.epochs}}) == len(rt.epochs)
+rt.close()
+print("OK")
+""".format(root=REPO)
+    assert "OK" in _run_snippet(code)
+
+
+@pytest.mark.slow
+def test_partition_heal_sweep():
+    """Graceful degradation either side of the failure timeout:
+
+    * a symmetric partition SHORTER than the timeout resolves as
+      suspect -> recover (ack during suspicion) with ZERO evictions,
+      and training control keeps advancing afterwards;
+    * a partition OUTLASTING the timeout escalates to the existing
+      non-cooperative eviction of exactly the partitioned victim."""
+    code = """
+import os, time
+os.chdir({root!r})
+from repro.runtime_dist import DistCoordinator, SocketCluster
+
+# -- heal-able: 1.2s window, 4s timeout -> suspect, recover, no evict
+cl = SocketCluster(control_only=True, hb_interval=0.2,
+                   failure_timeout=4.0, fabric="tcp")
+rt = DistCoordinator(cl, 3, seed=0)
+rt.advance(step=0)
+cl.inject_link_fault([1], None, duration=1.2)
+for _ in range(22):                  # poll through fault + heal
+    time.sleep(0.1)
+    assert cl.poll_failures() == []
+rt.advance(step=1)
+rt.advance(step=2)
+snap = cl.metrics.snapshot()["counters"]
+assert sorted(rt.live) == [0, 1, 2]
+assert [e.kind for e in rt.events] == []
+assert snap.get("detector.declared_dead", 0) == 0, snap
+assert snap.get("detector.recovered", 0) >= 1, snap
+rt.close()
+
+# -- fatal: window far past the timeout -> exactly the victim evicted
+cl = SocketCluster(control_only=True, hb_interval=0.1,
+                   failure_timeout=1.5, fabric="tcp")
+rt = DistCoordinator(cl, 3, seed=0)
+rt.advance(step=0)
+cl.inject_link_fault([2], None, duration=30.0)
+deaths = []
+t0 = time.monotonic()
+while not deaths and time.monotonic() - t0 < 20.0:
+    time.sleep(0.1)
+    deaths = cl.poll_failures()
+assert deaths == [2], deaths
+for s in range(1, 4):
+    rt.advance(step=s)               # auto-recovers, keeps advancing
+assert sorted(rt.live) == [0, 1]
+assert "dead" in [e.kind for e in rt.events]
+assert len({{e.fingerprint for e in rt.epochs}}) == len(rt.epochs)
+rt.close()
+print("OK")
+""".format(root=REPO)
+    assert "OK" in _run_snippet(code)
+
+
+@pytest.mark.slow
+def test_train_cli_tcp_partition_heal_zero_evictions():
+    """End-to-end over the train CLI: a 3-process TCP-fabric control-
+    plane run with a mid-run healing partition finishes with zero
+    eviction events."""
+    code = """
+import os, time
+os.chdir({root!r})
+from repro.runtime_dist import DistCoordinator, SocketCluster
+from repro.runtime_dist import parse_link_spec
+
+faults = parse_link_spec("1|*@1+1.0")
+cl = SocketCluster(control_only=True, hb_interval=0.2,
+                   failure_timeout=6.0, fabric="tcp")
+rt = DistCoordinator(cl, 3, seed=0)
+for s in range(3):
+    for f in faults:
+        if f["step"] == s:
+            cl.inject_link_fault(f["a"], f["b"], duration=f["dur"],
+                                 oneway=f["oneway"])
+    rt.advance(step=s)
+    time.sleep(0.3)
+    assert cl.poll_failures() == []
+assert [e.kind for e in rt.events] == []
+assert sorted(rt.live) == [0, 1, 2]
+rt.close()
+print("OK")
+""".format(root=REPO)
+    assert "OK" in _run_snippet(code)
